@@ -1,0 +1,43 @@
+"""Model-level benches: smoke train-step throughput + attention kernel
+block sweep (the §Perf loop-slicing lever, timed in interpret mode)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models.schema import init_params
+from repro.optim.optimizers import get_optimizer
+from repro.training.step import make_train_step
+from repro.sharding.partition import NULL_CTX
+
+
+def run(repeats: int = 3):
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    step_fn, opt = make_train_step(cfg, NULL_CTX)
+    opt_state = opt.init(params)
+    data = SyntheticLM(cfg.vocab_size, 128, 8)
+    batch = data.batch_at(0)
+    jit_step = jax.jit(step_fn)
+    t = timeit(lambda: jit_step(params, opt_state, batch)[2]["loss"],
+               repeats=repeats, warmup=1)
+    emit("train_step.smoke.8x128", t, f"{8 * 128 / t:,.0f} tok/s")
+
+    # attention block sweep (paper: loop slicing is the first tuning axis)
+    from repro.kernels.flash_attention.flash_attention import pallas_flash_attention
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 4, 1024, 64), dtype=np.float32))
+    best = (None, np.inf)
+    for bq, bkv in [(128, 128), (256, 256), (512, 512), (256, 512)]:
+        fn = lambda: pallas_flash_attention(q, q, q, causal=True,
+                                            block_q=bq, block_kv=bkv)
+        t = timeit(fn, repeats=repeats, warmup=1)
+        emit(f"flash.b{bq}x{bkv}", t, "")
+        if t < best[1]:
+            best = ((bq, bkv), t)
+    emit("flash.best", best[1], f"blocks={best[0]}")

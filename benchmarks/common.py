@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+ROWS: list[tuple] = []
+
+
+def timeit(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   table1  — bench_filterbank:  RTCG auto-tuned 3D filter-bank conv
+#   table2/3 — bench_copperhead: DSL perf fraction + LOC vs hand-written
+#   table4  — bench_nn:          brute-force nearest neighbor scaling
+#   §5.2    — bench_elementwise: fused RTCG kernels vs eager temporaries
+#   §6.1    — bench_dgfem:       per-order tuned element-local linalg
+#   model   — bench_model:       train-step throughput + attention sweep
+#
+# All numbers are CPU (interpret-mode Pallas / XLA-CPU) wall clock — the
+# TPU-target roofline lives in EXPERIMENTS.md §Roofline, produced by
+# ``python -m repro.launch.dryrun``.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: table1,table2,...")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_copperhead, bench_dgfem, bench_elementwise,
+                            bench_filterbank, bench_model, bench_nn)
+    from benchmarks.common import header
+
+    suites = {
+        "table1": bench_filterbank.run,
+        "table2": bench_copperhead.run,
+        "table4": bench_nn.run,
+        "fusion": bench_elementwise.run,
+        "dgfem": bench_dgfem.run,
+        "model": bench_model.run,
+    }
+    chosen = args.only.split(",") if args.only else list(suites)
+    header()
+    failed = []
+    for name in chosen:
+        try:
+            suites[name](repeats=args.repeats)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

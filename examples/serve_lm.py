@@ -1,0 +1,21 @@
+"""Serve a small model with batched requests through the engine
+(prefill + stepwise decode + prompt-granular continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod  # noqa: E402
+
+
+def main():
+    serve_mod.main(["--arch", "internlm2-1.8b", "--smoke",
+                    "--batch", "4", "--prompt-len", "24",
+                    "--steps", "24", "--requests", "8"])
+
+
+if __name__ == "__main__":
+    main()

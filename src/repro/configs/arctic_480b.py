@@ -1,0 +1,36 @@
+"""arctic-480b — Snowflake Arctic dense-MoE hybrid.
+
+[hf:Snowflake/snowflake-arctic-base]  35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2 plus a dense residual FFN in
+parallel with the MoE path (Arctic's "dense-MoE hybrid" design).
+
+Size note: parameters are ~460B; AdamW's f32 moments would not fit a
+single 256-chip v5e pod, so this config defaults to Adafactor
+(factored second moment) — see DESIGN.md §5 and EXPERIMENTS.md §Dry-run.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    num_experts=128,
+    num_experts_per_tok=2,
+    dense_residual_ffn=True,
+    rope_theta=1e4,
+    optimizer="adafactor",
+    remat="full",
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=96,
+    vocab_size=512, num_experts=4, num_experts_per_tok=2, scan_chunk=8,
+    attn_q_chunk=16, attn_kv_chunk=16,
+)

@@ -1,0 +1,26 @@
+"""deepseek-67b — DeepSeek LLM 67B dense model.
+
+[arXiv:2401.02954]  95L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=102400, llama-arch.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    rope_theta=1e4,
+    remat="full",
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=3, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, scan_chunk=8, attn_q_chunk=16, attn_kv_chunk=16,
+)

@@ -1,0 +1,30 @@
+"""granite-20b — IBM Granite 20B code model.
+
+[arXiv:2405.04324]  52L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152.  RoPE + RMSNorm llama-style per the assignment note, but
+with a GELU 2-matrix MLP: d_ff = 4*d_model and the published 20B total
+parameter count both indicate the gpt-bigcode-style FFN (a SwiGLU at
+this d_ff would be a 28B model).  MQA kv=1 heads replicate across the
+tensor-parallel axis (DESIGN.md §4).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    rope_theta=1e4,
+    mlp_type="gelu",
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=1, d_ff=128,
+    vocab_size=512, scan_chunk=8, attn_q_chunk=16, attn_kv_chunk=16,
+)

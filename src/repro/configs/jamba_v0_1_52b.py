@@ -1,0 +1,39 @@
+"""jamba-v0.1-52b — AI21 Jamba hybrid Mamba+attention MoE.
+
+[arXiv:2403.19887]  32L d_model=4096 32H (GQA kv=8) d_ff=14336,
+vocab=65536, MoE 16e top-2.  Period-8 layer blocks: 1 attention + 7
+Mamba (1:7 ratio, attention at in-block offset 4), MoE every other
+layer.  Runs long_500k (hybrid => sub-quadratic).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    num_experts=16,
+    num_experts_per_tok=2,
+    moe_every=2,
+    moe_offset=1,
+    ssm_type="mamba",
+    attn_every=8,
+    attn_offset=4,
+    ssm_state_dim=16,
+    ssm_conv_dim=4,
+    ssm_expand=2,
+    pos_type="none",      # Jamba uses no explicit positional encoding
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=8, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, num_experts=4, num_experts_per_tok=2, attn_every=4,
+    attn_offset=2, ssm_state_dim=4, scan_chunk=8,
+    attn_q_chunk=16, attn_kv_chunk=16,
+)

@@ -1,0 +1,28 @@
+"""moonshot-v1-16b-a3b — Moonlight 16B-A3B MoE.
+
+[hf:moonshotai/Moonlight-16B-A3B]  48L d_model=2048 16H (GQA kv=16)
+d_ff=1408 (per expert) vocab=163840, MoE 64e top-6.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    num_experts=64,
+    num_experts_per_tok=6,
+    rope_theta=5e4,
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=96,
+    vocab_size=512, num_experts=4, num_experts_per_tok=2, scan_chunk=8,
+    attn_q_chunk=16, attn_kv_chunk=16,
+)

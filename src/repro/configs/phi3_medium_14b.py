@@ -1,0 +1,25 @@
+"""phi3-medium-14b — Microsoft Phi-3 Medium.
+
+[arXiv:2404.14219]  40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352, RoPE + SwiGLU + GQA.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=10,
+    d_ff=17920,
+    vocab_size=100352,
+    rope_theta=1e4,
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, scan_chunk=8, attn_q_chunk=16, attn_kv_chunk=16,
+)

@@ -1,0 +1,35 @@
+"""qwen2-vl-7b — Qwen2-VL 7B vision-language backbone.
+
+[arXiv:2409.12191]  28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064, M-RoPE with sections (16,24,24), dynamic resolution.
+
+Backbone-only per assignment: the ViT frontend is a STUB —
+``input_specs`` provides precomputed patch embeddings (B, vision_tokens,
+d_model) injected at the head of the sequence, plus (3, B, S) M-RoPE
+position ids.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    pos_type="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+    frontend="vision",
+    vision_tokens=256,
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=96, num_heads=4, num_kv_heads=2, d_ff=192,
+    vocab_size=512, mrope_sections=(4, 4, 4), vision_tokens=8,
+    scan_chunk=8, attn_q_chunk=16, attn_kv_chunk=16,
+)

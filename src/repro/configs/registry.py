@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHES = {
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "granite-20b": "repro.configs.granite_20b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+}
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCHES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHES)}")
+    mod = importlib.import_module(ARCHES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def all_archs() -> list[str]:
+    return list(ARCHES)

@@ -1,0 +1,30 @@
+"""rwkv6-7b — RWKV-6 "Finch" 7B, attention-free with data-dependent decay.
+
+[arXiv:2404.05892]  32L d_model=4096 (attn-free) d_ff=14336 vocab=65536.
+Runs long_500k (sub-quadratic recurrence).  The paper's attention-kernel
+RTCG applies to the WKV recurrence instead (DESIGN.md §4).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,           # wkv heads = d_model / rwkv_head_dim
+    num_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    ssm_type="rwkv6",
+    rwkv_head_dim=64,
+    rwkv_decay_rank=64,
+    pos_type="none",
+    mlp_type="rwkv",
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, d_ff=128,
+    vocab_size=512, rwkv_head_dim=32, rwkv_decay_rank=16, scan_chunk=8,
+)

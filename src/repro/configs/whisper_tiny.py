@@ -1,0 +1,38 @@
+"""whisper-tiny — OpenAI Whisper tiny encoder-decoder.
+
+[arXiv:2212.04356]  4L (encoder) + 4L (decoder) d_model=384 6H (kv=6)
+d_ff=1536 vocab=51865, LayerNorm + GELU + learned positions + biases.
+
+The conv audio frontend is a STUB: ``input_specs`` provides precomputed
+frame embeddings (B, 1500, d_model).  Decode shapes exercise the decoder
+with cross-attention over the fixed 1500-frame encoder context.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    encoder_layers=4,
+    encoder_positions=1500,
+    frontend="audio",
+    mlp_type="gelu",
+    norm_type="layernorm",
+    use_bias=True,
+    pos_type="learned",
+    learned_pos_len=36864,   # covers the 32k decode cells (+margin);
+                             # long_500k is skipped for full-attention archs
+    parallelism_profile="tp_sp_fsdp",
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, encoder_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=512, encoder_positions=16, learned_pos_len=4096,
+    scan_chunk=8, attn_q_chunk=16, attn_kv_chunk=16,
+)

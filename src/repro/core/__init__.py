@@ -1,0 +1,26 @@
+# The paper's primary contribution: run-time code generation (RTCG) for
+# TPU kernels — SourceModule + compiler cache + templating + syntax-tree
+# building + elementwise/reduction generators + autotuning + lazy fused
+# arrays + a Copperhead-style DSL.  See DESIGN.md §2 for the GPU->TPU
+# mapping of each piece.
+from repro.core.autotune import Autotuner, BlockCost, TuneReport, measure_wallclock
+from repro.core.cache import DiskCache, environment_fingerprint, stable_hash
+from repro.core.codebuilder import (Assign, Block, Comment, For, FunctionBody,
+                                    FunctionDeclaration, If, Line, Module, Return)
+from repro.core.dsl import cu, op_add, op_max, op_min, op_mul
+from repro.core.elementwise import ElementwiseKernel, ScalarArg, VectorArg
+from repro.core.reduction import ReductionKernel
+from repro.core.rtcg import SourceModule
+from repro.core.scan import ExclusiveScanKernel, InclusiveScanKernel, ScanKernel
+from repro.core.templates import KernelTemplate, render_string
+
+__all__ = [
+    "Autotuner", "BlockCost", "TuneReport", "measure_wallclock",
+    "DiskCache", "environment_fingerprint", "stable_hash",
+    "Assign", "Block", "Comment", "For", "FunctionBody",
+    "FunctionDeclaration", "If", "Line", "Module", "Return",
+    "cu", "op_add", "op_max", "op_min", "op_mul",
+    "ElementwiseKernel", "ScalarArg", "VectorArg",
+    "ReductionKernel", "SourceModule", "KernelTemplate", "render_string",
+    "ExclusiveScanKernel", "InclusiveScanKernel", "ScanKernel",
+]

@@ -1,0 +1,171 @@
+"""Automated tuning (paper §4.1, §6.2, Table 1).
+
+"Retain as many variants as is practical ... choose the best one from a
+reasonable-size pool of candidates in an automated fashion, guided by
+some metric such as execution speed ... at run time, when complete
+information is available."
+
+The tuner takes a candidate list of config dicts and a ``builder``
+returning a callable per config, measures each, and persists the winner
+in the tuning cache keyed by (kernel name, candidate space, abstract
+input signature, environment fingerprint) — so tuning cost is paid once
+per relevant change, exactly like the paper's application-level cache.
+
+Measurement backends (pluggable — see DESIGN.md §8.1):
+  * ``wallclock`` — median-of-repeats timing (the paper's mode; used on
+    real hardware and for CPU-executable generated code).
+  * ``analytic``  — a TPU roofline/VMEM cost model over the config, for
+    TPU-targeted kernels in a CPU-only container where wall-clock would
+    measure the interpreter, not the hardware.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core.cache import DiskCache, stable_hash, tuning_cache
+
+
+def signature_of(args: Sequence[Any]) -> list:
+    sig = []
+    for a in args:
+        shape = getattr(a, "shape", None)
+        dtype = getattr(a, "dtype", None)
+        if shape is not None:
+            sig.append([list(shape), str(dtype)])
+        else:
+            sig.append([type(a).__name__])
+    return sig
+
+
+def measure_wallclock(fn: Callable, args: Sequence[Any], *, repeats: int = 5,
+                      warmup: int = 2) -> float:
+    """Median wall-clock seconds per call, post-warmup, synchronized."""
+
+    def sync(res):
+        jax.block_until_ready(res)
+
+    for _ in range(warmup):
+        sync(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        sync(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+# ----------------------------------------------------------------------
+# Analytic TPU cost model: scores a blocked kernel config without running
+# it.  Inputs are abstract: bytes moved per block, flops per block, grid
+# size, vmem footprint.  Constants are TPU v5e.
+# ----------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB usable VMEM per core (v5e: 128MB)
+GRID_OVERHEAD_S = 1e-6  # per-grid-step dispatch overhead estimate
+MXU_DIM = 128
+SUBLANE = 8
+
+
+@dataclass
+class BlockCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    vmem_bytes: float = 0.0
+    grid: int = 1
+    # matmul tile dims for MXU alignment penalties (0 = not a matmul)
+    tile_dims: tuple = ()
+
+    def seconds(self) -> float:
+        if self.vmem_bytes > VMEM_BYTES:
+            return math.inf  # config does not fit VMEM: reject
+        compute_t = self.flops / PEAK_FLOPS_BF16
+        mem_t = self.hbm_bytes / HBM_BW
+        align = 1.0
+        for d in self.tile_dims:
+            if d % MXU_DIM:  # pay for padding to the systolic array
+                align *= MXU_DIM / (d % MXU_DIM) if d < MXU_DIM else 1.1
+        return max(compute_t, mem_t) * align + self.grid * GRID_OVERHEAD_S
+
+
+@dataclass
+class TuneResult:
+    params: dict
+    score: float
+    ok: bool = True
+    error: str = ""
+
+
+@dataclass
+class TuneReport:
+    name: str
+    best: dict
+    results: list[TuneResult] = field(default_factory=list)
+    cached: bool = False
+
+    def table(self) -> str:
+        rows = [f"{self.name}: best={self.best} cached={self.cached}"]
+        for r in sorted(self.results, key=lambda r: r.score):
+            rows.append(f"  {r.params}  score={r.score:.3e}  {'OK' if r.ok else r.error}")
+        return "\n".join(rows)
+
+
+class Autotuner:
+    def __init__(self, name: str, builder: Callable[..., Callable],
+                 measure: str = "wallclock",
+                 cost_fn: Callable[[dict, Sequence[Any]], BlockCost] | None = None,
+                 cache: DiskCache | None = None,
+                 repeats: int = 5, warmup: int = 2):
+        self.name = name
+        self.builder = builder
+        self.measure = measure
+        self.cost_fn = cost_fn
+        self.cache = cache if cache is not None else tuning_cache
+        self.repeats, self.warmup = repeats, warmup
+        if measure == "analytic" and cost_fn is None:
+            raise ValueError("analytic measurement requires cost_fn")
+
+    def _score(self, params: dict, args: Sequence[Any]) -> float:
+        if self.measure == "analytic":
+            return self.cost_fn(params, args).seconds()
+        fn = self.builder(**params)
+        return measure_wallclock(fn, args, repeats=self.repeats, warmup=self.warmup)
+
+    def tune(self, candidates: Sequence[dict], args: Sequence[Any],
+             key_extra: Any = None, use_cache: bool = True) -> TuneReport:
+        key = self.cache.make_key(self.name, list(candidates), signature_of(args),
+                                  self.measure, key_extra)
+        if use_cache:
+            hit = self.cache.get(key)
+            if hit is not None:
+                return TuneReport(self.name, best=hit["best"],
+                                  results=[TuneResult(**r) for r in hit["results"]],
+                                  cached=True)
+        results: list[TuneResult] = []
+        for params in candidates:
+            try:
+                score = self._score(params, args)
+                results.append(TuneResult(params=params, score=score))
+            except Exception as e:  # a failing variant is data, not an error
+                results.append(TuneResult(params=params, score=math.inf,
+                                          ok=False, error=f"{type(e).__name__}: {e}"[:200]))
+        viable = [r for r in results if r.ok and math.isfinite(r.score)]
+        if not viable:
+            raise RuntimeError(f"autotune({self.name}): no viable candidate\n" +
+                               "\n".join(f"{r.params}: {r.error}" for r in results))
+        best = min(viable, key=lambda r: r.score).params
+        self.cache.put(key, {"best": best,
+                             "results": [r.__dict__ for r in results]})
+        return TuneReport(self.name, best=best, results=results)
+
+    def build_best(self, candidates: Sequence[dict], args: Sequence[Any],
+                   **tune_kwargs) -> tuple[Callable, TuneReport]:
+        report = self.tune(candidates, args, **tune_kwargs)
+        return self.builder(**report.best), report

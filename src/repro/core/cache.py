@@ -1,0 +1,138 @@
+"""Persistent compile/tuning cache — the paper's Fig. 2 "semi-permanent cache".
+
+PyCUDA keys its compiler cache on (source, compiler options, hardware +
+software environment).  We do the same for generated-kernel artifacts and
+autotuning results: the key is SHA256(payload) x an *environment
+fingerprint* covering the JAX/jaxlib versions, backend and device kind.
+A change in any of these invalidates the entry and triggers
+regeneration/retuning, exactly like PyCUDA recompiles when the CUDA
+version changes.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any
+
+
+def _default_cache_dir() -> Path:
+    env = os.environ.get("REPRO_CACHE_DIR")
+    if env:
+        return Path(env)
+    return Path(os.environ.get("XDG_CACHE_HOME", str(Path.home() / ".cache"))) / "repro-rtcg"
+
+
+def environment_fingerprint() -> dict:
+    """Identifying information about hardware + software (paper section 5:
+    'means for the easy gathering of identifying information regarding
+    hardware, software and their corresponding versions')."""
+    import platform
+
+    import jax
+
+    try:
+        dev = jax.devices()[0]
+        device_kind = getattr(dev, "device_kind", "unknown")
+        platform_name = dev.platform
+    except Exception:  # pragma: no cover - no backend at all
+        device_kind, platform_name = "none", "none"
+    return {
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "backend": platform_name,
+        "device_kind": device_kind,
+    }
+
+
+def fingerprint_token() -> str:
+    return stable_hash(environment_fingerprint())[:16]
+
+
+def stable_hash(obj: Any) -> str:
+    """Deterministic content hash of a JSON-able object or string/bytes."""
+    if isinstance(obj, bytes):
+        payload = obj
+    elif isinstance(obj, str):
+        payload = obj.encode()
+    else:
+        payload = json.dumps(obj, sort_keys=True, default=repr).encode()
+    return hashlib.sha256(payload).hexdigest()
+
+
+class DiskCache:
+    """A tiny content-addressed JSON store.
+
+    Thread-safe, crash-safe (atomic renames), namespaced.  Used for
+    (a) rendered kernel source, (b) autotuning winners, (c) roofline
+    artifacts.  Values must be JSON-serializable.
+    """
+
+    def __init__(self, namespace: str, root: Path | None = None):
+        self.root = (root or _default_cache_dir()) / namespace
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+        self._mem: dict[str, Any] = {}
+
+    def _path(self, key: str) -> Path:
+        return self.root / (key + ".json")
+
+    def make_key(self, *parts: Any, env_sensitive: bool = True) -> str:
+        toks = [stable_hash(p) for p in parts]
+        if env_sensitive:
+            toks.append(fingerprint_token())
+        return stable_hash("|".join(toks))[:32]
+
+    def get(self, key: str, default: Any = None) -> Any:
+        with self._lock:
+            if key in self._mem:
+                return self._mem[key]
+        p = self._path(key)
+        if not p.exists():
+            return default
+        try:
+            val = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError):
+            return default
+        with self._lock:
+            self._mem[key] = val
+        return val
+
+    def put(self, key: str, value: Any) -> None:
+        with self._lock:
+            self._mem[key] = value
+        p = self._path(key)
+        fd, tmp = tempfile.mkstemp(dir=str(self.root), suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(value, f)
+            os.replace(tmp, p)
+        except OSError:  # pragma: no cover - disk full etc.; stay in-memory
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            if key in self._mem:
+                return True
+        return self._path(key).exists()
+
+    def clear(self) -> None:
+        with self._lock:
+            self._mem.clear()
+        for p in self.root.glob("*.json"):
+            try:
+                p.unlink()
+            except OSError:
+                pass
+
+
+# Shared default caches.
+source_cache = DiskCache("source")
+tuning_cache = DiskCache("tuning")

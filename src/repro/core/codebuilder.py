@@ -1,0 +1,154 @@
+"""Syntax-tree building for kernel generation (paper §5.3, Fig. 5b).
+
+The paper's third codegen strategy — the CodePy approach: when variants
+stop being textually related, build a syntax tree of the target code in
+the host language and serialize it.  Our target language is Python (the
+Pallas kernel language), so the node set mirrors Python statements
+rather than C declarations, but the shape of the API intentionally
+follows CodePy: ``Module([FunctionBody(FunctionDeclaration(...),
+Block([...]))])``.
+
+Nodes know how to ``generate()`` themselves into source lines; a Module
+can be ``.compile()``d through SourceModule, closing the loop shown in
+the paper's Fig. 5b (`smod = SourceModule(mod)`).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.core.rtcg import SourceModule
+
+INDENT = "    "
+
+
+class Node:
+    def generate(self, level: int = 0) -> list[str]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def __str__(self) -> str:
+        return "\n".join(self.generate())
+
+
+class Line(Node):
+    """A raw statement line."""
+
+    def __init__(self, text: str = ""):
+        self.text = text
+
+    def generate(self, level: int = 0) -> list[str]:
+        return [INDENT * level + self.text if self.text else ""]
+
+
+class Comment(Line):
+    def __init__(self, text: str):
+        super().__init__(f"# {text}")
+
+
+class Assign(Node):
+    def __init__(self, lvalue: str, rvalue: str):
+        self.lvalue, self.rvalue = lvalue, rvalue
+
+    def generate(self, level: int = 0) -> list[str]:
+        return [f"{INDENT * level}{self.lvalue} = {self.rvalue}"]
+
+
+class AugAssign(Node):
+    def __init__(self, lvalue: str, op: str, rvalue: str):
+        self.lvalue, self.op, self.rvalue = lvalue, op, rvalue
+
+    def generate(self, level: int = 0) -> list[str]:
+        return [f"{INDENT * level}{self.lvalue} {self.op}= {self.rvalue}"]
+
+
+class Return(Node):
+    def __init__(self, expr: str):
+        self.expr = expr
+
+    def generate(self, level: int = 0) -> list[str]:
+        return [f"{INDENT * level}return {self.expr}"]
+
+
+class Block(Node):
+    def __init__(self, body: Sequence[Node] = ()):
+        self.body = list(body)
+
+    def append(self, node: Node) -> "Block":
+        self.body.append(node)
+        return self
+
+    def extend(self, nodes: Iterable[Node]) -> "Block":
+        self.body.extend(nodes)
+        return self
+
+    def generate(self, level: int = 0) -> list[str]:
+        if not self.body:
+            return [INDENT * level + "pass"]
+        out: list[str] = []
+        for node in self.body:
+            out.extend(node.generate(level))
+        return out
+
+
+class For(Node):
+    """An *unrolled-able* loop: if ``unroll`` is set the loop is expanded
+    at generation time — the paper's Fig. 5 example is exactly an
+    unrolled vector-add, so unrolling is a first-class node property."""
+
+    def __init__(self, var: str, iterable: str | Sequence, body: Block, unroll: bool = False):
+        self.var, self.iterable, self.body, self.unroll = var, iterable, body, unroll
+
+    def generate(self, level: int = 0) -> list[str]:
+        if self.unroll and not isinstance(self.iterable, str):
+            out: list[str] = []
+            for value in self.iterable:
+                out.append(f"{INDENT * level}{self.var} = {value!r}")
+                out.extend(self.body.generate(level))
+            return out or [INDENT * level + "pass"]
+        it = self.iterable if isinstance(self.iterable, str) else repr(list(self.iterable))
+        return [f"{INDENT * level}for {self.var} in {it}:"] + self.body.generate(level + 1)
+
+
+class If(Node):
+    def __init__(self, cond: str, then: Block, orelse: Block | None = None):
+        self.cond, self.then, self.orelse = cond, then, orelse
+
+    def generate(self, level: int = 0) -> list[str]:
+        out = [f"{INDENT * level}if {self.cond}:"] + self.then.generate(level + 1)
+        if self.orelse is not None:
+            out.append(f"{INDENT * level}else:")
+            out.extend(self.orelse.generate(level + 1))
+        return out
+
+
+class FunctionDeclaration(Node):
+    def __init__(self, name: str, args: Sequence[str], decorators: Sequence[str] = ()):
+        self.name, self.args, self.decorators = name, list(args), list(decorators)
+
+    def generate(self, level: int = 0) -> list[str]:
+        out = [f"{INDENT * level}@{d}" for d in self.decorators]
+        out.append(f"{INDENT * level}def {self.name}({', '.join(self.args)}):")
+        return out
+
+
+class FunctionBody(Node):
+    def __init__(self, decl: FunctionDeclaration, body: Block):
+        self.decl, self.body = decl, body
+
+    def generate(self, level: int = 0) -> list[str]:
+        return self.decl.generate(level) + self.body.generate(level + 1)
+
+
+class Module(Node):
+    def __init__(self, contents: Sequence[Node] = ()):
+        self.contents = list(contents)
+
+    def generate(self, level: int = 0) -> list[str]:
+        out: list[str] = []
+        for node in self.contents:
+            out.extend(node.generate(level))
+            out.append("")
+        return out
+
+    def compile(self, namespace: dict | None = None, name: str | None = None) -> SourceModule:
+        return SourceModule.load(str(self), namespace=namespace, name=name)

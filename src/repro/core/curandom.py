@@ -1,0 +1,35 @@
+"""pycuda.curandom analogue — the paper's Fig. 4 uses
+``from pycuda.curandom import rand as curand``.
+
+Thin device-RNG shim over JAX's counter-based PRNG (itself the TPU
+answer to curand): each call advances a module-level seed fold so
+successive ``rand`` calls give independent streams, like curand's
+global generator.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+_counter = itertools.count()
+_base_seed = 0
+
+
+def seed(s: int) -> None:
+    global _base_seed, _counter
+    _base_seed = int(s)
+    _counter = itertools.count()
+
+
+def rand(shape, dtype=jnp.float32):
+    """Uniform [0, 1) device array (curand semantics)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(_base_seed), next(_counter))
+    return jax.random.uniform(key, tuple(shape), dtype=jnp.dtype(dtype))
+
+
+def randn(shape, dtype=jnp.float32):
+    key = jax.random.fold_in(jax.random.PRNGKey(_base_seed), next(_counter))
+    return jax.random.normal(key, tuple(shape), dtype=jnp.dtype(dtype))

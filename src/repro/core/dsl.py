@@ -1,0 +1,145 @@
+"""A Copperhead-style embedded data-parallel DSL (paper §6.3).
+
+Copperhead: "programmers express computation in terms of composition of
+data parallel primitives, such as map, reduce, gather and scatter", and
+"an embedded source-to-source compiler creates CUDA code ... which is
+then compiled and executed on the GPU", with PyCUDA as the RTCG
+substrate.
+
+Our target language is the JAX/jnp dialect instead of CUDA C.  The
+``@cu`` decorator lifts the Python function's AST, rewrites the
+data-parallel primitives
+
+    map(f, *xs)        -> jax.vmap(f)(*xs)
+    reduce(op, xs, e)  -> jnp.sum/prod/max/min with init folding
+    scan(op, xs)       -> jnp.cumsum / lax.associative_scan
+    gather(x, idx)     -> x[idx]
+    permute(x, idx)    -> zeros_like(x).at[idx].set(x)
+    indices(x)         -> jnp.arange(x.shape[0])
+
+then *emits the transformed module as source text* and runs it through
+``SourceModule`` (content-cached) + ``jax.jit`` — the same
+generate→compile→cache→execute pipeline as Copperhead, with XLA playing
+nvcc's role.  ``fn.source`` exposes the generated code.
+"""
+
+from __future__ import annotations
+
+import ast
+import functools
+import inspect
+import textwrap
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rtcg import SourceModule
+
+# Reduction operators usable as `reduce(op_add, xs, init)`.
+op_add = "op_add"
+op_mul = "op_mul"
+op_max = "op_max"
+op_min = "op_min"
+
+_REDUCERS = {
+    "op_add": ("jnp.sum", "({red}) + ({init})"),
+    "op_mul": ("jnp.prod", "({red}) * ({init})"),
+    "op_max": ("jnp.max", "jnp.maximum({red}, {init})"),
+    "op_min": ("jnp.min", "jnp.minimum({red}, {init})"),
+    "add": ("jnp.sum", "({red}) + ({init})"),
+    "mul": ("jnp.prod", "({red}) * ({init})"),
+}
+_SCANNERS = {"op_add": "jnp.cumsum", "add": "jnp.cumsum"}
+
+_HEADER = "import jax\nimport jax.numpy as jnp\nfrom jax import lax\n\n"
+
+
+class _Lower(ast.NodeTransformer):
+    """AST rewrite of DSL primitives to jnp — the source-to-source compiler."""
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        node.decorator_list = [d for d in node.decorator_list
+                               if not (isinstance(d, ast.Name) and d.id == "cu")
+                               and not (isinstance(d, ast.Attribute) and d.attr == "cu")]
+        self.generic_visit(node)
+        return node
+
+    def _name_of(self, node) -> str | None:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute):
+            return node.attr
+        return None
+
+    def visit_Call(self, node: ast.Call):
+        self.generic_visit(node)
+        fname = self._name_of(node.func)
+        if fname == "map":
+            fn, *args = node.args
+            vmapped = ast.Call(
+                func=ast.Attribute(value=ast.Name(id="jax", ctx=ast.Load()),
+                                   attr="vmap", ctx=ast.Load()),
+                args=[fn], keywords=[])
+            return ast.copy_location(ast.Call(func=vmapped, args=args, keywords=[]), node)
+        if fname == "reduce":
+            op, xs, *rest = node.args
+            opname = self._name_of(op)
+            if opname not in _REDUCERS:
+                raise NotImplementedError(
+                    f"reduce operator {ast.dump(op)} not supported; use op_add/op_mul/op_max/op_min")
+            reducer, init_fold = _REDUCERS[opname]
+            red_src = f"{reducer}({ast.unparse(xs)})"
+            if rest:
+                red_src = init_fold.format(red=red_src, init=ast.unparse(rest[0]))
+            return ast.copy_location(ast.parse(red_src, mode="eval").body, node)
+        if fname == "scan":
+            op, xs = node.args
+            opname = self._name_of(op)
+            if opname in _SCANNERS:
+                src = f"{_SCANNERS[opname]}({ast.unparse(xs)})"
+            else:
+                src = f"lax.associative_scan({ast.unparse(op)}, {ast.unparse(xs)})"
+            return ast.copy_location(ast.parse(src, mode="eval").body, node)
+        if fname == "gather":
+            x, idx = node.args
+            return ast.copy_location(
+                ast.parse(f"({ast.unparse(x)})[{ast.unparse(idx)}]", mode="eval").body, node)
+        if fname == "permute":
+            x, idx = node.args
+            xs, ids = ast.unparse(x), ast.unparse(idx)
+            return ast.copy_location(
+                ast.parse(f"jnp.zeros_like({xs}).at[{ids}].set({xs})", mode="eval").body, node)
+        if fname == "indices":
+            return ast.copy_location(
+                ast.parse(f"jnp.arange(({ast.unparse(node.args[0])}).shape[0])",
+                          mode="eval").body, node)
+        return node
+
+
+class CuFunction:
+    """Compiled DSL function: holds generated source + jitted executable."""
+
+    def __init__(self, fn: Callable):
+        self._pyfn = fn
+        self.__name__ = fn.__name__
+        raw = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(raw)
+        tree = _Lower().visit(tree)
+        ast.fix_missing_locations(tree)
+        self.source = _HEADER + ast.unparse(tree)
+        self._module = SourceModule.load(self.source, name=f"cu_{fn.__name__}")
+        self._compiled = jax.jit(self._module.get_function(fn.__name__))
+
+    def __call__(self, *args, **kwargs):
+        args = [jnp.asarray(a) if hasattr(a, "shape") or isinstance(a, (list, tuple)) else a
+                for a in args]
+        return self._compiled(*args, **kwargs)
+
+    def lower(self, *args, **kwargs):
+        return self._compiled.lower(*args, **kwargs)
+
+
+def cu(fn: Callable) -> CuFunction:
+    """The Copperhead `@cu` decorator (paper Fig. 7)."""
+    return functools.wraps(fn)(CuFunction(fn))

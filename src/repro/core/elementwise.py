@@ -1,0 +1,235 @@
+"""ElementwiseKernel — generated, tiled elementwise Pallas kernels (paper §5.2, Fig. 4).
+
+The user supplies an argument list and a C-like snippet; the toolkit
+supplies *loop slicing* and driver code.  On CUDA, loop slicing meant
+thread/block decomposition; on TPU it means: flatten -> pad -> reshape to
+``(rows, 128)`` lanes -> tile rows into VMEM blocks -> 1-D grid.  The
+lane width 128 matches the VPU register lane count; ``block_rows`` is
+the tunable (the analogue of CUDA block size) exposed to the autotuner.
+
+Faithful API surface (both paper variants):
+
+    lin_comb = ElementwiseKernel(
+        "float a, float *x, float b, float *y, float *z",
+        "z[i] = a*x[i] + b*y[i]")
+
+    lin_comb = ElementwiseKernel(
+        [ScalarArg(x.dtype, "a"), VectorArg(x.dtype, "x"), ...],
+        "z[i] = a*x[i] + b*y[i]")
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import snippets
+from repro.core.templates import KernelTemplate
+
+LANES = 128  # VPU lane count — the innermost slicing axis on TPU.
+DEFAULT_BLOCK_ROWS = 8  # sublane count of a float32 VREG tile.
+
+
+def _canonical(dtype):
+    """Respect jax_enable_x64: float64 -> float32 when x64 is off."""
+    return jnp.dtype(jax.dtypes.canonicalize_dtype(jnp.dtype(dtype)))
+
+
+@dataclass(frozen=True)
+class VectorArg:
+    dtype: Any
+    name: str
+
+    @property
+    def jnp_dtype(self):
+        return _canonical(self.dtype)
+
+
+@dataclass(frozen=True)
+class ScalarArg:
+    dtype: Any
+    name: str
+
+    @property
+    def jnp_dtype(self):
+        return _canonical(self.dtype)
+
+
+def _parse_arguments(arguments) -> list:
+    if isinstance(arguments, str):
+        out = []
+        for name, dtype, is_vec in snippets.parse_c_arguments(arguments):
+            out.append(VectorArg(dtype, name) if is_vec else ScalarArg(dtype, name))
+        return out
+    return list(arguments)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+_KERNEL_TMPL = KernelTemplate(
+    "eltwise",
+    '''
+def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in out_names %}{{ o }}_out_ref{{ ", " if not loop.last }}{% endfor %}):
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}_ref[0, 0]
+{% endfor %}
+{% if needs_i %}
+    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
+    i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
+{% endif %}
+    _BLK = ({{ block_rows }}, {{ lanes }})
+{% for v in loaded_vectors %}
+    {{ v }} = {{ v }}_ref[...]
+{% endfor %}
+{% for line in body_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in out_names %}
+    {{ o }}_out_ref[...] = {{ o }}
+{% endfor %}
+''',
+)
+
+
+class ElementwiseKernel:
+    """Generate + cache a fused elementwise kernel from a C-like snippet."""
+
+    def __init__(self, arguments, operation: str, name: str = "eltwise",
+                 preamble: str = "", block_rows: int | None = None,
+                 interpret: bool | None = None):
+        self.args = _parse_arguments(arguments)
+        self.operation = operation
+        self.name = re.sub(r"\W", "_", name)
+        self.preamble = preamble
+        self.block_rows = block_rows
+        self.interpret = (not on_tpu()) if interpret is None else interpret
+
+        self.scalar_args = [a for a in self.args if isinstance(a, ScalarArg)]
+        self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
+        self.out_names = snippets.written_names(operation)
+        unknown = set(self.out_names) - {v.name for v in self.vector_args}
+        if unknown:
+            raise ValueError(f"snippet writes undeclared vectors: {sorted(unknown)}")
+        if not self.out_names:
+            raise ValueError("elementwise snippet writes no vector (need e.g. 'z[i] = ...')")
+        self._fn_cache: dict[tuple, Any] = {}
+        self._body_lines, self._loaded = self._translate()
+
+    # -- codegen ----------------------------------------------------------
+    def _translate(self) -> tuple[list[str], list[str]]:
+        body: list[str] = []
+        vec_names = {v.name for v in self.vector_args}
+        dtypes = {v.name: str(v.jnp_dtype) for v in self.vector_args}
+        read: set[str] = set()
+        stmts = snippets.split_statements(self.operation)
+        # vectors read anywhere on an RHS (incl. read-modify-write outputs)
+        for s in stmts:
+            tgt, expr = snippets.translate_statement(s)
+            for v in vec_names:
+                if re.search(rf"\b{re.escape(v)}\b", expr):
+                    read.add(v)
+        for s in stmts:
+            tgt, expr = snippets.translate_statement(s)
+            if tgt in vec_names:
+                # keep written vectors in locals so later statements see
+                # the updated value (CUDA in-place buffer semantics);
+                # the template stores them to the out refs at the end.
+                body.append(
+                    f"{tgt} = jnp.broadcast_to(jnp.asarray({expr}), _BLK)"
+                    f".astype(jnp.{dtypes[tgt]})"
+                )
+            elif tgt is not None:
+                body.append(f"{tgt} = {expr}")
+            else:
+                body.append(expr)
+        return body, sorted(read)
+
+    def _needs_i(self) -> bool:
+        probe = snippets._SUBSCRIPT_RE.sub(lambda m: m.group(1), self.operation)
+        return bool(re.search(r"\bi\b", probe))
+
+    def render(self, block_rows: int) -> str:
+        src = _KERNEL_TMPL.render(
+            name=self.name,
+            in_names=[a.name for a in self.args],
+            out_names=self.out_names,
+            scalar_names=[s.name for s in self.scalar_args],
+            loaded_vectors=self._loaded,
+            body_lines=self._body_lines,
+            needs_i=self._needs_i(),
+            block_rows=block_rows,
+            lanes=LANES,
+        )
+        if self.preamble:
+            src = self.preamble + "\n" + src
+        return src
+
+    # -- driver -----------------------------------------------------------
+    def _build(self, n: int, block_rows: int):
+        """Build the padded/tiled pallas_call for a given element count."""
+        from repro.core.rtcg import SourceModule
+
+        rows = -(-n // LANES)
+        rows = -(-rows // block_rows) * block_rows
+        grid = rows // block_rows
+        mod = SourceModule.load(self.render(block_rows), name=self.name)
+        kernel = mod.get_function(f"{self.name}_kernel")
+
+        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+        scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
+        in_specs = [scl if isinstance(a, ScalarArg) else blk for a in self.args]
+        out_dtypes = {v.name: v.jnp_dtype for v in self.vector_args}
+        out_shape = [jax.ShapeDtypeStruct((rows, LANES), out_dtypes[o]) for o in self.out_names]
+
+        call = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[blk] * len(self.out_names),
+            out_shape=out_shape,
+            interpret=self.interpret,
+        )
+
+        def driver(*flat_args):
+            padded = []
+            for a, arg in zip(self.args, flat_args):
+                if isinstance(a, ScalarArg):
+                    padded.append(jnp.full((1, 1), arg, dtype=a.jnp_dtype))
+                else:
+                    v = jnp.ravel(arg)
+                    v = jnp.pad(v, (0, rows * LANES - n)).reshape(rows, LANES)
+                    padded.append(v)
+            outs = call(*padded)
+            return [o.reshape(-1)[:n] for o in outs]
+
+        return jax.jit(driver)
+
+    def __call__(self, *call_args, block_rows: int | None = None):
+        by_name = dict(zip([a.name for a in self.args], call_args))
+        first_vec = by_name[self.vector_args[0].name]
+        n = int(np.prod(first_vec.shape))
+        shape = first_vec.shape
+        br = block_rows or self.block_rows or DEFAULT_BLOCK_ROWS
+        key = (n, br)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            fn = self._build(n, br)
+            self._fn_cache[key] = fn
+        outs = [o.reshape(shape) for o in fn(*call_args)]
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    # candidate block_rows values for the autotuner
+    @staticmethod
+    def candidate_configs(n: int) -> list[dict]:
+        rows = -(-n // LANES)
+        cands = [{"block_rows": b} for b in (8, 16, 32, 64, 128, 256, 512) if b <= max(8, rows)]
+        return cands or [{"block_rows": 8}]

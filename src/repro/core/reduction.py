@@ -1,0 +1,159 @@
+"""ReductionKernel — generated map+reduce Pallas kernels (paper §5.2).
+
+PyCUDA's ReductionKernel takes a ``map_expr`` applied per element and a
+``reduce_expr`` combining pairs, plus a neutral element.  The CUDA
+realization is a two-stage tree reduction over thread blocks; the TPU
+realization exploits that grid iterations on a TensorCore execute
+*sequentially*, so a single kernel can accumulate block partials into an
+SMEM-resident (1,1) output across grid steps — the canonical Pallas
+reduction idiom.  Padding lanes are masked with the neutral element,
+with the element count baked into the generated source (run-time
+specialization, paper §4.2).
+
+    dot = ReductionKernel(np.float32, neutral="0",
+                          reduce_expr="a+b", map_expr="x[i]*y[i]",
+                          arguments="float *x, float *y")
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import snippets
+from repro.core.elementwise import (DEFAULT_BLOCK_ROWS, LANES, ScalarArg,
+                                    VectorArg, _canonical, _parse_arguments,
+                                    on_tpu)
+from repro.core.templates import KernelTemplate
+
+# Recognized whole-block reducers (fast path); anything else raises.
+_BLOCK_REDUCERS = {
+    "a+b": ("jnp.sum", "+"),
+    "b+a": ("jnp.sum", "+"),
+    "a*b": ("jnp.prod", "*"),
+    "max(a,b)": ("jnp.max", "jnp.maximum"),
+    "fmaxf(a,b)": ("jnp.max", "jnp.maximum"),
+    "min(a,b)": ("jnp.min", "jnp.minimum"),
+    "fminf(a,b)": ("jnp.min", "jnp.minimum"),
+}
+
+_KERNEL_TMPL = KernelTemplate(
+    "reduction",
+    '''
+def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}o_ref):
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}_ref[0, 0]
+{% endfor %}
+    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
+    i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
+{% for v in loaded_vectors %}
+    {{ v }} = {{ v }}_ref[...]
+{% endfor %}
+    _mapped = jnp.asarray({{ map_expr }}).astype(jnp.{{ out_dtype }})
+    _mapped = jnp.where(i < {{ n }}, _mapped, jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}))
+    _partial = {{ block_reduce }}(_mapped)
+    _prev = jnp.where(pl.program_id(0) == 0,
+                      jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}),
+                      o_ref[0, 0])
+    o_ref[0, 0] = {{ combine }}
+''',
+)
+
+
+class ReductionKernel:
+    def __init__(self, dtype_out, neutral: str, reduce_expr: str, map_expr: str,
+                 arguments, name: str = "reduce", preamble: str = "",
+                 block_rows: int | None = None, interpret: bool | None = None):
+        self.dtype_out = _canonical(dtype_out)
+        self.neutral = snippets.translate_expression(neutral)
+        self.reduce_expr = reduce_expr
+        self.map_expr = map_expr
+        self.args = _parse_arguments(arguments)
+        self.name = re.sub(r"\W", "_", name)
+        self.preamble = preamble
+        self.block_rows = block_rows
+        self.interpret = (not on_tpu()) if interpret is None else interpret
+
+        key = re.sub(r"\s", "", reduce_expr)
+        if key not in _BLOCK_REDUCERS:
+            raise NotImplementedError(
+                f"reduce_expr {reduce_expr!r} not recognized; supported: {sorted(_BLOCK_REDUCERS)}")
+        self.block_reduce, self._combine_op = _BLOCK_REDUCERS[key]
+        self.scalar_args = [a for a in self.args if isinstance(a, ScalarArg)]
+        self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
+        if not self.vector_args:
+            raise ValueError("reduction needs at least one vector argument")
+        self._fn_cache: dict[tuple, Any] = {}
+
+    def render(self, n: int, block_rows: int) -> str:
+        mapped = snippets.translate_expression(self.map_expr)
+        combine = (f"_prev {self._combine_op} _partial" if self._combine_op in ("+", "*")
+                   else f"{self._combine_op}(_prev, _partial)")
+        read = sorted({v.name for v in self.vector_args
+                       if re.search(rf"\b{re.escape(v.name)}\b", mapped)})
+        src = _KERNEL_TMPL.render(
+            name=self.name,
+            in_names=[a.name for a in self.args],
+            scalar_names=[s.name for s in self.scalar_args],
+            loaded_vectors=read,
+            map_expr=mapped,
+            block_reduce=self.block_reduce,
+            combine=combine,
+            neutral=self.neutral,
+            out_dtype=str(self.dtype_out),
+            n=n,
+            block_rows=block_rows,
+            lanes=LANES,
+        )
+        return (self.preamble + "\n" + src) if self.preamble else src
+
+    def _build(self, n: int, block_rows: int):
+        from repro.core.rtcg import SourceModule
+
+        rows = -(-n // LANES)
+        rows = -(-rows // block_rows) * block_rows
+        grid = rows // block_rows
+        mod = SourceModule.load(self.render(n, block_rows), name=self.name)
+        kernel = mod.get_function(f"{self.name}_kernel")
+
+        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+        scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
+        in_specs = [scl if isinstance(a, ScalarArg) else blk for a in self.args]
+        call = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, 1), self.dtype_out),
+            interpret=self.interpret,
+        )
+
+        def driver(*flat_args):
+            padded = []
+            for a, arg in zip(self.args, flat_args):
+                if isinstance(a, ScalarArg):
+                    padded.append(jnp.full((1, 1), arg, dtype=a.jnp_dtype))
+                else:
+                    v = jnp.ravel(arg)
+                    v = jnp.pad(v, (0, rows * LANES - n)).reshape(rows, LANES)
+                    padded.append(v)
+            return call(*padded)[0, 0]
+
+        return jax.jit(driver)
+
+    def __call__(self, *call_args, block_rows: int | None = None):
+        by_name = dict(zip([a.name for a in self.args], call_args))
+        n = int(np.prod(by_name[self.vector_args[0].name].shape))
+        br = block_rows or self.block_rows or DEFAULT_BLOCK_ROWS
+        key = (n, br)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            fn = self._build(n, br)
+            self._fn_cache[key] = fn
+        return fn(*call_args)

@@ -1,0 +1,167 @@
+"""ScanKernel — generated prefix-scan kernels (PyCUDA's pycuda.scan).
+
+PyCUDA ships Inclusive/ExclusiveScanKernel alongside ElementwiseKernel
+and ReductionKernel; the TPU realization is the classic two-pass blocked
+scan, both passes generated from templates:
+
+  pass 1: per-block inclusive scan (lanes-major layout) + block total
+  host  : tiny exclusive scan over the block totals
+  pass 2: add each block's carry offset
+
+Like ReductionKernel, the combine operator comes from a C-like snippet
+("a+b", "fmaxf(a,b)") and the element count is baked into the generated
+source (run-time specialization).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import snippets
+from repro.core.elementwise import DEFAULT_BLOCK_ROWS, LANES, _canonical, on_tpu
+from repro.core.templates import KernelTemplate
+
+_SCAN_OPS = {
+    "a+b": ("jnp.cumsum", "+", "0"),
+    "b+a": ("jnp.cumsum", "+", "0"),
+    "max(a,b)": ("jax.lax.cummax", "jnp.maximum", "-3e38"),
+    "fmaxf(a,b)": ("jax.lax.cummax", "jnp.maximum", "-3e38"),
+    "min(a,b)": ("jax.lax.cummin", "jnp.minimum", "3e38"),
+    "fminf(a,b)": ("jax.lax.cummin", "jnp.minimum", "3e38"),
+    "a*b": ("jnp.cumprod", "*", "1"),
+}
+
+_PASS1_TMPL = KernelTemplate(
+    "scan1",
+    '''
+def {{ name }}(x_ref, y_ref, tot_ref):
+    # block laid out (rows, lanes) in ROW-MAJOR flat order: scan rows
+    # within each lane column is wrong — so the driver hands us a
+    # (1, block_n) row: a straight 1-axis scan.
+    x = x_ref[...].astype(jnp.{{ dtype }})
+    s = {{ cumop }}(x, axis=1)
+    y_ref[...] = s
+    tot_ref[0, 0] = s[0, -1]
+''',
+)
+
+_PASS2_TMPL = KernelTemplate(
+    "scan2",
+    '''
+def {{ name }}(y_ref, off_ref, o_ref):
+    off = off_ref[0, 0]
+{% if exclusive %}
+    # exclusive: shift right by one within the global stream; the driver
+    # passes the per-block carry already exclusive of this block.
+    y = y_ref[...]
+    prev = jnp.concatenate([jnp.full((1, 1), off, y.dtype),
+                            ({{ binop_expr }})[:, :-1]], axis=1)
+    o_ref[...] = prev
+{% else %}
+    o_ref[...] = {{ combine }}
+{% endif %}
+''',
+)
+
+
+class ScanKernel:
+    """Generated blocked prefix scan.
+
+    >>> cumsum = ScanKernel(np.float32, "a+b", neutral="0")
+    >>> cumsum(x)           # inclusive by default
+    """
+
+    def __init__(self, dtype, scan_expr: str, neutral: str | None = None,
+                 name: str = "scan", exclusive: bool = False,
+                 block_n: int = 4096, interpret: bool | None = None):
+        key = re.sub(r"\s", "", scan_expr)
+        if key not in _SCAN_OPS:
+            raise NotImplementedError(
+                f"scan_expr {scan_expr!r}; supported: {sorted(_SCAN_OPS)}")
+        self.cumop, self.binop, default_neutral = _SCAN_OPS[key]
+        self.neutral = neutral if neutral is not None else default_neutral
+        self.dtype = _canonical(dtype)
+        self.name = re.sub(r"\W", "_", name)
+        self.exclusive = exclusive
+        self.block_n = block_n
+        self.interpret = (not on_tpu()) if interpret is None else interpret
+        self._cache: dict[tuple, Any] = {}
+
+    def _binop_apply(self, a: str, b: str) -> str:
+        if self.binop in ("+", "*"):
+            return f"({a} {self.binop} {b})"
+        return f"{self.binop}({a}, {b})"
+
+    def _build(self, n: int):
+        from repro.core.rtcg import SourceModule
+
+        bn = self.block_n
+        pn = -(-n // bn) * bn
+        grid = pn // bn
+        dt = self.dtype
+
+        src1 = _PASS1_TMPL.render(name=f"{self.name}_p1", dtype=str(dt),
+                                  cumop=self.cumop)
+        k1 = SourceModule.load(src1).get_function(f"{self.name}_p1")
+        src2 = _PASS2_TMPL.render(
+            name=f"{self.name}_p2", exclusive=self.exclusive,
+            binop_expr=self._binop_apply("y", "off"),
+            combine=self._binop_apply("y_ref[...]", "off"))
+        k2 = SourceModule.load(src2).get_function(f"{self.name}_p2")
+
+        row = pl.BlockSpec((1, bn), lambda i: (i, 0))
+        one = pl.BlockSpec((1, 1), lambda i: (i, 0))
+        p1 = pl.pallas_call(
+            k1, grid=(grid,), in_specs=[row], out_specs=[row, one],
+            out_shape=[jax.ShapeDtypeStruct((grid, bn), dt),
+                       jax.ShapeDtypeStruct((grid, 1), dt)],
+            interpret=self.interpret)
+        p2 = pl.pallas_call(
+            k2, grid=(grid,), in_specs=[row, one], out_specs=row,
+            out_shape=jax.ShapeDtypeStruct((grid, bn), dt),
+            interpret=self.interpret)
+
+        neutral = self.neutral
+
+        def driver(x):
+            xf = jnp.ravel(x).astype(dt)
+            xp = jnp.pad(xf, (0, pn - n),
+                         constant_values=np.asarray(neutral, dt)).reshape(grid, bn)
+            partial, totals = p1(xp)
+            # tiny host-side exclusive combine over block totals
+            if self.binop == "+":
+                carry = jnp.cumsum(totals[:, 0]) - totals[:, 0]
+                carry = carry + jnp.asarray(neutral, dt)
+            elif self.binop == "*":
+                carry = jnp.cumprod(totals[:, 0]) / totals[:, 0]
+            else:
+                fn = jax.lax.cummax if "max" in self.binop else jax.lax.cummin
+                shifted = jnp.concatenate(
+                    [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
+                carry = fn(shifted)
+            out = p2(partial, carry[:, None])
+            return out.reshape(-1)[:n]
+
+        return jax.jit(driver)
+
+    def __call__(self, x):
+        n = int(np.prod(x.shape))
+        fn = self._cache.get(n)
+        if fn is None:
+            fn = self._build(n)
+            self._cache[n] = fn
+        return fn(x).reshape(x.shape)
+
+
+def InclusiveScanKernel(dtype, scan_expr, **kw):
+    return ScanKernel(dtype, scan_expr, exclusive=False, **kw)
+
+
+def ExclusiveScanKernel(dtype, scan_expr, neutral, **kw):
+    return ScanKernel(dtype, scan_expr, neutral=neutral, exclusive=True, **kw)

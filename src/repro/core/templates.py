@@ -1,0 +1,63 @@
+"""Textual templating for kernel generation (paper §5.3, Fig. 5a).
+
+The paper's second codegen strategy: when code variants are textually
+related but need control flow (unrolling, conditional sections), use a
+templating engine.  We use Jinja2 — the very engine the paper uses — to
+render *Pallas kernel source*.  Rendered source is content-addressed via
+``SourceModule.load`` so identical renders are compiled once.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jinja2
+
+from repro.core.rtcg import SourceModule
+
+_env = jinja2.Environment(
+    undefined=jinja2.StrictUndefined,
+    trim_blocks=True,
+    lstrip_blocks=True,
+)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _cdiv(a, b) * b
+
+
+_env.globals.update(cdiv=_cdiv, round_up=_round_up, zip=zip, enumerate=enumerate, range=range, len=len)
+
+
+class KernelTemplate:
+    """A named, parameterized kernel template.
+
+    >>> t = KernelTemplate("add", '''
+    ... def {{ name }}(x, y):
+    ...     return x + {{ scale }} * y
+    ... ''')
+    >>> f = t.build(name="addk", scale=2)   # -> callable addk
+    """
+
+    def __init__(self, entrypoint: str, source: str, namespace: dict | None = None):
+        self.entrypoint = entrypoint
+        self.raw = source
+        self.namespace = namespace
+        self._template = _env.from_string(source)
+
+    def render(self, **params: Any) -> str:
+        params.setdefault("name", self.entrypoint)
+        return self._template.render(**params)
+
+    def build(self, _function: str | None = None, **params: Any) -> Callable:
+        src = self.render(**params)
+        mod = SourceModule.load(src, namespace=self.namespace, name=params.get("name", self.entrypoint))
+        return mod.get_function(_function or params.get("name", self.entrypoint))
+
+
+def render_string(source: str, **params: Any) -> str:
+    return _env.from_string(source).render(**params)

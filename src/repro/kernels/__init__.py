@@ -1,0 +1,3 @@
+# RTCG-generated Pallas TPU kernels for the compute hot-spots.
+# Each subpackage: <name>.py (template + pl.pallas_call with explicit
+# BlockSpec VMEM tiling), ops.py (jit'd/tuned wrappers), ref.py (oracle).

@@ -1,0 +1,64 @@
+"""Jitted + autotuned entry points for the filterbank convolution.
+
+`filterbank_conv`       — fixed default config (the paper's laboriously
+                          hand-tuned "default GPU program" column).
+`filterbank_conv_tuned` — RTCG auto-tuned config per (shape, device),
+                          the paper's "RTCG auto-tuned" column.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core.autotune import Autotuner, BlockCost
+from repro.kernels.filterbank_conv.filterbank_conv import (flops,
+                                                           pallas_filterbank_conv)
+
+CANDIDATES = [
+    {"block_h": bh, "unroll_w": u}
+    for bh in (2, 4, 8, 16, 32)
+    for u in (True, False)
+]
+
+DEFAULT = {"block_h": 8, "unroll_w": False}
+
+
+def fbconv_cost(params: dict, args) -> BlockCost:
+    x, filters = args[:2]
+    H, W, C = x.shape
+    F, fh, fw, _ = filters.shape
+    bh = params["block_h"]
+    h_out, w_out = H - fh + 1, W - fw + 1
+    gh = -(-h_out // bh)
+    esize = x.dtype.itemsize
+    total_flops = flops(x.shape, filters.shape)
+    hbm = (H * W * C + F * fh * fw * C) * esize + h_out * w_out * F * esize
+    vmem = (H * W * C + F * fh * fw * C) * esize + bh * w_out * F * 4 * 2
+    # unrolled taps keep the MXU busy; the fori_loop variant pays loop
+    # overhead per tap (modeled as extra grid steps)
+    grid = gh * (1 if params["unroll_w"] else fw)
+    return BlockCost(flops=total_flops, hbm_bytes=hbm, vmem_bytes=vmem,
+                     grid=grid, tile_dims=(bh * w_out, F, C))
+
+
+def _builder(**params):
+    return functools.partial(pallas_filterbank_conv, **params)
+
+
+@functools.lru_cache(maxsize=8)
+def _tuner(measure: str) -> Autotuner:
+    return Autotuner("filterbank_conv", _builder, measure=measure,
+                     cost_fn=fbconv_cost, repeats=3, warmup=1)
+
+
+def filterbank_conv(x, filters, **kw):
+    return pallas_filterbank_conv(x, filters, **DEFAULT, **kw)
+
+
+def filterbank_conv_tuned(x, filters, *, measure: str = "wallclock"):
+    report = _tuner(measure).tune(CANDIDATES, (x, filters))
+    return pallas_filterbank_conv(x, filters, **report.best)
+
+
+def tune_report(x, filters, *, measure: str = "wallclock"):
+    return _tuner(measure).tune(CANDIDATES, (x, filters))

@@ -1,0 +1,19 @@
+"""Oracle for the filterbank convolution via lax.conv_general_dilated."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def filterbank_conv_ref(x, filters):
+    """x: (H, W, C); filters: (F, fh, fw, C) -> (H', W', F), valid
+    cross-correlation (no kernel flip), matching the paper's workload."""
+    out = lax.conv_general_dilated(
+        x[None].astype(jnp.float32),                 # (1, H, W, C)
+        jnp.transpose(filters, (1, 2, 3, 0)).astype(jnp.float32),  # (fh, fw, C, F)
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0].astype(x.dtype)

@@ -1,0 +1,51 @@
+"""Jitted + autotuned entry points for flash attention."""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core.autotune import Autotuner, BlockCost
+from repro.kernels.flash_attention.flash_attention import pallas_flash_attention
+
+CANDIDATES = [
+    {"block_q": bq, "block_kv": bkv}
+    for bq in (128, 256, 512)
+    for bkv in (128, 256, 512)
+]
+
+
+def flash_cost(params: dict, args) -> BlockCost:
+    q, k, v = args[:3]
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    bq, bkv = params["block_q"], params["block_kv"]
+    gq, gk = -(-Sq // bq), -(-Skv // bkv)
+    esize = q.dtype.itemsize
+    flops = 4.0 * B * H * (gq * bq) * (gk * bkv) * D  # qk^T + pv
+    # kv is streamed once per q block (per q-head); q once per kv pass
+    hbm = B * H * (gq * bq) * D * esize + B * H * gq * (gk * bkv) * 2 * D * esize \
+        + B * H * (gq * bq) * D * esize
+    vmem = (bq * D + 2 * bkv * D) * esize * 2 + bq * D * 4 + 2 * bq * 128 * 4
+    return BlockCost(flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
+                     grid=B * H * gq * gk, tile_dims=(bq, bkv, D))
+
+
+@functools.lru_cache(maxsize=8)
+def _tuner() -> Autotuner:
+    def builder(**params):
+        return functools.partial(pallas_flash_attention, **params)
+
+    return Autotuner("flash_attention", builder, measure="analytic", cost_fn=flash_cost)
+
+
+def flash_attention(q, k, v, **kw):
+    return pallas_flash_attention(q, k, v, **kw)
+
+
+def flash_attention_tuned(q, k, v, *, causal: bool = True):
+    report = _tuner().tune(CANDIDATES, (q, k, v), key_extra=causal)
+    return pallas_flash_attention(q, k, v, causal=causal, **report.best)
+
+
+def tune_report(q, k, v, causal: bool = True):
+    return _tuner().tune(CANDIDATES, (q, k, v), key_extra=causal)

@@ -1,0 +1,59 @@
+"""Jitted + autotuned public entry points for the matmul kernel."""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core.autotune import Autotuner, BlockCost
+from repro.kernels.matmul.matmul import pallas_matmul
+
+# Candidate loop slicings; MXU-aligned multiples of 128 plus a few
+# deliberately "wrong" ones so the tuner has something to reject.
+CANDIDATES = [
+    {"block_m": bm, "block_n": bn, "block_k": bk}
+    for bm in (128, 256, 512)
+    for bn in (128, 256, 512)
+    for bk in (128, 256, 512)
+]
+
+
+def matmul_cost(params: dict, args) -> BlockCost:
+    """Analytic TPU cost: compute vs HBM streaming vs VMEM fit."""
+    x, y = args[:2]
+    M, K = x.shape
+    N = y.shape[1]
+    bm, bn, bk = params["block_m"], params["block_n"], params["block_k"]
+    gm, gn, gk = -(-M // bm), -(-N // bn), -(-K // bk)
+    esize = x.dtype.itemsize
+    flops = 2.0 * (gm * bm) * (gn * bn) * (gk * bk)
+    # x tile row is re-streamed for every j; y tile col for every i
+    hbm = (gm * bm) * (gk * bk) * esize * gn + (gk * bk) * (gn * bn) * esize * gm \
+        + (gm * bm) * (gn * bn) * esize
+    vmem = 2 * (bm * bk + bk * bn) * esize + bm * bn * 4  # dbl-buffered ins + f32 acc
+    return BlockCost(flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
+                     grid=gm * gn * gk, tile_dims=(bm, bn, bk))
+
+
+@functools.lru_cache(maxsize=64)
+def _tuner() -> Autotuner:
+    def builder(**params):
+        return functools.partial(pallas_matmul, **params)
+
+    return Autotuner("pallas_matmul", builder, measure="analytic", cost_fn=matmul_cost)
+
+
+def matmul(x, y, bias_arr=None, **kw):
+    """Default-config generated matmul (the paper's 'default GPU program')."""
+    return pallas_matmul(x, y, bias_arr, **kw)
+
+
+def matmul_tuned(x, y, bias_arr=None, activation=None, out_dtype=None):
+    """Autotuned matmul: picks the loop slicing via the analytic TPU cost
+    model (wall-clock on real hardware), cached per shape signature."""
+    report = _tuner().tune(CANDIDATES, (x, y))
+    return pallas_matmul(x, y, bias_arr, activation=activation,
+                         out_dtype=out_dtype, **report.best)
+
+
+def tune_report(x, y):
+    return _tuner().tune(CANDIDATES, (x, y))

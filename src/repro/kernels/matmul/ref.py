@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the generated matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, bias_arr=None, activation: str | None = None, out_dtype=None):
+    out = jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias_arr is not None:
+        out = out + bias_arr.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation == "silu":
+        out = out * jax.nn.sigmoid(out)
+    elif activation:
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(out_dtype or x.dtype)

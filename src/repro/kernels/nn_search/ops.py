@@ -1,0 +1,49 @@
+"""Jitted + autotuned entry points for NN search (paper Table 4)."""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core.autotune import Autotuner, BlockCost
+from repro.kernels.nn_search.nn_search import pallas_nn_search
+
+CANDIDATES = [
+    {"block_t": bt, "block_n": bn}
+    for bt in (128, 256)
+    for bn in (256, 512, 1024, 2048)
+]
+
+
+def nn_cost(params: dict, args) -> BlockCost:
+    t, n = args[:2]
+    T, D = t.shape
+    N = n.shape[0]
+    bt, bn = params["block_t"], params["block_n"]
+    esize = 4
+    flops = 2.0 * T * N * D
+    hbm = T * D * esize + (T / bt) * N * D * esize + T * 2 * esize
+    vmem = (bt * D + bn * D) * esize * 2 + bt * bn * 4 + 4 * bt * 128 * 4
+    return BlockCost(flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
+                     grid=max(1, (T // bt) * (N // bn)), tile_dims=(bt, bn, D))
+
+
+@functools.lru_cache(maxsize=8)
+def _tuner(measure: str) -> Autotuner:
+    def builder(**params):
+        return functools.partial(pallas_nn_search, **params)
+
+    return Autotuner("nn_search", builder, measure=measure, cost_fn=nn_cost,
+                     repeats=3, warmup=1)
+
+
+def nn_search(targets, neighbors, **kw):
+    return pallas_nn_search(targets, neighbors, **kw)
+
+
+def nn_search_tuned(targets, neighbors, *, measure: str = "wallclock"):
+    report = _tuner(measure).tune(CANDIDATES, (targets, neighbors))
+    return pallas_nn_search(targets, neighbors, **report.best)
+
+
+def tune_report(targets, neighbors, *, measure: str = "wallclock"):
+    return _tuner(measure).tune(CANDIDATES, (targets, neighbors))

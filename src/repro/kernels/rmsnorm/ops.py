@@ -1,0 +1,14 @@
+"""Jitted entry point for fused RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import pallas_rmsnorm
+
+
+def rmsnorm(x, w, residual=None, *, eps: float = 1e-6, block_rows: int = 128):
+    return pallas_rmsnorm(x, w, residual, eps=eps, block_rows=block_rows)
+
+
+rmsnorm_jit = jax.jit(rmsnorm, static_argnames=("eps", "block_rows"))

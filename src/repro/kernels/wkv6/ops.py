@@ -1,0 +1,60 @@
+"""Jitted + tuned entry points for the WKV-6 kernel.
+
+`wkv6` is differentiable via custom_vjp: the forward runs the Pallas
+kernel (state in VMEM); the backward currently recomputes through the
+jnp reference recurrence (flash-style recompute — no forward residuals
+stored beyond the inputs).  A dedicated reverse-scan backward kernel is
+the natural next step on hardware (noted in EXPERIMENTS.md §Perf)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.autotune import Autotuner, BlockCost
+from repro.kernels.wkv6.ref import wkv6_ref
+from repro.kernels.wkv6.wkv6 import pallas_wkv6
+
+CANDIDATES = [{"chunk": c} for c in (8, 16, 32, 64)]
+
+
+def wkv_cost(params: dict, args) -> BlockCost:
+    r = args[0]
+    B, T, H, dh = r.shape
+    chunk = params["chunk"]
+    flops = 4.0 * B * T * H * dh * dh
+    hbm = 4 * B * T * H * dh * 4 + B * T * H * dh * 4   # r/k/v/w in + y out
+    vmem = dh * dh * 4 + 5 * chunk * dh * 4 * 2
+    return BlockCost(flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
+                     grid=B * H * (-(-T // chunk)), tile_dims=(dh, dh))
+
+
+@functools.lru_cache(maxsize=4)
+def _tuner(measure: str) -> Autotuner:
+    def builder(**params):
+        return functools.partial(pallas_wkv6, **params)
+    return Autotuner("wkv6", builder, measure=measure, cost_fn=wkv_cost,
+                     repeats=3, warmup=1)
+
+
+@jax.custom_vjp
+def wkv6(r, k, v, w, u):
+    return pallas_wkv6(r, k, v, w, u)
+
+
+def _wkv6_fwd(r, k, v, w, u):
+    return pallas_wkv6(r, k, v, w, u), (r, k, v, w, u)
+
+
+def _wkv6_bwd(res, g):
+    _, vjp = jax.vjp(wkv6_ref, *res)
+    return vjp(g)
+
+
+wkv6.defvjp(_wkv6_fwd, _wkv6_bwd)
+
+
+def wkv6_tuned(r, k, v, w, u, *, measure: str = "wallclock"):
+    rep = _tuner(measure).tune(CANDIDATES, (r, k, v, w, u))
+    return pallas_wkv6(r, k, v, w, u, **rep.best)

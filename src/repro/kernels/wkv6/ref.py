@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the WKV-6 recurrence (time scan)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, w, u):
+    """r/k/v/w: (B, T, H, dh); u: (H, dh) -> y (B, T, H, dh) f32."""
+    B, T, H, dh = r.shape
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B, H, dh, dh)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + uf[None, :, :, None] * kv)
+        return w_t[..., :, None] * S + kv, y
+
+    init = jnp.zeros((B, H, dh, dh), jnp.float32)
+    _, ys = lax.scan(step, init, tuple(jnp.moveaxis(x, 1, 0)
+                                       for x in (rf, kf, vf, wf)))
+    return jnp.moveaxis(ys, 0, 1)

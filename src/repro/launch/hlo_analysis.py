@@ -1,0 +1,271 @@
+"""Loop-aware roofline accounting over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+undercounts a scanned transformer by ~num_layers x.  This module parses
+``compiled.as_text()`` into a computation call graph, multiplies each
+computation by its execution count (while trip counts from
+``known_trip_count`` backend configs), and accumulates:
+
+  * matmul FLOPs from `dot` ops (2 * prod(result) * prod(contraction))
+  * HBM byte traffic from fusion/op boundary shapes
+  * per-kind collective bytes with algorithmic-bandwidth factors
+    (all-reduce 2x, all-gather/reduce-scatter/all-to-all/permute 1x)
+
+Shapes in post-SPMD HLO are already per-device, so every number below is
+per-device per-step.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+) \(.*\) -> .+ \{")
+_OP_RE = re.compile(r"^\s+(?:ROOT )?%?([\w.\-]+) = (.+?) ([\w\-]+)\((.*)$")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# effective bytes-on-the-wire multiplier per collective kind
+COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0,
+               "all-reduce-start": 2.0, "all-gather-start": 1.0,
+               "collective-permute-start": 1.0}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+
+def shape_bytes(type_str: str) -> float:
+    """Total bytes of every array shape mentioned in an HLO type string
+    (handles tuples)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    rest: str           # everything after the '(' — operands + attributes
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    params: dict = field(default_factory=dict)  # param name -> type str
+
+
+def parse_computations(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            # parameters: name: type pairs inside the header parens
+            for pname, ptype in re.findall(r"([\w.\-]+): ([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)",
+                                           line):
+                cur.params[pname] = ptype
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, rtype, opcode, rest = om.groups()
+            operands = re.findall(r"%([\w.\-]+)", rest.split("),")[0] if ")," in rest
+                                  else rest.split(")")[0])
+            cur.ops.append(Op(name, opcode, rtype, rest, operands))
+    return comps
+
+
+def _multiplicities(comps: dict[str, Computation], entry: str) -> dict[str, float]:
+    """Execution count per computation, propagating while trip counts."""
+    mult: dict[str, float] = defaultdict(float)
+
+    def visit(cname: str, m: float):
+        mult[cname] += m
+        comp = comps.get(cname)
+        if comp is None:
+            return
+        for op in comp.ops:
+            child_mult = m
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trips = int(tm.group(1)) if tm else 1
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cnd = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                if bm:
+                    visit(bm.group(1), m * trips)
+                if cnd:
+                    visit(cnd.group(1), m * (trips + 1))
+                continue
+            if op.opcode in ("fusion", "call", "reduce", "reduce-window", "scatter",
+                             "sort", "map", "select-and-scatter", "all-reduce",
+                             "reduce-scatter", "custom-call"):
+                for cm in _CALLED_RE.finditer(op.rest):
+                    visit(cm.group(1), child_mult)
+            if op.opcode == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    for b in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        visit(b, child_mult)
+        return
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _find_entry(hlo_text: str, comps: dict[str, Computation]) -> str:
+    m = re.search(r"^ENTRY %?([\w.\-]+)", hlo_text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    result = 1.0
+    sm = _SHAPE_RE.search(op.result_type)
+    if sm and sm.group(2):
+        for d in sm.group(2).split(","):
+            result *= int(d)
+    # lhs operand shape from the computation symbol table
+    lhs_shape = None
+    if op.operands:
+        lhs = op.operands[0]
+        for o2 in comp.ops:
+            if o2.name == lhs:
+                s2 = _SHAPE_RE.search(o2.result_type)
+                if s2:
+                    lhs_shape = [int(d) for d in s2.group(2).split(",")] if s2.group(2) else []
+                break
+        else:
+            ptype = comp.params.get(lhs)
+            if ptype:
+                s2 = _SHAPE_RE.search(ptype)
+                if s2:
+                    lhs_shape = [int(d) for d in s2.group(2).split(",")] if s2.group(2) else []
+    contract = 1.0
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if cm and lhs_shape is not None and cm.group(1):
+        for d in cm.group(1).split(","):
+            contract *= lhs_shape[int(d)]
+    return 2.0 * result * contract
+
+
+def _conv_flops(op: Op) -> float:
+    # rough: 2 * prod(result) * kernel_spatial * in_channels — parse window
+    result = shape_bytes(op.result_type)  # placeholder scale; convs are rare here
+    return 0.0
+
+
+@dataclass
+class HloReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=dict)
+    collective_bytes_raw: dict = field(default_factory=dict)
+    collective_wire_bytes: float = 0.0
+    op_counts: dict = field(default_factory=dict)
+    bytes_by_shape: dict = field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective_bytes_raw": self.collective_bytes_raw,
+                "collective_wire_bytes": self.collective_wire_bytes,
+                "op_counts": self.op_counts,
+                "bytes_by_shape": self.bytes_by_shape}
+
+
+def analyze(hlo_text: str) -> HloReport:
+    comps = parse_computations(hlo_text)
+    entry = _find_entry(hlo_text, comps)
+    mult = _multiplicities(comps, entry)
+    rep = HloReport(collective_bytes=defaultdict(float), op_counts=defaultdict(float))
+
+    fused_children = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for cm in _CALLED_RE.finditer(op.rest):
+                    fused_children.add(cm.group(1))
+
+    for cname, m in mult.items():
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        inside_fusion = cname in fused_children
+        symbols = dict(comp.params)
+        for op in comp.ops:
+            symbols[op.name] = op.result_type
+        for op in comp.ops:
+            kind = op.opcode
+            rep.op_counts[kind] += m
+            if kind == "dot":
+                rep.flops += m * _dot_flops(comp, op)
+            base = kind.replace("-start", "")
+            if base in COLLECTIVES:
+                b = shape_bytes(op.result_type)
+                # CPU float-normalization promotes bf16 math (and the
+                # collectives in its dataflow) to f32; on the TPU target
+                # these collectives run in bf16.  Count f32 collective
+                # payloads at bf16 width; raw bytes kept alongside.
+                corr = 0.5 if re.search(r"\bf32\[", op.result_type) else 1.0
+                rep.collective_bytes[base] += m * b * corr
+                rep.collective_bytes_raw[base] = \
+                    rep.collective_bytes_raw.get(base, 0.0) + m * b
+                rep.collective_wire_bytes += m * b * corr * COLL_FACTOR.get(kind, 1.0)
+            if not inside_fusion and kind not in _SKIP_BYTES_OPS \
+                    and not kind.endswith("-done"):
+                rbytes = shape_bytes(op.result_type)
+                # in-place update heuristic: a fusion/DUS whose operand has
+                # the result's exact type updates that buffer in place —
+                # actual traffic is the *other* operands (the slice), not
+                # the whole carried buffer (XLA aliases it).
+                if kind in ("fusion", "dynamic-update-slice"):
+                    op_types = [symbols.get(o) for o in op.operands]
+                    rtype_core = op.result_type.split("{")[0].strip()
+                    if any(t and t.split("{")[0].strip() == rtype_core
+                           for t in op_types):
+                        others = sum(shape_bytes(t) for t in op_types
+                                     if t and t.split("{")[0].strip() != rtype_core)
+                        rbytes = min(rbytes, 2.0 * others)
+                rep.hbm_bytes += m * rbytes
+                skey = re.sub(r"\{[^}]*\}", "", op.result_type).strip()
+                rep.bytes_by_shape[skey] = rep.bytes_by_shape.get(skey, 0.0) + m * rbytes
+    rep.bytes_by_shape = dict(sorted(rep.bytes_by_shape.items(),
+                                     key=lambda kv: -kv[1])[:25])
+    rep.collective_bytes = dict(rep.collective_bytes)
+    rep.op_counts = {k: v for k, v in sorted(rep.op_counts.items(),
+                                             key=lambda kv: -kv[1])[:40]}
+    return rep

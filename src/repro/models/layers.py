@@ -1,0 +1,123 @@
+"""Shared model layers: norms, RoPE/M-RoPE, MLPs, checkpointed chunked scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+
+def norm(cfg: ModelConfig, p: dict, name: str, x, *, use_pallas: bool = False):
+    w = p[name]
+    if cfg.norm_type == "layernorm":
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
+        return (y * w + p[name + "_b"]).astype(x.dtype)
+    if use_pallas:
+        from repro.kernels.rmsnorm.ops import rmsnorm as pallas_rms
+        return pallas_rms(x, w.astype(x.dtype), eps=cfg.norm_eps)
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(ms + cfg.norm_eps) * w).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(dh: int, theta: float):
+    return theta ** (-jnp.arange(0, dh // 2, dtype=jnp.float32) / (dh // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                        # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple):
+    """Qwen2-VL M-RoPE. x: (B, S, H, dh); positions3: (3, B, S) —
+    temporal/height/width position streams; `sections` gives the half-dim
+    split among them (sum(sections) == dh // 2)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(dh, theta)                        # (half,)
+    # pick the position stream per frequency section (static table)
+    import numpy as np
+    sec_id = jnp.asarray(np.repeat(np.arange(3), np.asarray(sections)), jnp.int32)
+    pos = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # (B, S, 3)
+    pos = jnp.take(pos, sec_id, axis=-1)               # (B, S, half)
+    ang = pos * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_encode(cfg: ModelConfig, x, positions):
+    """q/k rotary application dispatch. positions: (B,S) or (3,B,S)."""
+    if cfg.pos_type == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.pos_type == "mrope":
+        if positions.ndim == 2:  # text-only fallback: all streams equal
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x
+
+
+# ---------------------------------------------------------------- MLPs
+def dense_mlp(cfg: ModelConfig, p: dict, x, ctx):
+    if cfg.mlp_type == "swiglu":
+        h = jnp.einsum("bsd,df->bsf", x, p["w1"])
+        g = jnp.einsum("bsd,df->bsf", x, p["w3"])
+        h = jax.nn.silu(h) * g
+        h = ctx.constrain(h, "batch", None, "mlp")
+        return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.use_bias:
+        h = h + p["bi"].astype(h.dtype)
+    h = jax.nn.gelu(h)
+    h = ctx.constrain(h, "batch", None, "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo_mlp"])
+    if cfg.use_bias:
+        out = out + p["bo_mlp"].astype(out.dtype)
+    return out
+
+
+# ------------------------------------------------- chunked, checkpointed scan
+def chunked_scan(step_fn, init_carry, xs, chunk: int, checkpoint: bool = True):
+    """lax.scan over the leading (time) axis of `xs`, processed in chunks
+    of `chunk` steps.  Each chunk body is optionally jax.checkpoint'ed so
+    the backward pass stores only chunk-boundary carries (O(T/chunk)
+    memory instead of O(T)) — required to train SSM/RWKV recurrences at
+    4k-500k sequence lengths."""
+    T = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, T)
+    main = (T // chunk) * chunk
+    nchunks = main // chunk
+
+    def chunk_body(carry, xc):
+        return lax.scan(step_fn, carry, xc)
+
+    if checkpoint:
+        chunk_body = jax.checkpoint(chunk_body)
+
+    xs_main = jax.tree.map(
+        lambda a: a[:main].reshape((nchunks, chunk) + a.shape[1:]), xs)
+    carry, ys_c = lax.scan(chunk_body, init_carry, xs_main)
+    ys = jax.tree.map(lambda a: a.reshape((main,) + a.shape[2:]), ys_c)
+    if main != T:  # remainder tail, scanned unchunked
+        carry, ys_tail = lax.scan(step_fn, carry, jax.tree.map(lambda a: a[main:], xs))
+        ys = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), ys, ys_tail)
+    return carry, ys

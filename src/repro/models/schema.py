@@ -1,0 +1,271 @@
+"""Parameter schema: single source of truth for shapes, logical sharding
+axes and initialization of every model family.
+
+The decoder is described as a repeating *period* of layer "slots"
+(uniform archs: period 1; jamba: period 8 = 1 attention + 7 mamba with
+MoE on odd slots).  Per-slot parameters are stacked along a leading
+``num_periods`` axis and consumed by ``lax.scan`` — one compiled layer
+body regardless of depth.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import spec_for
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple                 # logical axis names (same length as shape)
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = ""             # "" -> cfg.dtype
+
+    def with_prefix(self, n: int, axis_name: str = "layers") -> "ParamDef":
+        return ParamDef((n,) + self.shape, (axis_name,) + self.axes,
+                        self.init, self.scale, self.dtype)
+
+
+def _attn_defs(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, H, Hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    p = "x" if cross else ""
+    out = {
+        f"{p}wq": ParamDef((d, H * dh), ("embed", "heads")),
+        f"{p}wk": ParamDef((d, Hk * dh), ("embed", "kv_heads")),
+        f"{p}wv": ParamDef((d, Hk * dh), ("embed", "kv_heads")),
+        f"{p}wo": ParamDef((H * dh, d), ("heads", "embed")),
+    }
+    if cfg.use_bias:
+        out.update({
+            f"{p}bq": ParamDef((H * dh,), ("heads",), "zeros"),
+            f"{p}bk": ParamDef((Hk * dh,), ("kv_heads",), "zeros"),
+            f"{p}bv": ParamDef((Hk * dh,), ("kv_heads",), "zeros"),
+            f"{p}bo": ParamDef((d,), ("embed",), "zeros"),
+        })
+    return out
+
+
+def _norm_defs(cfg: ModelConfig, name: str) -> dict:
+    out = {name: ParamDef((cfg.d_model,), ("embed",), "ones", dtype="float32")}
+    if cfg.norm_type == "layernorm":
+        out[name + "_b"] = ParamDef((cfg.d_model,), ("embed",), "zeros", dtype="float32")
+    return out
+
+
+def _dense_mlp_defs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type == "rwkv":       # RWKV channel mix (token-shifted FFN)
+        return {
+            "wk_c": ParamDef((d, f), ("embed", "mlp")),
+            "wv_c": ParamDef((f, d), ("mlp", "embed")),
+            "wr_c": ParamDef((d, d), ("embed", None)),
+        }
+    if cfg.mlp_type == "swiglu":
+        out = {
+            "w1": ParamDef((d, f), ("embed", "mlp")),
+            "w3": ParamDef((d, f), ("embed", "mlp")),
+            "w2": ParamDef((f, d), ("mlp", "embed")),
+        }
+    else:
+        out = {
+            "wi": ParamDef((d, f), ("embed", "mlp")),
+            "wo_mlp": ParamDef((f, d), ("mlp", "embed")),
+        }
+        if cfg.use_bias:
+            out["bi"] = ParamDef((f,), ("mlp",), "zeros")
+            out["bo_mlp"] = ParamDef((d,), ("embed",), "zeros")
+    return out
+
+
+def _moe_defs(cfg: ModelConfig) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    out = {
+        "router": ParamDef((d, E), (None, None), dtype="float32"),
+        "we1": ParamDef((E, d, f), ("experts", "embed", None)),
+        "we3": ParamDef((E, d, f), ("experts", "embed", None)),
+        "we2": ParamDef((E, f, d), ("experts", None, "embed")),
+    }
+    if cfg.dense_residual_ffn:
+        out.update(_dense_mlp_defs(cfg))
+    return out
+
+
+def _rwkv6_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    r = cfg.rwkv_decay_rank
+    return {
+        "mu": ParamDef((7, d), (None, "embed")),   # shift mixes: r,k,v,g,w,ffn_k,ffn_r
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk_t": ParamDef((d, d), ("embed", "heads")),
+        "wv_t": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        "wo_t": ParamDef((d, d), ("heads", "embed")),
+        "w0": ParamDef((d,), ("heads",), "zeros", dtype="float32"),
+        "w1_dec": ParamDef((d, r), ("embed", None)),
+        "w2_dec": ParamDef((r, d), (None, "heads")),
+        "u_bonus": ParamDef((H, cfg.rwkv_head_dim), ("heads", None), dtype="float32"),
+        "ln_x": ParamDef((d,), ("embed",), "ones", dtype="float32"),
+    }
+
+
+def _mamba_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state_dim
+    dtr = cfg.ssm_dt_rank or -(-d // 16)
+    return {
+        # separate x/z projections: packing them would interleave two
+        # logical tensors across the model-sharded output dim
+        "in_proj_x": ParamDef((d, din), ("embed", "mlp")),
+        "in_proj_z": ParamDef((d, din), ("embed", "mlp")),
+        "conv_w": ParamDef((cfg.ssm_conv_dim, din), (None, "mlp")),
+        "conv_b": ParamDef((din,), ("mlp",), "zeros"),
+        "x_proj": ParamDef((din, dtr + 2 * N), ("mlp", None)),
+        "dt_proj": ParamDef((dtr, din), (None, "mlp")),
+        "dt_bias": ParamDef((din,), ("mlp",), "ones", dtype="float32"),
+        "A_log": ParamDef((din, N), ("mlp", None), "ones", dtype="float32"),
+        "D_skip": ParamDef((din,), ("mlp",), "ones", dtype="float32"),
+        "out_proj": ParamDef((din, d), ("mlp", "embed")),
+    }
+
+
+def decoder_period(cfg: ModelConfig) -> int:
+    period = 1
+    if cfg.ssm_type and cfg.attn_every:
+        period = np.lcm(period, cfg.attn_every)
+    if cfg.is_moe and cfg.moe_every > 1:
+        period = np.lcm(period, cfg.moe_every)
+    return int(period)
+
+
+def slot_plan(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """[(mixer, mlp)] for each slot in one period."""
+    return [(cfg.mixer_for_layer(s), cfg.mlp_for_layer(s))
+            for s in range(decoder_period(cfg))]
+
+
+def _slot_defs(cfg: ModelConfig, mixer: str, mlp: str, cross: bool) -> dict:
+    out: dict = {}
+    out.update(_norm_defs(cfg, "norm1"))
+    if mixer == "attn":
+        out.update(_attn_defs(cfg))
+    elif mixer == "rwkv6":
+        out.update(_rwkv6_defs(cfg))
+    elif mixer == "mamba":
+        out.update(_mamba_defs(cfg))
+    else:
+        raise ValueError(mixer)
+    if cross:
+        out.update(_norm_defs(cfg, "normx"))
+        out.update(_attn_defs(cfg, cross=True))
+    out.update(_norm_defs(cfg, "norm2"))
+    out.update(_moe_defs(cfg) if mlp == "moe" else _dense_mlp_defs(cfg))
+    return out
+
+
+def build_schema(cfg: ModelConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    schema: dict = {"embedding": ParamDef((V, d), ("vocab", "embed"))}
+    if cfg.pos_type == "learned":
+        schema["pos_embedding"] = ParamDef((cfg.learned_pos_len, d), (None, "embed"))
+
+    period = decoder_period(cfg)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    num_periods = cfg.num_layers // period
+    dec: dict = {}
+    for s, (mixer, mlp) in enumerate(slot_plan(cfg)):
+        slot = _slot_defs(cfg, mixer, mlp, cross=cfg.is_encdec)
+        dec[f"slot_{s}"] = {k: v.with_prefix(num_periods) for k, v in slot.items()}
+    schema["decoder"] = dec
+    schema.update(_norm_defs(cfg, "final_norm"))
+
+    if cfg.is_encdec:
+        enc_slot = _slot_defs(cfg.replace(ssm_type="", num_experts=0), "attn", "dense", False)
+        schema["encoder"] = {
+            "slot_0": {k: v.with_prefix(cfg.encoder_layers) for k, v in enc_slot.items()}}
+        schema.update({("enc_" + k): v for k, v in _norm_defs(cfg, "final_norm").items()})
+        schema["enc_pos_embedding"] = ParamDef((cfg.encoder_positions, d), (None, "embed"))
+
+    if not cfg.tie_embeddings:
+        schema["lm_head"] = ParamDef((V, d), ("vocab", "embed"))
+    return schema
+
+
+# ----------------------------------------------------------------------
+def _leaf_paths(tree: dict, prefix=()) -> list[tuple[tuple, ParamDef]]:
+    out = []
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            out.extend(_leaf_paths(v, prefix + (k,)))
+        else:
+            out.append((prefix + (k,), v))
+    return out
+
+
+def _set_path(tree: dict, path: tuple, value) -> None:
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = value
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    schema = build_schema(cfg)
+    leaves = _leaf_paths(schema)
+    keys = jax.random.split(key, len(leaves))
+    params: dict = {}
+    for (path, pd), k in zip(leaves, keys):
+        dtype = jnp.dtype(pd.dtype or cfg.dtype)
+        if pd.init == "zeros":
+            val = jnp.zeros(pd.shape, dtype)
+        elif pd.init == "ones":
+            val = jnp.ones(pd.shape, dtype)
+        else:
+            val = (jax.random.normal(k, pd.shape, jnp.float32) * pd.scale).astype(dtype)
+        # mamba A_log: init to log(arange) for stable decay spectrum
+        if path[-1] == "A_log":
+            N = pd.shape[-1]
+            val = jnp.broadcast_to(jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)),
+                                   pd.shape).astype(dtype)
+        _set_path(params, path, val)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    schema = build_schema(cfg)
+    params: dict = {}
+    for path, pd in _leaf_paths(schema):
+        dtype = jnp.dtype(pd.dtype or cfg.dtype)
+        _set_path(params, path, jax.ShapeDtypeStruct(pd.shape, dtype))
+    return params
+
+
+def param_specs(cfg: ModelConfig, mesh) -> dict:
+    """PartitionSpec pytree matching the params tree."""
+    from repro.sharding.partition import PROFILES
+    rules = PROFILES[cfg.parallelism_profile]
+    schema = build_schema(cfg)
+    out: dict = {}
+    for path, pd in _leaf_paths(schema):
+        _set_path(out, path, spec_for(pd.axes, pd.shape, mesh, rules))
+    return out
+
+
+def param_logical_axes(cfg: ModelConfig) -> dict:
+    schema = build_schema(cfg)
+    out: dict = {}
+    for path, pd in _leaf_paths(schema):
+        _set_path(out, path, pd.axes)
+    return out
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))

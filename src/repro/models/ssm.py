@@ -1,0 +1,189 @@
+"""Attention-free mixers: RWKV-6 (Finch) WKV recurrence and Mamba SSM.
+
+Both are trained with the checkpointed chunked time-scan
+(`layers.chunked_scan`) so backward memory is O(T/chunk) states, and
+both expose a single-token decode step against a recurrent state cache —
+this is what makes `long_500k` runnable where full attention is not.
+
+Faithfulness notes (DESIGN.md §8): RWKV-6's data-dependent *decay* is
+implemented (w_t = exp(-exp(w0 + tanh(x W1) W2))); the data-dependent
+token-shift LoRA is simplified to learned static interpolation (RWKV-5
+style).  Mamba follows the S6 selective-scan recurrence with
+ZOH discretization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import chunked_scan
+
+
+# ============================================================== RWKV-6
+def _rwkv_shift(x, last=None):
+    """Token shift: x_{t-1} along S; `last` (B, d) seeds t=0 (decode)."""
+    if last is None:
+        return jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    return jnp.concatenate([last[:, None, :], x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(x, shifted, mu_row):
+    return x + (shifted - x) * mu_row.astype(x.dtype)
+
+
+def _rwkv_groupnorm(y, w, H, eps=1e-5):
+    """Per-head normalization of the wkv output. y: (B, S, d)."""
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(yh - mu), axis=-1, keepdims=True)
+    yh = (yh - mu) * lax.rsqrt(var + eps)
+    return (yh.reshape(B, S, d) * w).astype(y.dtype)
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p: dict, x, *, state=None, shift_last=None,
+                   chunk: int = 128, checkpoint: bool = True, ctx=None):
+    """x: (B, S, d) -> (y (B,S,d), new_state (B,H,dh,dh) f32, new_shift (B,d))."""
+    from repro.sharding.partition import NULL_CTX
+    ctx = ctx or NULL_CTX
+    B, S, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    shifted = _rwkv_shift(x, shift_last)
+    mu = p["mu"]
+    xr = _rwkv_mix(x, shifted, mu[0])
+    xk = _rwkv_mix(x, shifted, mu[1])
+    xv = _rwkv_mix(x, shifted, mu[2])
+    xg = _rwkv_mix(x, shifted, mu[3])
+    xw = _rwkv_mix(x, shifted, mu[4])
+
+    con = lambda t: ctx.constrain(t, "batch", None, "heads", None)
+    r = con(jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, dh))
+    k = con(jnp.einsum("bsd,de->bse", xk, p["wk_t"]).reshape(B, S, H, dh))
+    v = con(jnp.einsum("bsd,de->bse", xv, p["wv_t"]).reshape(B, S, H, dh))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    # data-dependent decay in (0, 1)
+    dec = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w1_dec"])
+                                .astype(jnp.float32)),
+        p["w2_dec"].astype(jnp.float32))
+    w = con(jnp.exp(-jnp.exp(dec)).reshape(B, S, H, dh))
+    u = p["u_bonus"].astype(jnp.float32)
+
+    # RTCG Pallas WKV path (training; state stays in VMEM — see
+    # kernels/wkv6). The scan path remains the oracle + decode/prefill
+    # path (it returns the final state for the cache).
+    if cfg.wkv_impl == "pallas" and state is None and S > 1:
+        from repro.kernels.wkv6.ops import wkv6
+        y = wkv6(r, k, v, w, u)                      # (B, S, H, dh) f32
+        y = _rwkv_groupnorm(y.reshape(B, S, d).astype(x.dtype), p["ln_x"], H)
+        y = y * g.reshape(B, S, d).astype(y.dtype)
+        y = jnp.einsum("bse,ed->bsd", y, p["wo_t"])
+        return y, jnp.zeros((B, H, dh, dh), jnp.float32), x[:, -1, :]
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(S_st, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B, H, dh, dh)
+        y_t = jnp.einsum("bhi,bhij->bhj", r_t, S_st + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S_st + kv
+        return S_new, y_t
+
+    if state is None:
+        state = jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = (jnp.moveaxis(rf.reshape(B, S, H, dh), 1, 0),
+          jnp.moveaxis(kf.reshape(B, S, H, dh), 1, 0),
+          jnp.moveaxis(vf.reshape(B, S, H, dh), 1, 0),
+          jnp.moveaxis(w, 1, 0))
+    state, ys = chunked_scan(step, state, xs, chunk=min(chunk, S),
+                             checkpoint=checkpoint and S > 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)        # (B, S, d) f32
+    y = _rwkv_groupnorm(y.astype(x.dtype), p["ln_x"], H)
+    y = y * g.reshape(B, S, d).astype(y.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, p["wo_t"])
+    return y, state, x[:, -1, :]
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: dict, x, *, shift_last=None):
+    """RWKV FFN ("channel mix") with token shift.
+    -> (out (B,S,d), new_shift (B,d))."""
+    shifted = _rwkv_shift(x, shift_last)
+    mu = p["mu"]
+    xk = _rwkv_mix(x, shifted, mu[5])
+    xr = _rwkv_mix(x, shifted, mu[6])
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk_c"])
+    kk = jnp.square(jnp.maximum(kk.astype(jnp.float32), 0.0)).astype(x.dtype)
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr_c"]).astype(jnp.float32))
+    out = jnp.einsum("bsf,fd->bsd", kk, p["wv_c"])
+    return (out.astype(jnp.float32) * rr).astype(x.dtype), x[:, -1, :]
+
+
+# ================================================================ Mamba
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along S. x: (B, S, din); conv_w: (W, din).
+    conv_state: (B, W-1, din) previous inputs (decode)."""
+    W = conv_w.shape[0]
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, j:j + x.shape[1], :] * conv_w[j] for j in range(W))
+    new_state = xp[:, -(W - 1):, :]                     # last W-1 raw inputs
+    return out + conv_b.astype(out.dtype), new_state
+
+
+def mamba_mix(cfg: ModelConfig, p: dict, x, *, state=None, conv_state=None,
+              chunk: int = 128, checkpoint: bool = True, ctx=None):
+    """x: (B, S, d) -> (y, new_ssm_state (B,din,N) f32, new_conv_state)."""
+    from repro.sharding.partition import NULL_CTX
+    ctx = ctx or NULL_CTX
+    B, S, d = x.shape
+    din = cfg.ssm_expand * d
+    N = cfg.ssm_state_dim
+    dtr = cfg.ssm_dt_rank or -(-d // 16)
+
+    x_in = jnp.einsum("bsd,de->bse", x, p["in_proj_x"])
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"])
+    x_in = ctx.constrain(x_in, "batch", None, "mlp")
+    z = ctx.constrain(z, "batch", None, "mlp")
+    x_c, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_state)
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+    x_c = ctx.constrain(x_c, "batch", None, "mlp")
+
+    xdb = jnp.einsum("bse,ef->bsf", x_c, p["x_proj"])
+    dt_raw, B_ssm, C_ssm = jnp.split(xdb, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))               # (B, S, din)
+    dt = ctx.constrain(dt, "batch", None, "mlp")
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (din, N)
+    Bf = B_ssm.astype(jnp.float32)
+    Cf = C_ssm.astype(jnp.float32)
+    xf = x_c.astype(jnp.float32)
+
+    def step(h, inp):
+        xc_t, dt_t, B_t, C_t = inp                        # (B,din), (B,din), (B,N), (B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])           # (B, din, N)
+        dBx = (dt_t * xc_t)[..., None] * B_t[:, None, :]  # (B, din, N)
+        h = dA * h + dBx
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y_t
+
+    if state is None:
+        state = jnp.zeros((B, din, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    state, ys = chunked_scan(step, state, xs, chunk=min(chunk, S),
+                             checkpoint=checkpoint and S > 1)
+    y = jnp.moveaxis(ys, 0, 1)                            # (B, S, din) f32
+    y = ctx.constrain(y, "batch", None, "mlp")
+    y = (y + xf * p["D_skip"].astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return ctx.constrain(out, "batch", None, None), state, new_conv

@@ -1,0 +1,45 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-scaled quantization of gradients with an error-feedback
+residual (Seide et al. / 1-bit SGD lineage): the quantization error is
+carried into the next step so compression bias does not accumulate.
+Runs entirely inside jit; on a multi-pod mesh the quantized gradients
+are what crosses the (slow) pod boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, bits: int = 8):
+    """-> (q int8, scale f32). Symmetric per-tensor scaling."""
+    maxv = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+    lim = float(2 ** (bits - 1) - 1)
+    scale = maxv / lim
+    q = jnp.clip(jnp.round(g / scale), -lim, lim).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual):
+    """-> (dequantized grads, new residual). Apply per-leaf."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = quantize(gf)
+        deq = dequantize(q, scale)
+        return deq.astype(g.dtype), gf - deq
+
+    pairs = jax.tree.map(one, grads, residual)
+    new_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r

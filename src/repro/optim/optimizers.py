@@ -1,0 +1,145 @@
+"""Optimizers built from scratch (no optax): AdamW and Adafactor.
+
+AdamW keeps f32 moments sharded exactly like the (already 2D TP x FSDP
+sharded) parameters — ZeRO-style state sharding falls out of the param
+sharding for free.  Adafactor (factored second moment, no momentum) is
+the default for >=100B-parameter configs where even sharded AdamW
+moments would not fit HBM (arctic-480b; see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (params, state)
+
+
+# ------------------------------------------------------------------ AdamW
+def make_adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8, weight_decay: float = 0.1,
+               lr_schedule: Callable[[Any], Any] | None = None) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        cur_lr = lr_schedule(step) if lr_schedule else lr
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cur_lr * delta).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer("adamw", init, update)
+
+
+# --------------------------------------------------------------- Adafactor
+def make_adafactor(lr: float = 1e-3, decay_pow: float = 0.8, eps: float = 1e-30,
+                   clip_threshold: float = 1.0, weight_decay: float = 0.0,
+                   lr_schedule: Callable[[Any], Any] | None = None) -> Optimizer:
+    """Factored second-moment only (beta1=0). State per >=2D param is one
+    row + one column accumulator over the trailing two dims."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(st, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        cur_lr = lr_schedule(step) if lr_schedule else lr
+        beta2 = 1.0 - step.astype(jnp.float32) ** -decay_pow
+
+        def upd(g, slot, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in slot:
+                vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / jnp.maximum(denom[..., None], eps))
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * slot["v"] + (1 - beta2) * g2
+                new_slot = {"v": vhat}
+            u = gf / jnp.sqrt(vhat + eps)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            delta = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cur_lr * delta).astype(p.dtype), new_slot
+
+        is_slot = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        flat = jax.tree.map(upd, grads, state["slots"], params, is_leaf=is_slot)
+        istup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=istup)
+        new_slots = jax.tree.map(lambda t: t[1], flat, is_leaf=istup)
+        return new_params, {"slots": new_slots, "step": step}
+
+    return Optimizer("adafactor", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return make_adamw(**kw)
+    if name == "adafactor":
+        return make_adafactor(**kw)
+    raise KeyError(name)
+
+
+# ----------------------------------------------------------------- schedules
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm

@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + stepwise decode with KV/state cache.
+
+Static-batch engine with greedy/temperature sampling; the request queue
+gives continuous-batching semantics at prompt granularity (finished
+sequences are replaced at the next prefill boundary).  Per-slot position
+decode (token-granular continuous batching) is scaffolded behind
+`uniform_pos` — see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.sharding.partition import MeshContext, NULL_CTX
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, steps)
+    steps: int
+    prefill_len: int
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ctx: MeshContext = NULL_CTX,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(cfg, p, b, ctx, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: transformer.decode_step(cfg, p, c, t, pos, ctx))
+
+    def _sample(self, logits, key, temperature: float):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, steps: int, *, temperature: float = 0.0,
+                 seed: int = 0, extra_batch: dict | None = None) -> GenerationResult:
+        """prompts: (B, S) int32. Greedy/temperature decode for `steps`."""
+        B, S = prompts.shape
+        assert S + steps <= self.max_len, (S, steps, self.max_len)
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, cache = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, key, temperature)[:, None]
+        out.append(tok)
+        for i in range(steps - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, cache, tok, jnp.int32(S + i))
+            tok = self._sample(logits, sub, temperature)[:, None]
+            out.append(tok)
+        return GenerationResult(np.concatenate([np.asarray(t) for t in out], axis=1),
+                                steps, S)
+
+
+@dataclass
+class RequestQueue:
+    """Prompt-granular continuous batching: keeps the static batch full by
+    refilling finished slots from a pending queue between generate calls."""
+    pending: list = field(default_factory=list)
+    done: list = field(default_factory=list)
+
+    def submit(self, prompt: np.ndarray):
+        self.pending.append(prompt)
+
+    def run(self, engine: Engine, batch_size: int, steps: int, pad_id: int = 0):
+        while self.pending:
+            block = [self.pending.pop(0) for _ in range(min(batch_size, len(self.pending)))]
+            S = max(len(p) for p in block)
+            arr = np.full((len(block), S), pad_id, np.int32)
+            for i, p in enumerate(block):
+                arr[i, S - len(p):] = p   # left-pad
+            res = engine.generate(arr, steps)
+            for i in range(len(block)):
+                self.done.append(res.tokens[i])
+        return self.done

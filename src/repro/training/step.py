@@ -1,0 +1,144 @@
+"""Train/prefill/decode step builders with full sharding annotations.
+
+`make_train_step` returns (step_fn, in_shardings, out_shardings) so
+launchers and the dry-run jit identically.  Donation of params and
+optimizer state keeps the working set at ~1x params + grads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer
+from repro.models.schema import abstract_params, param_specs
+from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
+                                    get_optimizer, global_norm)
+from repro.sharding.partition import MeshContext, spec_for
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the given
+    (arch x shape) cell — weak-type-correct, shardable, no allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.frontend == "vision" and shape.kind != "decode":
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, min(cfg.vision_tokens, S), cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    if cfg.is_encdec and shape.kind != "decode":
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_positions, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> dict:
+    """PartitionSpecs matching input_specs."""
+    from repro.sharding.partition import PROFILES
+    rules = PROFILES[cfg.parallelism_profile]
+    out: dict = {}
+    for k, v in input_specs(cfg, shape).items():
+        if k == "positions":
+            out[k] = spec_for((None, "batch", None), v.shape, mesh, rules)
+        else:
+            out[k] = spec_for(("batch",) + (None,) * (len(v.shape) - 1),
+                              v.shape, mesh, rules)
+    return out
+
+
+# ---------------------------------------------------------------- training
+def make_train_step(cfg: ModelConfig, ctx: MeshContext,
+                    optimizer: Optimizer | None = None,
+                    grad_clip: float = 1.0, grad_accum: int = 1):
+    opt = optimizer or get_optimizer(cfg.optimizer)
+
+    def loss_fn(params, batch):
+        return transformer.forward_train(cfg, params, batch, ctx)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum > 1:
+            # split the batch into microbatches scanned sequentially
+            def micro(acc, mb):
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return jax.tree.map(jnp.add, acc,
+                                    (g, {"loss": loss * 0 + loss,
+                                         "aux_loss": metrics["aux_loss"]})), None
+
+            mbs = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum) + a.shape[1:]),
+                batch)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, msum), _ = jax.lax.scan(
+                micro, (zero_g, {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(())}), mbs)
+            grads = jax.tree.map(lambda g: (g / grad_accum).astype(cfg.dtype), grads)
+            metrics = jax.tree.map(lambda x: x / grad_accum, msum)
+            loss = metrics["loss"]
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step, opt
+
+
+def abstract_opt_state(cfg: ModelConfig, opt: Optimizer):
+    """ShapeDtypeStruct tree of the optimizer state (no allocation)."""
+    params_abs = abstract_params(cfg)
+    return jax.eval_shape(opt.init, params_abs)
+
+
+def opt_state_specs(cfg: ModelConfig, opt: Optimizer, mesh):
+    """Optimizer slots inherit the param PartitionSpec; factored adafactor
+    slots inherit the spec minus the reduced dim; scalars replicate."""
+    pspecs = param_specs(cfg, mesh)
+    params_abs = abstract_params(cfg)
+    state_abs = jax.eval_shape(opt.init, params_abs)
+
+    def build(state):
+        if isinstance(state, dict) and "m" in state and "v" in state:
+            return {"m": pspecs, "v": pspecs, "step": P()}
+        if isinstance(state, dict) and "slots" in state:
+            def slot_spec(slot_abs, pspec, pabs):
+                if "v" in slot_abs:
+                    return {"v": pspec}
+                # factored: vr drops last dim, vc drops second-to-last
+                sp = list(pspec) + [None] * (len(pabs.shape) - len(pspec))
+                return {"vr": P(*sp[:-1]), "vc": P(*(sp[:-2] + sp[-1:]))}
+            slots = jax.tree.map(
+                slot_spec, state["slots"], pspecs, params_abs,
+                is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x))
+            return {"slots": slots, "step": P()}
+        raise ValueError("unknown optimizer state structure")
+
+    return build(state_abs)
+
+
+# ----------------------------------------------------------------- serving
+def make_prefill_step(cfg: ModelConfig, ctx: MeshContext, max_len: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(cfg, params, batch, ctx, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, ctx: MeshContext):
+    def serve_step(params, cache, tokens, pos):
+        return transformer.decode_step(cfg, params, cache, tokens, pos, ctx)
+    return serve_step

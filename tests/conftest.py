@@ -1,0 +1,34 @@
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# NOTE: tests run with the real single CPU device. Multi-device tests
+# spawn subprocesses that set --xla_force_host_platform_device_count
+# themselves (never set globally here — see the dry-run contract).
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 900):
+    """Run a python snippet in a subprocess with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = env.get("XLA_FLAGS", "") + \
+        f" --xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nSTDOUT:\n{proc.stdout[-4000:]}\n"
+            f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_with_devices

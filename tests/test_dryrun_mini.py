@@ -1,0 +1,104 @@
+"""Mini dry-run: the full lower+compile+analyze pipeline on an 8-device
+mesh with smoke configs (the 512-device production sweep runs via
+``python -m repro.launch.dryrun``; see EXPERIMENTS.md §Dry-run)."""
+
+import pytest
+
+
+def test_hlo_analysis_known_flops():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import hlo_analysis
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    compiled = jax.jit(f).lower(x, x).compile()
+    rep = hlo_analysis.analyze(compiled.as_text())
+    assert rep.flops == pytest.approx(2 * 256**3 * 7, rel=1e-6)
+
+
+def test_hlo_analysis_collectives_counted(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("model",))
+def f(x, w):
+    y = x @ w
+    return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, P(None, None)))
+c = jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, None)),
+                             NamedSharding(mesh, P("model", None)))) \\
+    .lower(jax.ShapeDtypeStruct((64, 512), jnp.bfloat16),
+           jax.ShapeDtypeStruct((512, 256), jnp.bfloat16)).compile()
+rep = hlo_analysis.analyze(c.as_text())
+assert rep.collective_bytes.get("all-reduce", 0) > 0, rep.collective_bytes
+# CPU promotes the bf16 AR to f32; corrected bytes are half of raw
+raw = rep.collective_bytes_raw["all-reduce"]
+assert rep.collective_bytes["all-reduce"] == raw / 2
+print("COLL_OK")
+""")
+    assert "COLL_OK" in out
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("internlm2-1.8b", "train"),
+    ("moonshot-v1-16b-a3b", "train"),
+    ("jamba-v0.1-52b", "decode"),
+    ("whisper-tiny", "prefill"),
+])
+def test_mini_dryrun_smoke_configs(subproc, arch, kind):
+    """Smoke-config versions of the dry-run cells compile on a (4,2) mesh."""
+    out = subproc(f"""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.registry import get_config
+from repro.models import transformer
+from repro.models.schema import abstract_params, param_specs
+from repro.sharding.partition import MeshContext
+from repro.training.step import make_train_step, abstract_opt_state, opt_state_specs
+from repro.launch.mesh import make_mesh
+
+cfg = get_config("{arch}", smoke=True)
+mesh = make_mesh((4, 2), ("data", "model"))
+ctx = MeshContext(mesh)
+named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                               is_leaf=lambda x: isinstance(x, P))
+params_abs = abstract_params(cfg)
+pspecs = param_specs(cfg, mesh)
+B, S = 8, 32
+kind = "{kind}"
+if kind == "train":
+    step_fn, opt = make_train_step(cfg, ctx)
+    opt_abs = abstract_opt_state(cfg, opt)
+    ospecs = opt_state_specs(cfg, opt, mesh)
+    batch = {{"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}}
+    if cfg.is_encdec:
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_positions, cfg.d_model), jnp.dtype(cfg.dtype))
+    c = jax.jit(step_fn, in_shardings=(named(pspecs), named(ospecs), None),
+                donate_argnums=(0, 1)).lower(params_abs, opt_abs, batch).compile()
+elif kind == "prefill":
+    batch = {{"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}}
+    if cfg.is_encdec:
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_positions, cfg.d_model), jnp.dtype(cfg.dtype))
+    fn = lambda p, b: transformer.prefill(cfg, p, b, ctx, max_len=S)
+    c = jax.jit(fn, in_shardings=(named(pspecs), None)).lower(params_abs, batch).compile()
+else:
+    cache = transformer.init_cache(cfg, B, S, abstract=True)
+    fn = lambda p, cch, t, pos: transformer.decode_step(cfg, p, cch, t, pos, ctx)
+    c = jax.jit(fn).lower(params_abs, cache,
+                          jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                          jax.ShapeDtypeStruct((), jnp.int32)).compile()
+assert c.memory_analysis() is not None
+assert (c.cost_analysis() or {{}}).get("flops", 0) >= 0
+print("MINI_DRYRUN_OK")
+""")
+    assert "MINI_DRYRUN_OK" in out

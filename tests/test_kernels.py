@@ -1,0 +1,175 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.matmul.matmul import pallas_matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.flash_attention.flash_attention import pallas_flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.rmsnorm import pallas_rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.filterbank_conv.filterbank_conv import pallas_filterbank_conv
+from repro.kernels.filterbank_conv.ref import filterbank_conv_ref
+from repro.kernels.nn_search.nn_search import pallas_nn_search
+from repro.kernels.nn_search.ref import nn_search_ref
+
+rng = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (300, 200, 150),
+                                   (17, 500, 33), (1, 128, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_matmul_shapes_dtypes(M, K, N, dtype):
+    dt = jnp.dtype(dtype)
+    x = jnp.asarray(rng.standard_normal((M, K), dtype=np.float32)).astype(dt)
+    y = jnp.asarray(rng.standard_normal((K, N), dtype=np.float32)).astype(dt)
+    out = pallas_matmul(x, y)
+    ref = matmul_ref(x, y)
+    tol = 5e-2 if dt == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(out.astype(np.float32), ref.astype(np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_matmul_fused_epilogue():
+    x = jnp.asarray(rng.standard_normal((256, 128), dtype=np.float32))
+    y = jnp.asarray(rng.standard_normal((128, 192), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal(192, dtype=np.float32))
+    for act in (None, "relu", "gelu", "silu"):
+        np.testing.assert_allclose(
+            pallas_matmul(x, y, b, activation=act),
+            matmul_ref(x, y, b, activation=act), rtol=1e-4, atol=1e-4)
+
+
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 200))
+@settings(max_examples=8, deadline=None)
+def test_matmul_property(m, k, n):
+    x = jnp.asarray(np.random.default_rng(m).standard_normal((m, k), dtype=np.float32))
+    y = jnp.asarray(np.random.default_rng(n).standard_normal((k, n), dtype=np.float32))
+    np.testing.assert_allclose(pallas_matmul(x, y), matmul_ref(x, y),
+                               rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,H,Hk,S,D", [(1, 4, 4, 256, 64), (2, 8, 2, 384, 64),
+                                        (1, 6, 1, 200, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_gqa(B, H, Hk, S, D, causal):
+    q = jnp.asarray(rng.standard_normal((B, H, S, D), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Hk, S, D), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Hk, S, D), dtype=np.float32))
+    out = pallas_flash_attention(q, k, v, causal=causal)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_block_sweep():
+    q = jnp.asarray(rng.standard_normal((1, 2, 512, 64), dtype=np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64), dtype=np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64), dtype=np.float32))
+    ref = attention_ref(q, k, v, causal=True)
+    for bq, bkv in [(128, 128), (256, 128), (128, 256), (512, 512)]:
+        out = pallas_flash_attention(q, k, v, causal=True,
+                                     block_q=bq, block_kv=bkv)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(rng.standard_normal((1, 2, 256, 64), dtype=np.float32)).astype(jnp.bfloat16)
+    k, v = q + 0, q * 0.5
+    out = pallas_flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(np.float32), ref.astype(np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("shape", [(64, 256), (3, 17, 512), (1, 1, 128)])
+def test_rmsnorm(shape):
+    x = jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+    w = jnp.asarray(rng.standard_normal(shape[-1], dtype=np.float32))
+    np.testing.assert_allclose(pallas_rmsnorm(x, w), rmsnorm_ref(x, w),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_fused_residual():
+    x = jnp.asarray(rng.standard_normal((40, 256), dtype=np.float32))
+    r = jnp.asarray(rng.standard_normal((40, 256), dtype=np.float32))
+    w = jnp.ones(256, jnp.float32)
+    np.testing.assert_allclose(pallas_rmsnorm(x, w, r), rmsnorm_ref(x, w, r),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------- filterbank conv
+@pytest.mark.parametrize("H,W,C,F,fh,fw,bh,unroll", [
+    (32, 32, 8, 16, 9, 9, 8, True),
+    (40, 40, 4, 8, 5, 5, 4, False),
+    (33, 65, 2, 4, 3, 3, 16, True),
+])
+def test_filterbank_conv(H, W, C, F, fh, fw, bh, unroll):
+    x = jnp.asarray(rng.standard_normal((H, W, C), dtype=np.float32))
+    f = jnp.asarray(rng.standard_normal((F, fh, fw, C), dtype=np.float32))
+    out = pallas_filterbank_conv(x, f, block_h=bh, unroll_w=unroll)
+    ref = filterbank_conv_ref(x, f)
+    assert out.shape == ref.shape == (H - fh + 1, W - fw + 1, F)
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------- nn search
+@pytest.mark.parametrize("T,N,D,bt,bn", [(100, 500, 64, 128, 256),
+                                         (257, 1000, 32, 128, 512)])
+def test_nn_search(T, N, D, bt, bn):
+    t = jnp.asarray(rng.standard_normal((T, D), dtype=np.float32))
+    n = jnp.asarray(rng.standard_normal((N, D), dtype=np.float32))
+    d, i = pallas_nn_search(t, n, block_t=bt, block_n=bn)
+    dr, ir = nn_search_ref(t, n)
+    np.testing.assert_allclose(d, dr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_array_equal(i, ir)
+
+
+# --------------------------------------------------- autotuner integration
+def test_autotune_picks_viable_and_caches(tmp_path):
+    from repro.core.autotune import Autotuner
+    from repro.core.cache import DiskCache
+    from repro.kernels.filterbank_conv import ops as fops
+
+    x = jnp.asarray(rng.standard_normal((48, 48, 4), dtype=np.float32))
+    f = jnp.asarray(rng.standard_normal((8, 5, 5, 4), dtype=np.float32))
+    tuner = Autotuner("fb_test", fops._builder, measure="wallclock",
+                      cache=DiskCache("t", root=tmp_path), repeats=2, warmup=1)
+    rep = tuner.tune(fops.CANDIDATES[:6], (x, f))
+    assert rep.best in fops.CANDIDATES[:6]
+    rep2 = tuner.tune(fops.CANDIDATES[:6], (x, f))
+    assert rep2.cached and rep2.best == rep.best
+
+
+# ------------------------------------------------------------------ wkv6
+@pytest.mark.parametrize("B,T,H,dh,chunk", [(2, 50, 3, 32, 16), (1, 64, 2, 64, 32)])
+def test_wkv6_kernel(B, T, H, dh, chunk):
+    from repro.kernels.wkv6.wkv6 import pallas_wkv6
+    from repro.kernels.wkv6.ref import wkv6_ref
+    r = jnp.asarray(rng.standard_normal((B, T, H, dh), dtype=np.float32)) * 0.5
+    k = jnp.asarray(rng.standard_normal((B, T, H, dh), dtype=np.float32)) * 0.5
+    v = jnp.asarray(rng.standard_normal((B, T, H, dh), dtype=np.float32)) * 0.5
+    w = jnp.asarray(rng.uniform(0.3, 0.99, (B, T, H, dh)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, dh), dtype=np.float32)) * 0.1
+    out = pallas_wkv6(r, k, v, w, u, chunk=chunk)
+    ref = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_wkv6_custom_vjp_matches_reference_grad():
+    from repro.kernels.wkv6.ops import wkv6
+    from repro.kernels.wkv6.ref import wkv6_ref
+    B, T, H, dh = 1, 20, 2, 32
+    r = jnp.asarray(rng.standard_normal((B, T, H, dh), dtype=np.float32)) * 0.3
+    k, v = r * 0.7, r * 0.4
+    w = jnp.full((B, T, H, dh), 0.9, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, dh), dtype=np.float32)) * 0.1
+    g1 = jax.grad(lambda a: jnp.sum(wkv6(a, k, v, w, u) ** 2))(r)
+    g2 = jax.grad(lambda a: jnp.sum(wkv6_ref(a, k, v, w, u) ** 2))(r)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,152 @@
+"""Per-arch smoke tests + decode consistency + model-layer invariants."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LM_SHAPES, applicable_shapes
+from repro.configs.registry import all_archs, get_config
+from repro.models import transformer
+from repro.models.layers import chunked_scan
+from repro.models.schema import count_params, init_params
+from repro.sharding.partition import NULL_CTX
+
+ARCHS = all_archs()
+
+
+def _batch_for(cfg, key, B=2, S=16, extra_tok=0):
+    toks = jax.random.randint(key, (B, S + extra_tok), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model)) * 0.02
+    if cfg.is_encdec:
+        batch["frame_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_positions, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced config of the same family: one forward/train step on CPU,
+    asserting output shapes and no NaNs (assignment requirement)."""
+    cfg = get_config(arch, smoke=True).replace(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    assert count_params(params) > 0
+    B, S = 2, 16
+    batch = _batch_for(cfg, key, B, S)
+    out = transformer.forward(cfg, params, batch, mode="train")
+    assert out["x"].shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(out["x"])))
+    loss, metrics = transformer.forward_train(cfg, params, batch)
+    assert bool(jnp.isfinite(loss)) and float(loss) > 0
+    grads = jax.grad(lambda p: transformer.forward_train(cfg, p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_decode_consistency(arch):
+    """prefill(S) + decode(S) must equal the (S+1)-token forward pass."""
+    cfg = get_config(arch, smoke=True).replace(
+        dtype="float32", attention_impl="naive", capacity_factor=100.0)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 12
+    batch = _batch_for(cfg, key, B, S, extra_tok=1)
+    full = transformer.forward(cfg, params, batch, mode="train")
+    full_logits = transformer.logits_from_hidden(
+        cfg, params, full["x"][:, -1:, :], NULL_CTX)[:, 0]
+    b2 = {k: (v[:, :S] if k in ("tokens", "labels") else v) for k, v in batch.items()}
+    _, cache = transformer.prefill(cfg, params, b2, max_len=S + 4)
+    lg, _ = transformer.decode_step(cfg, params, cache,
+                                    batch["tokens"][:, S:S + 1], jnp.int32(S))
+    np.testing.assert_allclose(lg, full_logits, rtol=2e-4, atol=2e-4)
+
+
+def test_applicable_shapes_long_context_rule():
+    # long_500k only for ssm/hybrid (DESIGN.md §4)
+    assert "long_500k" in applicable_shapes(get_config("rwkv6-7b"))
+    assert "long_500k" in applicable_shapes(get_config("jamba-v0.1-52b"))
+    assert "long_500k" not in applicable_shapes(get_config("deepseek-67b"))
+    total_cells = sum(len(applicable_shapes(get_config(a))) for a in ARCHS)
+    assert total_cells == 32  # 8 archs x 3 + 2 archs x 4
+
+
+def test_param_count_analytic_close_to_real():
+    for arch in ("internlm2-1.8b", "rwkv6-7b", "jamba-v0.1-52b"):
+        cfg = get_config(arch, smoke=True)
+        real = count_params(init_params(cfg, jax.random.PRNGKey(0)))
+        analytic = cfg.param_count()["total"]
+        assert abs(real - analytic) / real < 0.15, (arch, real, analytic)
+
+
+def test_full_config_param_counts_match_names():
+    """Sanity: the full configs land near their published sizes."""
+    # moonshot: the assigned 48L x 64e config totals ~28B (the published
+    # 16B model is 27L); we follow the assignment spec verbatim.
+    expect = {"internlm2-1.8b": (1.5e9, 2.4e9), "deepseek-67b": (6e10, 7.5e10),
+              "arctic-480b": (4e11, 5.3e11), "granite-20b": (1.6e10, 2.4e10),
+              "phi3-medium-14b": (1.2e10, 1.6e10), "rwkv6-7b": (6e9, 9e9),
+              "jamba-v0.1-52b": (4.4e10, 6e10), "qwen2-vl-7b": (6.5e9, 9e9),
+              "whisper-tiny": (2e7, 1.2e8), "moonshot-v1-16b-a3b": (1.4e10, 3.2e10)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()["total"]
+        assert lo <= n <= hi, (arch, f"{n:.3e}")
+
+
+@given(T=st.integers(1, 65), chunk=st.sampled_from([1, 4, 16, 64]),
+       seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_chunked_scan_matches_plain_scan(T, chunk, seed):
+    """Invariant: chunked+checkpointed scan == plain scan, any T/chunk."""
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (T, 4))
+
+    def step(c, x):
+        c = 0.9 * c + x
+        return c, c * 2
+
+    c_ref, ys_ref = jax.lax.scan(step, jnp.zeros(4), xs)
+    c_out, ys_out = chunked_scan(step, jnp.zeros(4), xs, chunk=chunk)
+    np.testing.assert_allclose(c_out, c_ref, rtol=1e-6)
+    np.testing.assert_allclose(ys_out, ys_ref, rtol=1e-6)
+
+
+def test_chunked_scan_gradient():
+    xs = jax.random.normal(jax.random.PRNGKey(0), (32, 4))
+
+    def loss_via(scan_fn):
+        def f(w):
+            def step(c, x):
+                c = c * 0.9 + x * w
+                return c, c
+            _, ys = scan_fn(step, jnp.zeros(4), xs)
+            return jnp.sum(ys ** 2)
+        return jax.grad(f)(1.5)
+
+    g_ref = loss_via(jax.lax.scan)
+    g_chk = loss_via(lambda s, i, x: chunked_scan(s, i, x, chunk=8))
+    np.testing.assert_allclose(g_chk, g_ref, rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = get_config("moonshot-v1-16b-a3b", smoke=True).replace(
+        dtype="float32", capacity_factor=0.1)  # force heavy dropping
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, jax.random.PRNGKey(0))
+    loss, _ = transformer.forward_train(cfg, params, batch)
+    assert bool(jnp.isfinite(loss))  # residual path carries dropped tokens
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.models.layers import apply_mrope, apply_rope
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 24))
+    pos = jnp.arange(8, dtype=jnp.int32)[None].repeat(2, 0)
+    pos3 = jnp.broadcast_to(pos[None], (3, 2, 8))
+    a = apply_rope(x, pos, 1e4)
+    b = apply_mrope(x, pos3, 1e4, (4, 4, 4))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,116 @@
+"""Optimizers, schedules, gradient compression, data pipeline."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import SyntheticLM
+from repro.optim.compress import (compress_with_feedback, dequantize,
+                                  init_residual, quantize)
+from repro.optim.optimizers import (clip_by_global_norm, cosine_schedule,
+                                    global_norm, make_adafactor, make_adamw)
+
+
+def test_adamw_optimizes_quadratic():
+    opt = make_adamw(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}    # d/dw of w^2
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adafactor_optimizes_quadratic_matrix():
+    opt = make_adafactor(lr=0.05)
+    params = {"w": jnp.ones((8, 4)) * 3.0}
+    state = opt.init(params)
+    assert "vr" in jax.tree.leaves(state["slots"], is_leaf=lambda x: isinstance(x, dict) and "vr" in x)[0]
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_adafactor_state_is_factored():
+    opt = make_adafactor()
+    p = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((64,))}
+    st_ = opt.init(p)
+    assert st_["slots"]["w"]["vr"].shape == (64,)
+    assert st_["slots"]["w"]["vc"].shape == (32,)
+    assert st_["slots"]["b"]["v"].shape == (64,)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule():
+    s = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(s(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+@given(seed=st.integers(0, 100), bits=st.sampled_from([4, 8]))
+@settings(max_examples=10, deadline=None)
+def test_quantize_bounded_error(seed, bits):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    q, scale = quantize(g, bits)
+    err = jnp.max(jnp.abs(dequantize(q, scale) - g))
+    assert float(err) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_removes_bias():
+    """Invariant: with error feedback, the SUM of compressed gradients
+    converges to the sum of true gradients (bias does not accumulate)."""
+    g_true = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 0.01
+    grads = {"w": g_true}
+    residual = init_residual(grads)
+    acc = jnp.zeros(128)
+    for _ in range(50):
+        cg, residual = compress_with_feedback(grads, residual)
+        acc = acc + cg["w"]
+    np.testing.assert_allclose(acc / 50, g_true, atol=5e-4)
+
+
+# ------------------------------------------------------------------- data
+def test_data_deterministic_and_resumable():
+    d = SyntheticLM(1000, 32, 4, seed=7)
+    b1 = d.batch_at(10)
+    b2 = SyntheticLM(1000, 32, 4, seed=7).batch_at(10)  # fresh pipeline
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d.batch_at(11)["tokens"], b1["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    d = SyntheticLM(1000, 16, 2, seed=0)
+    b = d.batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    # label[t] is the next token of an S+1 stream: consecutive windows agree
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_is_learnable_structure():
+    d = SyntheticLM(64, 256, 8, seed=0)
+    b = d.batch_at(0)
+    toks = np.asarray(b["tokens"])
+    # affine recurrence: the same current-token value mostly maps to the
+    # same next-token value => strictly better than chance predictability
+    nxt = {}
+    hits = total = 0
+    for row in toks:
+        for t in range(len(row) - 1):
+            cur, n = int(row[t]), int(row[t + 1])
+            if cur in nxt:
+                total += 1
+                hits += (nxt[cur] == n)
+            nxt[cur] = n
+    # 4-way recurrence noise bounds top-1 predictability near 25%;
+    # uniform chance over the 64-token vocab would be ~1.6%
+    assert hits / max(total, 1) > 0.15

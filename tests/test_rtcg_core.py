@@ -1,0 +1,172 @@
+"""Unit + property tests for the RTCG core (the paper's contribution)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Assign, Block, ElementwiseKernel, FunctionBody,
+                        FunctionDeclaration, KernelTemplate, Module,
+                        ReductionKernel, Return, ScalarArg, SourceModule,
+                        VectorArg, cu, op_add)
+from repro.core.cache import DiskCache, stable_hash
+from repro.core.rtcg import registry_size
+from repro.core import snippets
+
+
+# ------------------------------------------------------------ SourceModule
+def test_sourcemodule_basic():
+    mod = SourceModule("def double(x):\n    return x * 2\n")
+    f = mod.get_function("double")
+    assert f(21) == 42
+
+
+def test_sourcemodule_content_addressed():
+    src = "def f(x):\n    return x + 1\n"
+    a = SourceModule.load(src)
+    b = SourceModule.load(src)
+    assert a is b  # identical source -> one module (the compiler cache)
+
+
+def test_sourcemodule_missing_function():
+    mod = SourceModule("def f(x):\n    return x\n")
+    with pytest.raises(NameError):
+        mod.get_function("nope")
+
+
+def test_sourcemodule_has_jax_namespace():
+    mod = SourceModule("def f(x):\n    return jnp.sum(x) + pl.cdiv(5, 2)\n")
+    assert float(mod.get_function("f")(jnp.ones(3))) == 3 + 3
+
+
+# ------------------------------------------------------------------ cache
+def test_disk_cache_roundtrip(tmp_path):
+    c = DiskCache("t", root=tmp_path)
+    key = c.make_key("a", [1, 2, 3])
+    assert c.get(key) is None
+    c.put(key, {"x": 1})
+    assert c.get(key) == {"x": 1}
+    c2 = DiskCache("t", root=tmp_path)  # fresh instance reads from disk
+    assert c2.get(key) == {"x": 1}
+
+
+@given(st.dictionaries(st.text(max_size=8), st.integers(), max_size=5))
+@settings(max_examples=20, deadline=None)
+def test_stable_hash_deterministic(d):
+    assert stable_hash(d) == stable_hash(dict(reversed(list(d.items()))))
+
+
+# -------------------------------------------------------------- snippets
+@pytest.mark.parametrize("expr,expected", [
+    ("a*x[i] + b", "a*x + b"),
+    ("expf(x[i])", "jnp.exp(x)"),
+    ("x[i] > 0 ? x[i] : 0.0f", "jnp.where(x > 0, x, 0.0)"),
+    ("fmaxf(x[i], y[i])", "jnp.maximum(x, y)"),
+])
+def test_translate_expression(expr, expected):
+    assert snippets.translate_expression(expr) == expected
+
+
+def test_written_names_and_augassign():
+    op = "z[i] = x[i]; z[i] *= 2; w[i] = z[i] + 1"
+    assert snippets.written_names(op) == ["z", "w"]
+    tgt, e = snippets.translate_statement("z[i] *= 2")
+    assert tgt == "z" and e == "z * (2)"
+
+
+def test_parse_c_arguments():
+    out = snippets.parse_c_arguments("float a, float *x, const int *idx")
+    assert out == [("a", "float32", False), ("x", "float32", True),
+                   ("idx", "int32", True)]
+
+
+# ----------------------------------------------------------- elementwise
+def test_elementwise_paper_example():
+    lin_comb = ElementwiseKernel(
+        "float a, float *x, float b, float *y, float *z",
+        "z[i] = a*x[i] + b*y[i]")
+    x = jnp.asarray(np.random.randn(4097).astype(np.float32))
+    y = jnp.asarray(np.random.randn(4097).astype(np.float32))
+    z = lin_comb(5.0, x, 6.0, y, x)
+    np.testing.assert_allclose(z, 5 * x + 6 * y, rtol=1e-5, atol=1e-5)
+
+
+@given(n=st.integers(1, 5000), block_rows=st.sampled_from([8, 32, 128]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_elementwise_property_any_size(n, block_rows, seed):
+    """Padding/tiling must be exact for every element count."""
+    k = ElementwiseKernel("float *o, float *v", "o[i] = 3*v[i] - 1")
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
+    out = k(v, v, block_rows=block_rows)
+    np.testing.assert_allclose(out, 3 * v - 1, rtol=1e-5, atol=1e-5)
+
+
+def test_elementwise_dtypes():
+    k = ElementwiseKernel([VectorArg(np.int32, "o"), VectorArg(np.int32, "v")],
+                          "o[i] = v[i] * 2")
+    v = jnp.arange(100, dtype=jnp.int32)
+    assert k(v, v).dtype == jnp.int32
+    np.testing.assert_array_equal(k(v, v), v * 2)
+
+
+# ------------------------------------------------------------- reduction
+def test_reduction_dot():
+    dot = ReductionKernel(np.float32, "0", "a+b", "x[i]*y[i]",
+                          "float *x, float *y")
+    x = jnp.asarray(np.random.randn(3001).astype(np.float32))
+    y = jnp.asarray(np.random.randn(3001).astype(np.float32))
+    assert abs(float(dot(x, y)) - float(x @ y)) < 1e-2
+
+
+@given(n=st.integers(1, 4000), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_reduction_max_property(n, seed):
+    mx = ReductionKernel(np.float32, "-3e38", "fmaxf(a,b)", "x[i]", "float *x")
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n, dtype=np.float32))
+    assert float(mx(x)) == pytest.approx(float(jnp.max(x)), rel=1e-6)
+
+
+# ----------------------------------------------------------- codebuilder
+def test_codebuilder_unrolled_add():
+    mod = Module([FunctionBody(
+        FunctionDeclaration("add3", ["x"]),
+        Block([Assign("acc", "x"),
+               Return("acc + 3")]))])
+    f = mod.compile().get_function("add3")
+    assert f(4) == 7
+    assert "def add3(x):" in str(mod)
+
+
+def test_template_render_and_build():
+    t = KernelTemplate("k", "def {{ name }}(x):\n    return x * {{ c }}\n")
+    f = t.build(name="triple", c=3)
+    assert f(5) == 15
+    n0 = registry_size()
+    t.build(name="triple", c=3)  # identical render -> cached module
+    assert registry_size() == n0
+
+
+# --------------------------------------------------------------- arrays
+def test_rtcg_array_fig3b():
+    import repro.core.array as ga
+    a = np.random.randn(4, 4).astype(np.float32)
+    a_gpu = ga.to_gpu(a)
+    np.testing.assert_allclose((2 * a_gpu).get(), 2 * a, rtol=1e-6)
+
+
+def test_rtcg_array_fusion_and_reduction():
+    import repro.core.array as ga
+    x = np.random.randn(2048).astype(np.float32)
+    y = np.random.randn(2048).astype(np.float32)
+    X, Y = ga.to_gpu(x), ga.to_gpu(y)
+    n0 = len(ga._kernel_cache)
+    z = (2 * X + 3 * Y - ga.exp(X)).evaluate()
+    np.testing.assert_allclose(z.get(), 2 * x + 3 * y - np.exp(x),
+                               rtol=1e-4, atol=1e-4)
+    (5 * X + 7 * Y - ga.exp(X)).evaluate()   # same structure, new scalars
+    assert len(ga._kernel_cache) == n0 + 1   # one generated kernel total
+    assert float(X.dot(Y)) == pytest.approx(float(x @ y), abs=2e-2)

@@ -1,0 +1,70 @@
+"""ScanKernel + curandom tests (the remaining PyCUDA surface)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ExclusiveScanKernel, InclusiveScanKernel
+from repro.core import curandom
+
+
+def test_inclusive_cumsum():
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 9, 9001).astype(np.float32))
+    k = InclusiveScanKernel(np.float32, "a+b")
+    np.testing.assert_allclose(k(x), np.cumsum(np.asarray(x)), rtol=1e-5)
+
+
+def test_exclusive_cumsum():
+    x = jnp.asarray(np.random.default_rng(1).integers(0, 9, 5000).astype(np.float32))
+    k = ExclusiveScanKernel(np.float32, "a+b", neutral="0")
+    ref = np.concatenate([[0], np.cumsum(np.asarray(x))[:-1]])
+    np.testing.assert_allclose(k(x), ref, rtol=1e-5)
+
+
+def test_cummax():
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(6000, dtype=np.float32))
+    k = InclusiveScanKernel(np.float32, "fmaxf(a,b)")
+    np.testing.assert_allclose(k(x), np.maximum.accumulate(np.asarray(x)))
+
+
+@given(n=st.integers(1, 9000), seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_scan_property_any_size(n, seed):
+    """Two-pass blocked scan must be exact for every element count."""
+    x = jnp.asarray(np.random.default_rng(seed).integers(0, 5, n).astype(np.float32))
+    k = InclusiveScanKernel(np.float32, "a+b", block_n=1024)
+    np.testing.assert_allclose(k(x), np.cumsum(np.asarray(x)), rtol=1e-5)
+
+
+def test_unsupported_scan_op():
+    with pytest.raises(NotImplementedError):
+        InclusiveScanKernel(np.float32, "a^b")
+
+
+# ------------------------------------------------------------- curandom
+def test_curand_streams_differ_and_seed_resets():
+    curandom.seed(7)
+    a = curandom.rand((1000,))
+    b = curandom.rand((1000,))
+    assert not np.allclose(a, b)
+    curandom.seed(7)
+    a2 = curandom.rand((1000,))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+    assert float(a.min()) >= 0.0 and float(a.max()) < 1.0
+
+
+def test_paper_fig4_verbatim():
+    """The paper's Fig. 4a program, using our curand + ElementwiseKernel."""
+    from repro.core import ElementwiseKernel
+    import repro.core.array as gpuarray
+
+    x = curandom.rand((500000,))
+    y = curandom.rand((500000,))
+    z = gpuarray.empty_like(gpuarray.RTCGArray(x))
+
+    lin_comb = ElementwiseKernel(
+        "float a, float *x, float b, float *y, float *z",
+        "z[i] = a*x[i] + b*y[i]")
+    out = lin_comb(5, x, 6, y, z.value)
+    np.testing.assert_allclose(out, 5 * x + 6 * y, rtol=1e-5, atol=1e-5)
