@@ -1,6 +1,7 @@
 """Paper §5.2 claim: RTCG-fused elementwise beats eager op-by-op arrays
 ("proliferation of temporary variables plaguing operator-overloading
-array packages")."""
+array packages") — and, with the DAG fusion planner, a map chain ending
+in a reduction runs as ONE generated kernel instead of two."""
 
 from __future__ import annotations
 
@@ -8,11 +9,18 @@ import numpy as np
 
 from benchmarks.common import emit, timeit
 import repro.core.array as ga
+from repro.core import dispatch
 
 
-def run(repeats: int = 5):
+def _count_launches(fn) -> int:
+    before = dispatch.launch_count()
+    fn()
+    return dispatch.launch_count() - before
+
+
+def run(repeats: int = 5, sizes=(100_000, 1_000_000)):
     rng = np.random.default_rng(0)
-    for n in (100_000, 1_000_000):
+    for n in sizes:
         x = rng.standard_normal(n).astype(np.float32)
         y = rng.standard_normal(n).astype(np.float32)
         X, Y = ga.to_gpu(x), ga.to_gpu(y)
@@ -30,6 +38,29 @@ def run(repeats: int = 5):
         fused()  # build+cache the generated kernel
         t_fused = timeit(fused, repeats=repeats)
         t_eager = timeit(eager, repeats=repeats)
-        emit(f"fusion.n{n}.fused", t_fused, "one generated kernel")
+        k_eager = _count_launches(eager)
+        emit(f"fusion.n{n}.fused", t_fused, "one generated kernel",
+             kernels_launched=_count_launches(fused),
+             speedup=t_eager / t_fused)
         emit(f"fusion.n{n}.eager", t_eager,
-             f"5 kernels + temps; fused speedup {t_eager / t_fused:.2f}x")
+             f"{k_eager} kernels + temps; fused speedup {t_eager / t_fused:.2f}x",
+             kernels_launched=k_eager)
+
+        # ---- DAG-level map-reduce fusion: .sum() is ONE ReductionKernel
+        def fused_sum():
+            return (2 * X + 3 * Y - ga.exp(X)).sum()
+
+        def unfused_sum():
+            return (2 * X + 3 * Y - ga.exp(X)).sum(fuse=False)
+
+        fused_sum(); unfused_sum()  # warm the driver cache
+        k_fused = _count_launches(fused_sum)
+        k_unfused = _count_launches(unfused_sum)
+        t_fsum = timeit(fused_sum, repeats=repeats)
+        t_usum = timeit(unfused_sum, repeats=repeats)
+        emit(f"fusion.n{n}.mapreduce_fused", t_fsum,
+             f"{k_fused} kernel launch (map_expr inside ReductionKernel)",
+             kernels_launched=k_fused, speedup=t_usum / t_fsum)
+        emit(f"fusion.n{n}.mapreduce_unfused", t_usum,
+             f"{k_unfused} kernel launches (map then reduce)",
+             kernels_launched=k_unfused)

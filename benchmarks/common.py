@@ -1,30 +1,33 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV/JSON row collection.
+
+Timing delegates to `repro.core.autotune.measure_wallclock` so the
+autotuner and the benchmarks measure the *same way* (same warmup,
+median-of-repeats, block_until_ready) — a tuner winner is a benchmark
+winner by construction.
+"""
 
 from __future__ import annotations
 
-import time
+from repro.core.autotune import measure_wallclock
 
-import jax
-
-ROWS: list[tuple] = []
+ROWS: list[dict] = []
 
 
 def timeit(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
-    """Median seconds per call (block_until_ready)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2]
+    """Median seconds per call (block_until_ready) — the tuner's clock."""
+    return measure_wallclock(fn, args, repeats=repeats, warmup=warmup)
 
 
-def emit(name: str, seconds: float, derived: str = "") -> None:
-    ROWS.append((name, seconds * 1e6, derived))
-    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+def emit(name: str, seconds: float, derived: str = "", **extra) -> None:
+    """Record one benchmark row (printed as CSV, collected for JSON).
+
+    ``extra`` lands in the machine-readable ``BENCH_<suite>.json`` rows
+    (e.g. ``speedup=...``, ``kernels_launched=...``, ``compile_count=...``).
+    """
+    ROWS.append({"name": name, "us_per_call": seconds * 1e6,
+                 "derived": derived, **extra})
+    # CSV contract is exactly 3 fields; keep free-text commas out of it
+    print(f"{name},{seconds * 1e6:.1f},{derived.replace(',', ';')}", flush=True)
 
 
 def header() -> None:

@@ -1,9 +1,13 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV
+# and write machine-readable ``BENCH_<suite>.json`` next to it (one file
+# per suite: rows + dispatch compile/launch deltas) so the perf
+# trajectory is trackable across PRs.
 #
 #   table1  — bench_filterbank:  RTCG auto-tuned 3D filter-bank conv
 #   table2/3 — bench_copperhead: DSL perf fraction + LOC vs hand-written
 #   table4  — bench_nn:          brute-force nearest neighbor scaling
-#   §5.2    — bench_elementwise: fused RTCG kernels vs eager temporaries
+#   §5.2    — bench_elementwise: fused RTCG kernels vs eager temporaries,
+#             plus DAG-level map-reduce fusion (1 launch vs 2)
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
 #
@@ -11,37 +15,71 @@
 # TPU-target roofline lives in EXPERIMENTS.md §Roofline, produced by
 # ``python -m repro.launch.dryrun``.
 import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list: table1,table2,...")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for BENCH_<suite>.json files")
+    ap.add_argument("--sizes", default="",
+                    help="comma list of element counts for the fusion suite "
+                         "(smoke tests use small sizes)")
     args = ap.parse_args()
 
     from benchmarks import (bench_copperhead, bench_dgfem, bench_elementwise,
                             bench_filterbank, bench_model, bench_nn)
+    from benchmarks import common
     from benchmarks.common import header
+    from repro.core import dispatch
+    from repro.core.cache import environment_fingerprint
+
+    fusion_kwargs = {}
+    if args.sizes:
+        fusion_kwargs["sizes"] = tuple(int(s) for s in args.sizes.split(","))
 
     suites = {
         "table1": bench_filterbank.run,
         "table2": bench_copperhead.run,
         "table4": bench_nn.run,
-        "fusion": bench_elementwise.run,
+        "fusion": lambda repeats: bench_elementwise.run(repeats=repeats, **fusion_kwargs),
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
+    json_dir = Path(args.json_dir)
+    json_dir.mkdir(parents=True, exist_ok=True)
     header()
     failed = []
     for name in chosen:
+        row_start = len(common.ROWS)
+        compiles0, launches0 = dispatch.compile_count(), dispatch.launch_count()
         try:
             suites[name](repeats=args.repeats)
         except Exception:
             traceback.print_exc()
             failed.append(name)
+            continue
+        cache = dispatch.driver_cache()
+        payload = {
+            "suite": name,
+            "env": environment_fingerprint(),
+            # per-suite deltas; driver_cache is end-of-suite *state* only
+            # (its hit/miss counters are process-cumulative, so they would
+            # read skewed next to the deltas)
+            "compile_count": dispatch.compile_count() - compiles0,
+            "launch_count": dispatch.launch_count() - launches0,
+            "driver_cache": {"size": len(cache), "maxsize": cache.maxsize},
+            "rows": common.ROWS[row_start:],
+        }
+        out = json_dir / f"BENCH_{name}.json"
+        out.write_text(json.dumps(payload, indent=2, default=str))
+        print(f"# wrote {out}", flush=True)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

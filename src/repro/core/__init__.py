@@ -3,8 +3,9 @@
 # building + elementwise/reduction generators + autotuning + lazy fused
 # arrays + a Copperhead-style DSL.  See DESIGN.md §2 for the GPU->TPU
 # mapping of each piece.
+from repro.core import dispatch
 from repro.core.autotune import Autotuner, BlockCost, TuneReport, measure_wallclock
-from repro.core.cache import DiskCache, environment_fingerprint, stable_hash
+from repro.core.cache import DiskCache, LRUCache, environment_fingerprint, stable_hash
 from repro.core.codebuilder import (Assign, Block, Comment, For, FunctionBody,
                                     FunctionDeclaration, If, Line, Module, Return)
 from repro.core.dsl import cu, op_add, op_max, op_min, op_mul
@@ -15,8 +16,9 @@ from repro.core.scan import ExclusiveScanKernel, InclusiveScanKernel, ScanKernel
 from repro.core.templates import KernelTemplate, render_string
 
 __all__ = [
+    "dispatch",
     "Autotuner", "BlockCost", "TuneReport", "measure_wallclock",
-    "DiskCache", "environment_fingerprint", "stable_hash",
+    "DiskCache", "LRUCache", "environment_fingerprint", "stable_hash",
     "Assign", "Block", "Comment", "For", "FunctionBody",
     "FunctionDeclaration", "If", "Line", "Module", "Return",
     "cu", "op_add", "op_max", "op_min", "op_mul",

@@ -13,13 +13,38 @@ and emits ONE fused elementwise kernel through the same RTCG machinery
 compiles exactly one generated kernel with no temporaries — the paper's
 expression-template argument, done at run time with trivial code.
 
+The **fusion planner** (`plan`) extends this across the map/reduce
+boundary: a DAG terminated by ``.sum()`` / ``.max()`` / ``.dot()``
+compiles into ONE generated `ReductionKernel` whose ``map_expr`` *is*
+the serialized elementwise chain — the loo.py-style map-reduce fusion.
+The planner's contract:
+
+  * DAG -> C snippet: leaves become positional vector args ``v0..vk``
+    (dtype-preserving, deduplicated by identity), embedded Python
+    scalars become positional scalar args ``s0..sj`` (so the compiled
+    kernel is reusable across scalar churn), interior nodes serialize
+    to infix/intrinsic C (`_Expr.collect`).
+  * Terminal reduce: the snippet is handed to `ReductionKernel` as
+    ``map_expr`` with the op's ``reduce_expr``/neutral — one kernel,
+    one launch, no intermediate array ever materialized.
+  * Generated *kernels* are content-cached on
+    ``stable_hash(snippet, leaf dtypes, scalar count, reduce_expr,
+    neutral, out dtype)`` — scalar values never enter the key, so an
+    isomorphic expression reuses the compiled kernel.  Planning itself
+    (DAG walk + snippet + hash) is re-done per call; it is a few
+    microseconds of pure Python, and launch-path cost then rides the
+    shape-bucketed drivers of `repro.core.dispatch`.
+
 Set ``repro.core.array.EAGER = True`` to force one-kernel-per-op
-execution (the baseline the fusion benchmark compares against).
+execution, or pass ``fuse=False`` to a reduction to run the unfused
+two-kernel path (evaluate, then reduce) — the baselines the fusion
+benchmark compares against.
 """
 
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax
@@ -82,6 +107,83 @@ class _Expr:
         if self.op == "scalar":
             return "S"
         return f"({self.op} {' '.join(c.structure() for c in self.children)})"
+
+
+@dataclass
+class FusionPlan:
+    """Executable product of the fusion planner (module docstring: contract).
+
+    ``snippet`` is the serialized DAG in the C dialect; ``leaves`` and
+    ``scalars`` are the positional arguments it references as ``v<j>[i]``
+    / ``s<j>``.  ``reduce_expr is None`` plans a pure elementwise kernel
+    (one launch, writes ``out``); otherwise the snippet becomes the
+    ``map_expr`` of a single generated `ReductionKernel` (one launch,
+    returns a scalar).  Generated kernels are content-cached on ``key``
+    (DAG structure x dtypes, never scalar values), so isomorphic plans
+    share one kernel.
+    """
+
+    snippet: str
+    leaves: list = field(default_factory=list)
+    scalars: list = field(default_factory=list)
+    out_dtype: Any = None
+    reduce_expr: str | None = None
+    neutral: str | None = None
+    key: str = ""
+
+    @property
+    def kernel_launches(self) -> int:
+        return 1  # the whole point: any plan is exactly one launch
+
+    def kernel(self):
+        """Build-or-fetch the one generated kernel realizing this plan."""
+        if self.reduce_expr is None:
+            kern = _kernel_cache.get(self.key)
+            if kern is None:
+                args = ([ScalarArg(jnp.float32, f"s{j}") for j in range(len(self.scalars))]
+                        + [VectorArg(a.dtype, f"v{j}") for j, a in enumerate(self.leaves)]
+                        + [VectorArg(self.out_dtype, "out")])
+                kern = ElementwiseKernel(args, f"out[i] = {self.snippet}",
+                                         name=f"fused_{self.key[:8]}")
+                _kernel_cache[self.key] = kern
+            return kern
+        kern = _reduce_cache.get(self.key)
+        if kern is None:
+            args = ([ScalarArg(jnp.float32, f"s{j}") for j in range(len(self.scalars))]
+                    + [VectorArg(a.dtype, f"v{j}") for j, a in enumerate(self.leaves)])
+            kern = ReductionKernel(self.out_dtype, self.neutral, self.reduce_expr,
+                                   self.snippet, args, name=f"fusedred_{self.key[:8]}")
+            _reduce_cache[self.key] = kern
+        return kern
+
+    def launch(self) -> jax.Array:
+        kern = self.kernel()
+        call_args = list(self.scalars) + list(self.leaves)
+        if self.reduce_expr is None:
+            call_args.append(self.leaves[0].astype(self.out_dtype))
+        return kern(*call_args)
+
+
+def plan(expr: _Expr, reduce_expr: str | None = None,
+         neutral: str | None = None) -> FusionPlan:
+    """Fusion planner: serialize an expression DAG into one kernel plan.
+
+    With ``reduce_expr`` the elementwise chain *becomes* the generated
+    reduction's ``map_expr`` — map+reduce in a single kernel launch.
+    """
+    leaves: list = []
+    scalars: list = []
+    snippet = expr.collect(leaves, scalars)
+    arrs = [a for a, _ in leaves]
+    if not arrs:
+        raise ValueError("expression has no array leaves")
+    out_dtype = jnp.result_type(*[a.dtype for a in arrs])
+    key = stable_hash((snippet, [str(a.dtype) for a in arrs], len(scalars),
+                       reduce_expr or "", neutral or "", str(out_dtype)))
+    return FusionPlan(snippet=snippet, leaves=arrs,
+                      scalars=[float(s) for s in scalars],
+                      out_dtype=out_dtype, reduce_expr=reduce_expr,
+                      neutral=neutral, key=key)
 
 
 def _as_expr(x) -> _Expr:
@@ -156,21 +258,7 @@ class RTCGArray:
         expr = self._expr
         if expr.op == "leaf":
             return expr.value
-        leaves: list = []
-        scalars: list = []
-        snippet = expr.collect(leaves, scalars)
-        out_dtype = jnp.result_type(*[a.dtype for a, _ in leaves])
-        key = stable_hash((snippet, [str(a.dtype) for a, _ in leaves],
-                           len(scalars), str(out_dtype)))
-        kern = _kernel_cache.get(key)
-        if kern is None:
-            args = ([ScalarArg(jnp.float32, f"s{j}") for j in range(len(scalars))]
-                    + [VectorArg(a.dtype, f"v{j}") for j, (a, _) in enumerate(leaves)]
-                    + [VectorArg(out_dtype, "out")])
-            kern = ElementwiseKernel(args, f"out[i] = {snippet}", name=f"fused_{key[:8]}")
-            _kernel_cache[key] = kern
-        call_args = list(scalars) + [a for a, _ in leaves] + [leaves[0][0].astype(out_dtype)]
-        return kern(*call_args)
+        return plan(expr).launch()
 
     def evaluate(self) -> "RTCGArray":
         if self._expr.op == "leaf":
@@ -185,34 +273,29 @@ class RTCGArray:
         return self.evaluate()._expr.value
 
     # -- fused reductions ---------------------------------------------------
-    def _reduce(self, neutral: str, reduce_expr: str) -> jax.Array:
-        expr = self._expr
-        leaves: list = []
-        scalars: list = []
-        snippet = expr.collect(leaves, scalars)
-        out_dtype = jnp.result_type(*[a.dtype for a, _ in leaves])
-        key = stable_hash((snippet, [str(a.dtype) for a, _ in leaves],
-                           len(scalars), reduce_expr, str(out_dtype)))
-        kern = _reduce_cache.get(key)
-        if kern is None:
-            args = ([ScalarArg(jnp.float32, f"s{j}") for j in range(len(scalars))]
-                    + [VectorArg(a.dtype, f"v{j}") for j, (a, _) in enumerate(leaves)])
-            kern = ReductionKernel(out_dtype, neutral, reduce_expr, snippet, args,
-                                   name=f"fusedred_{key[:8]}")
-            _reduce_cache[key] = kern
-        return kern(*(list(scalars) + [a for a, _ in leaves]))
+    def _reduce(self, neutral: str, reduce_expr: str, fuse: bool = True) -> jax.Array:
+        if not fuse and self._expr.op != "leaf":
+            # Unfused baseline: materialize the map (kernel 1), then
+            # reduce the temporary (kernel 2) — what an eager
+            # operator-overloading package would do.
+            return self.evaluate()._reduce(neutral, reduce_expr)
+        return plan(self._expr, reduce_expr=reduce_expr, neutral=neutral).launch()
 
-    def sum(self):
-        return self._reduce("0", "a+b")
+    def sum(self, fuse: bool = True):
+        return self._reduce("0", "a+b", fuse=fuse)
 
-    def max(self):
-        return self._reduce("-3.0e38", "fmaxf(a,b)")
+    def mean(self, fuse: bool = True):
+        n = int(np.prod(self.shape))
+        return self._reduce("0", "a+b", fuse=fuse) / n
 
-    def min(self):
-        return self._reduce("3.0e38", "fminf(a,b)")
+    def max(self, fuse: bool = True):
+        return self._reduce("-3.0e38", "fmaxf(a,b)", fuse=fuse)
 
-    def dot(self, other: "RTCGArray"):
-        return (self * other)._reduce("0", "a+b")
+    def min(self, fuse: bool = True):
+        return self._reduce("3.0e38", "fminf(a,b)", fuse=fuse)
+
+    def dot(self, other: "RTCGArray", fuse: bool = True):
+        return (self * other)._reduce("0", "a+b", fuse=fuse)
 
     def __repr__(self):
         tag = "lazy" if self._expr.op != "leaf" else "concrete"

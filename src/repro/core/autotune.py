@@ -17,6 +17,16 @@ Measurement backends (pluggable — see DESIGN.md §8.1):
   * ``analytic``  — a TPU roofline/VMEM cost model over the config, for
     TPU-targeted kernels in a CPU-only container where wall-clock would
     measure the interpreter, not the hardware.
+  * ``hybrid``    — the analytic model *pre-prunes* the candidate pool
+    (keeping the ``prune_keep`` cheapest, default ~1/3), then only the
+    survivors are wall-clock timed.  Tuning cost drops from
+    O(candidates) timings to O(survivors) while the model only has to
+    rank, not predict, absolute speed.
+
+Per-bucket tuning: pass ``signature_fn=dispatch.bucketed_signature`` so
+the cache key collapses exact array sizes to their power-of-two shape
+bucket — a winner tuned once transfers to every size in the bucket
+(kernels' ``.autotune()`` does this by default).
 """
 
 from __future__ import annotations
@@ -122,15 +132,19 @@ class Autotuner:
                  measure: str = "wallclock",
                  cost_fn: Callable[[dict, Sequence[Any]], BlockCost] | None = None,
                  cache: DiskCache | None = None,
-                 repeats: int = 5, warmup: int = 2):
+                 repeats: int = 5, warmup: int = 2,
+                 signature_fn: Callable[[Sequence[Any]], list] | None = None,
+                 prune_keep: int | None = None):
         self.name = name
         self.builder = builder
         self.measure = measure
         self.cost_fn = cost_fn
         self.cache = cache if cache is not None else tuning_cache
         self.repeats, self.warmup = repeats, warmup
-        if measure == "analytic" and cost_fn is None:
-            raise ValueError("analytic measurement requires cost_fn")
+        self.signature_fn = signature_fn or signature_of
+        self.prune_keep = prune_keep
+        if measure in ("analytic", "hybrid") and cost_fn is None:
+            raise ValueError(f"{measure} measurement requires cost_fn")
 
     def _score(self, params: dict, args: Sequence[Any]) -> float:
         if self.measure == "analytic":
@@ -138,9 +152,29 @@ class Autotuner:
         fn = self.builder(**params)
         return measure_wallclock(fn, args, repeats=self.repeats, warmup=self.warmup)
 
+    def _hybrid_survivors(self, candidates: Sequence[dict], args: Sequence[Any]
+                          ) -> tuple[list[dict], list[TuneResult]]:
+        """Rank all candidates analytically; return (to-time, pruned-results)."""
+        scored = []
+        for params in candidates:
+            try:
+                scored.append((self.cost_fn(params, args).seconds(), params))
+            except Exception as e:
+                scored.append((math.inf, params))
+        scored.sort(key=lambda t: t[0])
+        keep = self.prune_keep or max(2, len(candidates) // 3)
+        survivors = [p for s, p in scored[:keep] if math.isfinite(s)]
+        pruned = [TuneResult(params=p, score=s, ok=False,
+                             error="pruned by analytic model")
+                  for s, p in scored[len(survivors):]]
+        if not survivors:  # model rejected everything: fall back to timing all
+            return list(candidates), []
+        return survivors, pruned
+
     def tune(self, candidates: Sequence[dict], args: Sequence[Any],
              key_extra: Any = None, use_cache: bool = True) -> TuneReport:
-        key = self.cache.make_key(self.name, list(candidates), signature_of(args),
+        key = self.cache.make_key(self.name, list(candidates),
+                                  self.signature_fn(args),
                                   self.measure, key_extra)
         if use_cache:
             hit = self.cache.get(key)
@@ -149,7 +183,11 @@ class Autotuner:
                                   results=[TuneResult(**r) for r in hit["results"]],
                                   cached=True)
         results: list[TuneResult] = []
-        for params in candidates:
+        to_time: Sequence[dict] = candidates
+        if self.measure == "hybrid":
+            to_time, pruned = self._hybrid_survivors(candidates, args)
+            results.extend(pruned)
+        for params in to_time:
             try:
                 score = self._score(params, args)
                 results.append(TuneResult(params=params, score=score))

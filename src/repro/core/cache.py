@@ -16,8 +16,9 @@ import json
 import os
 import tempfile
 import threading
+from collections import OrderedDict
 from pathlib import Path
-from typing import Any
+from typing import Any, Callable
 
 
 def _default_cache_dir() -> Path:
@@ -131,6 +132,88 @@ class DiskCache:
                 p.unlink()
             except OSError:
                 pass
+
+
+class LRUCache:
+    """Bounded, thread-safe in-memory LRU for unserializable artifacts.
+
+    `DiskCache` persists JSON; compiled kernel *drivers* (closures over
+    jitted `pallas_call`s) cannot be serialized, so the dispatch engine
+    bounds them with this LRU instead — eviction means a later rebuild,
+    never wrong results.  Hit/miss/eviction counters are exposed for
+    tests and benchmark reports.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        if maxsize < 1:
+            raise ValueError("LRUCache maxsize must be >= 1")
+        self.maxsize = maxsize
+        self._data: OrderedDict[Any, Any] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Any, default: Any = None) -> Any:
+        with self._lock:
+            try:
+                val = self._data[key]
+            except KeyError:
+                self.misses += 1
+                return default
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key: Any, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def get_or_create(self, key: Any, factory: Callable[[], Any],
+                      on_create: Callable[[], None] | None = None) -> Any:
+        """Lookup, building+inserting via ``factory`` on miss.
+
+        The factory runs outside the lock (it may compile for seconds);
+        concurrent misses on the same key may build twice — harmless,
+        last write wins.
+        """
+        sentinel = object()
+        val = self.get(key, sentinel)
+        if val is sentinel:
+            val = factory()
+            if on_create is not None:
+                on_create()
+            self.put(key, val)
+        return val
+
+    def resize(self, maxsize: int) -> None:
+        with self._lock:
+            self.maxsize = max(1, maxsize)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key: Any) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"size": len(self._data), "maxsize": self.maxsize,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
 
 
 # Shared default caches.

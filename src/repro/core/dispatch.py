@@ -1,0 +1,176 @@
+"""Dispatch engine — shape-bucketed drivers + a low-overhead launch path.
+
+The paper's economics (Fig. 2) only work if a generated kernel is cheap
+to *re-launch*: compilation is amortized by the semi-permanent cache,
+so the steady state must be a dictionary lookup, not a re-trace.  The
+seed violated this for shape churn — every distinct element count ``n``
+built (template render + ``exec`` + ``jax.jit`` trace) a brand-new
+driver.  This module makes launch cost independent of shape churn.
+
+Bucketing math
+--------------
+An elementwise/reduction workload of ``n`` elements is laid out as
+``(rows, LANES)`` with ``rows = ceil(n / LANES)``.  Instead of
+compiling a driver for the exact ``rows``, we round up:
+
+1. ``rows`` -> next multiple of ``block_rows``   (grid must divide)
+2. that     -> next power of two                 (the *bucket*)
+
+so one compiled driver serves every ``n`` whose padded row count lands
+in the same bucket.  Correctness does not depend on the static bucket
+shape: inputs are zero-padded up to the bucket and the *runtime* ``n``
+(a traced scalar, not a static constant) masks or slices the result.
+An ``n`` sweep over a ``2x`` range therefore compiles at most
+``ceil(log2(range)) + 1`` drivers — the acceptance bound — and the
+waste is bounded: a bucket at most doubles the padded rows, and padded
+lanes cost only VPU time, never correctness.
+
+Driver cache
+------------
+Compiled drivers are closures over jitted ``pallas_call``s — they
+cannot go in the JSON `DiskCache`, so they live in a bounded in-memory
+`LRUCache` (`driver_cache()`), *shared* across `ElementwiseKernel`,
+`ReductionKernel` and `ScanKernel` instances.  Keys are
+content-addressed on the rendered source hash (two instances producing
+identical source share one driver).  Eviction merely costs a rebuild.
+
+Counters
+--------
+``compile_count()`` / ``launch_count()`` count driver builds and driver
+invocations process-wide; tests assert the bucketing bound through
+them and ``benchmarks/run.py`` records them per suite.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Callable, Sequence
+
+from repro.core.cache import LRUCache
+
+LANES = 128  # VPU lane count — single source of truth (elementwise re-exports)
+
+_DEFAULT_CACHE_SIZE = int(os.environ.get("REPRO_DRIVER_CACHE_SIZE", "256"))
+
+_driver_cache = LRUCache(maxsize=_DEFAULT_CACHE_SIZE)
+
+_counter_lock = threading.Lock()
+_compile_count = 0
+_launch_count = 0
+
+
+# ----------------------------------------------------------------- buckets
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    return 1 << (max(1, int(x)) - 1).bit_length()
+
+
+def bucket_rows(n: int, block_rows: int, lanes: int = LANES) -> int:
+    """Padded row count for ``n`` elements, rounded to its pow2 bucket.
+
+    Result is a multiple of ``block_rows`` (the grid must divide) and a
+    power of two whenever ``block_rows`` is one (it always is for the
+    tuner's candidate set).
+    """
+    rows = -(-n // lanes)
+    rows = -(-rows // block_rows) * block_rows
+    bucket = next_pow2(rows)
+    # block_rows not a power of two: keep divisibility over pow2-ness.
+    return -(-bucket // block_rows) * block_rows
+
+
+def n_bucket(n: int, lanes: int = LANES) -> int:
+    """Shape bucket of an element count, independent of block_rows.
+
+    Used as the per-bucket key for autotuning results: every ``n``
+    mapping to the same ``n_bucket`` shares one tuned configuration.
+    """
+    return next_pow2(-(-n // lanes))
+
+
+def default_block_rows(n: int, lanes: int = LANES, target_grid: int = 8,
+                       min_rows: int = 8, max_rows: int = 512) -> int:
+    """Bucket-derived default ``block_rows``: scale the block so the
+    sequential grid stays ~``target_grid`` steps (8-row blocks on a
+    100k-element reduction mean a 128-step grid — 5x slower than a
+    right-sized block).  Derived from `n_bucket`, never exact ``n``, so
+    every size in a bucket picks the same driver.  Explicit/instance/
+    tuned ``block_rows`` always override this."""
+    br = n_bucket(n, lanes) // target_grid
+    return max(min_rows, min(max_rows, br or min_rows))
+
+
+def bucketed_signature(args: Sequence[Any], lanes: int = LANES) -> list:
+    """Abstract input signature with sizes collapsed to their buckets.
+
+    Drop-in for `autotune.signature_of` as an Autotuner ``signature_fn``:
+    two argument lists whose arrays share dtypes and size *buckets*
+    produce the same tuning-cache key, so a winner tuned at ``n=5000``
+    transfers to ``n=5100`` without re-timing.
+    """
+    sig = []
+    for a in args:
+        shape = getattr(a, "shape", None)
+        dtype = getattr(a, "dtype", None)
+        if shape is not None:
+            size = 1
+            for d in shape:
+                size *= int(d)
+            sig.append(["bucket", n_bucket(max(1, size), lanes), str(dtype)])
+        else:
+            sig.append([type(a).__name__])
+    return sig
+
+
+# ------------------------------------------------------------ driver cache
+def driver_cache() -> LRUCache:
+    return _driver_cache
+
+
+def get_or_build(key: Any, builder: Callable[[], Callable]) -> Callable:
+    """Shared-LRU lookup; on miss, build + count one driver compile."""
+    return _driver_cache.get_or_create(key, builder, on_create=_record_compile)
+
+
+def _record_compile() -> None:
+    global _compile_count
+    with _counter_lock:
+        _compile_count += 1
+
+
+def record_launch() -> None:
+    global _launch_count
+    with _counter_lock:
+        _launch_count += 1
+
+
+def compile_count() -> int:
+    with _counter_lock:
+        return _compile_count
+
+
+def launch_count() -> int:
+    with _counter_lock:
+        return _launch_count
+
+
+def reset_counters() -> None:
+    """Zero the compile/launch counters (cache contents are kept)."""
+    global _compile_count, _launch_count
+    with _counter_lock:
+        _compile_count = 0
+        _launch_count = 0
+
+
+def clear() -> None:
+    """Drop all cached drivers and zero counters (tests/benchmarks)."""
+    _driver_cache.clear()
+    reset_counters()
+
+
+def stats() -> dict:
+    s = _driver_cache.stats()
+    s["compiles"] = compile_count()
+    s["launches"] = launch_count()
+    return s

@@ -16,6 +16,14 @@ Faithful API surface (both paper variants):
     lin_comb = ElementwiseKernel(
         [ScalarArg(x.dtype, "a"), VectorArg(x.dtype, "x"), ...],
         "z[i] = a*x[i] + b*y[i]")
+
+Launch path: ``__call__`` goes through `repro.core.dispatch` — element
+counts are rounded up to power-of-two row *buckets* so one compiled
+driver (shared process-wide in an LRU) serves every ``n`` in the
+bucket, and the hot path is a couple of integer ops plus a cache
+lookup: no argument re-parsing, no dict construction, no re-render.
+Per-bucket tuned ``block_rows`` (see `autotune`) are applied
+automatically when the call site does not pin one.
 """
 
 from __future__ import annotations
@@ -29,10 +37,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import snippets
+from repro.core import dispatch, snippets
+from repro.core.cache import stable_hash
 from repro.core.templates import KernelTemplate
 
-LANES = 128  # VPU lane count — the innermost slicing axis on TPU.
+LANES = dispatch.LANES  # VPU lane count — the innermost slicing axis on TPU.
 DEFAULT_BLOCK_ROWS = 8  # sublane count of a float32 VREG tile.
 
 
@@ -121,8 +130,17 @@ class ElementwiseKernel:
             raise ValueError(f"snippet writes undeclared vectors: {sorted(unknown)}")
         if not self.out_names:
             raise ValueError("elementwise snippet writes no vector (need e.g. 'z[i] = ...')")
-        self._fn_cache: dict[tuple, Any] = {}
         self._body_lines, self._loaded = self._translate()
+        # Launch fast path: everything derivable from the signature is
+        # precomputed here so __call__ does no per-call parsing.
+        names = [a.name for a in self.args]
+        self._first_vec_pos = names.index(self.vector_args[0].name)
+        self._arg_meta = tuple((a.name, a.jnp_dtype, isinstance(a, ScalarArg))
+                               for a in self.args)
+        self._out_dtypes = [dict((v.name, v.jnp_dtype) for v in self.vector_args)[o]
+                            for o in self.out_names]
+        self._src_keys: dict[int, str] = {}   # block_rows -> source hash
+        self._tuned: dict[int, int] = {}      # n_bucket -> tuned block_rows
 
     # -- codegen ----------------------------------------------------------
     def _translate(self) -> tuple[list[str], list[str]]:
@@ -174,58 +192,130 @@ class ElementwiseKernel:
         return src
 
     # -- driver -----------------------------------------------------------
-    def _build(self, n: int, block_rows: int):
-        """Build the padded/tiled pallas_call for a given element count."""
+    def _src_key(self, block_rows: int) -> str:
+        """Content key of the driver source for one block_rows (cached)."""
+        key = self._src_keys.get(block_rows)
+        if key is None:
+            key = stable_hash((self.render(block_rows),
+                               [str(d) for d in self._out_dtypes],
+                               [str(m[1]) for m in self._arg_meta],
+                               self.interpret))
+            self._src_keys[block_rows] = key
+        return key
+
+    def _build_driver(self, bucket: int, block_rows: int):
+        """Compile one driver serving every ``n`` with padded rows <= bucket.
+
+        The pallas_call is traced once over the static ``(bucket, LANES)``
+        shape; the element count only appears at run time (padding on
+        the way in, slicing on the way out), so the driver is reused
+        across the whole bucket.
+        """
         from repro.core.rtcg import SourceModule
 
-        rows = -(-n // LANES)
-        rows = -(-rows // block_rows) * block_rows
-        grid = rows // block_rows
+        grid = bucket // block_rows
         mod = SourceModule.load(self.render(block_rows), name=self.name)
         kernel = mod.get_function(f"{self.name}_kernel")
 
         blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
         scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
-        in_specs = [scl if isinstance(a, ScalarArg) else blk for a in self.args]
-        out_dtypes = {v.name: v.jnp_dtype for v in self.vector_args}
-        out_shape = [jax.ShapeDtypeStruct((rows, LANES), out_dtypes[o]) for o in self.out_names]
+        in_specs = [scl if is_s else blk for _, _, is_s in self._arg_meta]
+        out_shape = [jax.ShapeDtypeStruct((bucket, LANES), d) for d in self._out_dtypes]
 
-        call = pl.pallas_call(
+        call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
             in_specs=in_specs,
             out_specs=[blk] * len(self.out_names),
             out_shape=out_shape,
             interpret=self.interpret,
-        )
+        ))
+        padded_size = bucket * LANES
+        arg_meta = self._arg_meta
 
-        def driver(*flat_args):
+        def driver(n, flat_args):
             padded = []
-            for a, arg in zip(self.args, flat_args):
-                if isinstance(a, ScalarArg):
-                    padded.append(jnp.full((1, 1), arg, dtype=a.jnp_dtype))
+            for (name, dt, is_scalar), arg in zip(arg_meta, flat_args):
+                if is_scalar:
+                    padded.append(jnp.full((1, 1), arg, dtype=dt))
                 else:
-                    v = jnp.ravel(arg)
-                    v = jnp.pad(v, (0, rows * LANES - n)).reshape(rows, LANES)
-                    padded.append(v)
+                    v = jnp.ravel(jnp.asarray(arg))
+                    if v.size != n:  # padding must never hide a size bug
+                        raise ValueError(
+                            f"vector argument {name!r} has {v.size} elements, "
+                            f"expected {n} (size of the first vector argument)")
+                    if n != padded_size:
+                        v = jnp.pad(v, (0, padded_size - n))
+                    padded.append(v.reshape(bucket, LANES))
             outs = call(*padded)
             return [o.reshape(-1)[:n] for o in outs]
 
-        return jax.jit(driver)
+        return driver
+
+    def _pick_block_rows(self, n: int, block_rows: int | None) -> int:
+        if block_rows:
+            return block_rows
+        tuned = self._tuned.get(dispatch.n_bucket(n))
+        return tuned or self.block_rows or dispatch.default_block_rows(n)
 
     def __call__(self, *call_args, block_rows: int | None = None):
-        by_name = dict(zip([a.name for a in self.args], call_args))
-        first_vec = by_name[self.vector_args[0].name]
-        n = int(np.prod(first_vec.shape))
+        first_vec = call_args[self._first_vec_pos]
         shape = first_vec.shape
-        br = block_rows or self.block_rows or DEFAULT_BLOCK_ROWS
-        key = (n, br)
-        fn = self._fn_cache.get(key)
-        if fn is None:
-            fn = self._build(n, br)
-            self._fn_cache[key] = fn
-        outs = [o.reshape(shape) for o in fn(*call_args)]
+        n = int(getattr(first_vec, "size", 0)) or int(np.prod(shape))
+        br = self._pick_block_rows(n, block_rows)
+        bucket = dispatch.bucket_rows(n, br)
+        key = ("eltwise", self._src_key(br), bucket, br)
+        drv = dispatch.get_or_build(key, lambda: self._build_driver(bucket, br))
+        outs = [o.reshape(shape) for o in drv(n, call_args)]
+        dispatch.record_launch()  # after the driver: failed launches don't count
         return outs[0] if len(outs) == 1 else tuple(outs)
+
+    # -- tuning ------------------------------------------------------------
+    def block_cost(self, params: dict, args) -> "Any":
+        """Analytic `BlockCost` of one config — hybrid-mode pre-pruner."""
+        from repro.core.autotune import BlockCost
+
+        br = params["block_rows"]
+        first = args[self._first_vec_pos]
+        n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
+        bucket = dispatch.bucket_rows(n, br)
+        vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
+        return BlockCost(
+            flops=float(len(self._body_lines)) * bucket * LANES,
+            hbm_bytes=float(bucket * LANES * vec_bytes),
+            vmem_bytes=float(br * LANES * vec_bytes),
+            grid=bucket // br,
+        )
+
+    def autotune(self, *call_args, candidates: list[dict] | None = None,
+                 measure: str = "hybrid", cache=None, repeats: int = 3,
+                 warmup: int = 1, prune_keep: int | None = None):
+        """Tune ``block_rows`` for the *bucket* of these arguments.
+
+        The winner is recorded per `dispatch.n_bucket`, so it applies to
+        every later call whose size lands in the same bucket, and the
+        tuning-cache key uses `dispatch.bucketed_signature` so results
+        persist across exact-n churn too.
+        """
+        from repro.core.autotune import Autotuner
+
+        first = call_args[self._first_vec_pos]
+        n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
+        nb = dispatch.n_bucket(n)
+        cands = candidates or self.candidate_configs(n)
+        tuner = Autotuner(
+            f"eltwise.{self.name}",
+            builder=lambda block_rows: (lambda *a: self(*a, block_rows=block_rows)),
+            measure=measure,
+            cost_fn=self.block_cost,
+            cache=cache,
+            repeats=repeats, warmup=warmup,
+            signature_fn=dispatch.bucketed_signature,
+            prune_keep=prune_keep,
+        )
+        report = tuner.tune(cands, call_args, key_extra=("n_bucket", nb))
+        self._tuned[nb] = report.best["block_rows"]
+        return report
 
     # candidate block_rows values for the autotuner
     @staticmethod

@@ -6,9 +6,11 @@ realization is a two-stage tree reduction over thread blocks; the TPU
 realization exploits that grid iterations on a TensorCore execute
 *sequentially*, so a single kernel can accumulate block partials into an
 SMEM-resident (1,1) output across grid steps — the canonical Pallas
-reduction idiom.  Padding lanes are masked with the neutral element,
-with the element count baked into the generated source (run-time
-specialization, paper §4.2).
+reduction idiom.  Padding lanes are masked with the neutral element
+against the *runtime* element count ``_n`` (passed as a (1,1) scalar,
+not baked into the source), so one compiled driver serves a whole
+power-of-two shape bucket — see `repro.core.dispatch` for the
+bucketing math and the shared driver LRU.
 
     dot = ReductionKernel(np.float32, neutral="0",
                           reduce_expr="a+b", map_expr="x[i]*y[i]",
@@ -18,17 +20,14 @@ specialization, paper §4.2).
 from __future__ import annotations
 
 import re
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import snippets
-from repro.core.elementwise import (DEFAULT_BLOCK_ROWS, LANES, ScalarArg,
-                                    VectorArg, _canonical, _parse_arguments,
-                                    on_tpu)
+from repro.core.elementwise import (LANES, ScalarArg, VectorArg, _canonical,
+                                    _parse_arguments, on_tpu)
 from repro.core.templates import KernelTemplate
 
 # Recognized whole-block reducers (fast path); anything else raises.
@@ -45,7 +44,8 @@ _BLOCK_REDUCERS = {
 _KERNEL_TMPL = KernelTemplate(
     "reduction",
     '''
-def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}o_ref):
+def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}o_ref):
+    _n = _n_ref[0, 0]
 {% for s in scalar_names %}
     {{ s }} = {{ s }}_ref[0, 0]
 {% endfor %}
@@ -56,7 +56,7 @@ def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}o_ref):
     {{ v }} = {{ v }}_ref[...]
 {% endfor %}
     _mapped = jnp.asarray({{ map_expr }}).astype(jnp.{{ out_dtype }})
-    _mapped = jnp.where(i < {{ n }}, _mapped, jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}))
+    _mapped = jnp.where(i < _n, _mapped, jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}))
     _partial = {{ block_reduce }}(_mapped)
     _prev = jnp.where(pl.program_id(0) == 0,
                       jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}),
@@ -89,9 +89,13 @@ class ReductionKernel:
         self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
         if not self.vector_args:
             raise ValueError("reduction needs at least one vector argument")
-        self._fn_cache: dict[tuple, Any] = {}
+        names = [a.name for a in self.args]
+        self._first_vec_pos = names.index(self.vector_args[0].name)
+        self._arg_meta = tuple((a.name, a.jnp_dtype, isinstance(a, ScalarArg))
+                               for a in self.args)
+        self._src_keys: dict[int, str] = {}
 
-    def render(self, n: int, block_rows: int) -> str:
+    def render(self, block_rows: int) -> str:
         mapped = snippets.translate_expression(self.map_expr)
         combine = (f"_prev {self._combine_op} _partial" if self._combine_op in ("+", "*")
                    else f"{self._combine_op}(_prev, _partial)")
@@ -107,53 +111,73 @@ class ReductionKernel:
             combine=combine,
             neutral=self.neutral,
             out_dtype=str(self.dtype_out),
-            n=n,
             block_rows=block_rows,
             lanes=LANES,
         )
         return (self.preamble + "\n" + src) if self.preamble else src
 
-    def _build(self, n: int, block_rows: int):
+    def _src_key(self, block_rows: int) -> str:
+        key = self._src_keys.get(block_rows)
+        if key is None:
+            from repro.core.cache import stable_hash
+
+            key = stable_hash((self.render(block_rows),
+                               [str(m[1]) for m in self._arg_meta],
+                               str(self.dtype_out), self.interpret))
+            self._src_keys[block_rows] = key
+        return key
+
+    def _build_driver(self, bucket: int, block_rows: int):
+        """One driver per (source, bucket): the element count is a runtime
+        scalar feeding the in-kernel neutral mask, so any ``n`` whose
+        padded rows fit the bucket reuses this compile."""
         from repro.core.rtcg import SourceModule
 
-        rows = -(-n // LANES)
-        rows = -(-rows // block_rows) * block_rows
-        grid = rows // block_rows
-        mod = SourceModule.load(self.render(n, block_rows), name=self.name)
+        grid = bucket // block_rows
+        mod = SourceModule.load(self.render(block_rows), name=self.name)
         kernel = mod.get_function(f"{self.name}_kernel")
 
         blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
         scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
-        in_specs = [scl if isinstance(a, ScalarArg) else blk for a in self.args]
-        call = pl.pallas_call(
+        in_specs = [scl] + [scl if is_s else blk for _, _, is_s in self._arg_meta]
+        call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0)),
             out_shape=jax.ShapeDtypeStruct((1, 1), self.dtype_out),
             interpret=self.interpret,
-        )
+        ))
+        padded_size = bucket * LANES
+        arg_meta = self._arg_meta
 
-        def driver(*flat_args):
-            padded = []
-            for a, arg in zip(self.args, flat_args):
-                if isinstance(a, ScalarArg):
-                    padded.append(jnp.full((1, 1), arg, dtype=a.jnp_dtype))
+        def driver(n, flat_args):
+            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+            for (name, dt, is_scalar), arg in zip(arg_meta, flat_args):
+                if is_scalar:
+                    padded.append(jnp.full((1, 1), arg, dtype=dt))
                 else:
-                    v = jnp.ravel(arg)
-                    v = jnp.pad(v, (0, rows * LANES - n)).reshape(rows, LANES)
-                    padded.append(v)
+                    v = jnp.ravel(jnp.asarray(arg))
+                    if v.size != n:  # padding must never hide a size bug
+                        raise ValueError(
+                            f"vector argument {name!r} has {v.size} elements, "
+                            f"expected {n} (size of the first vector argument)")
+                    if n != padded_size:
+                        v = jnp.pad(v, (0, padded_size - n))
+                    padded.append(v.reshape(bucket, LANES))
             return call(*padded)[0, 0]
 
-        return jax.jit(driver)
+        return driver
 
     def __call__(self, *call_args, block_rows: int | None = None):
-        by_name = dict(zip([a.name for a in self.args], call_args))
-        n = int(np.prod(by_name[self.vector_args[0].name].shape))
-        br = block_rows or self.block_rows or DEFAULT_BLOCK_ROWS
-        key = (n, br)
-        fn = self._fn_cache.get(key)
-        if fn is None:
-            fn = self._build(n, br)
-            self._fn_cache[key] = fn
-        return fn(*call_args)
+        from repro.core import dispatch
+
+        first_vec = call_args[self._first_vec_pos]
+        n = int(getattr(first_vec, "size", 0)) or int(np.prod(first_vec.shape))
+        br = block_rows or self.block_rows or dispatch.default_block_rows(n)
+        bucket = dispatch.bucket_rows(n, br)
+        key = ("reduce", self._src_key(br), bucket, br)
+        drv = dispatch.get_or_build(key, lambda: self._build_driver(bucket, br))
+        out = drv(n, call_args)
+        dispatch.record_launch()  # after the driver: failed launches don't count
+        return out

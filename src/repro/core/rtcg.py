@@ -15,13 +15,19 @@ from __future__ import annotations
 
 import functools
 import linecache
+import os
 import threading
 from typing import Any, Callable
 
-from repro.core.cache import stable_hash
+from repro.core.cache import LRUCache, stable_hash
 
-_module_registry: dict[str, "SourceModule"] = {}
-_registry_lock = threading.Lock()
+# Bounded: identity-keyed namespace tokens mean loads with fresh (even
+# equal) value objects mint new entries, so an unbounded dict would leak
+# one exec'd module per call in pathological loops.  Eviction is safe —
+# worst case a re-exec; an evicted entry's key can never produce a stale
+# hit because the entry is gone with its values.
+_module_registry: LRUCache = LRUCache(
+    maxsize=int(os.environ.get("REPRO_MODULE_REGISTRY_SIZE", "512")))
 
 
 def _default_namespace() -> dict[str, Any]:
@@ -85,14 +91,22 @@ class SourceModule:
 
     @classmethod
     def load(cls, source: str, namespace: dict | None = None, name: str | None = None) -> "SourceModule":
-        """Content-addressed load: identical source -> same module object."""
-        key = stable_hash(source) + ("" if namespace is None else stable_hash(sorted(namespace)))
-        with _registry_lock:
-            mod = _module_registry.get(key)
-            if mod is None:
-                mod = cls(source, namespace=namespace, name=name)
-                _module_registry[key] = mod
-            return mod
+        """Content-addressed load: identical source + namespace -> same module.
+
+        The namespace token hashes keys AND value *identities* (``id``),
+        so two loads binding the same names to different objects never
+        collide — ``repr`` would be lossy here (e.g. large numpy arrays
+        truncate to identical strings).  Identity is stable because the
+        registered module's namespace keeps every value alive, so a live
+        entry's ids can never be reused.  Equal-but-distinct values get
+        duplicate modules — conservative in the safe direction (never a
+        wrong module).
+        """
+        key = stable_hash(source) + ("" if namespace is None else
+                                     stable_hash(sorted((k, f"{type(v).__name__}@{id(v)}")
+                                                        for k, v in namespace.items())))
+        return _module_registry.get_or_create(
+            key, lambda: cls(source, namespace=namespace, name=name))
 
     def get_function(self, name: str) -> Callable:
         try:
@@ -131,12 +145,10 @@ def _jit_cached(key, name, fn, frozen_kwargs, *args, **kwargs):
 
 
 def registry_size() -> int:
-    with _registry_lock:
-        return len(_module_registry)
+    return len(_module_registry)
 
 
 def clear_registry() -> None:
-    with _registry_lock:
-        _module_registry.clear()
+    _module_registry.clear()
     with _jit_lock:
         _jit_table.clear()

@@ -9,15 +9,15 @@ scan, both passes generated from templates:
   pass 2: add each block's carry offset
 
 Like ReductionKernel, the combine operator comes from a C-like snippet
-("a+b", "fmaxf(a,b)") and the element count is baked into the generated
-source (run-time specialization).
+("a+b", "fmaxf(a,b)").  The generated source is element-count free;
+drivers are compiled per power-of-two *grid bucket* (`repro.core.dispatch`)
+with neutral-element padding on the way in and slicing on the way out,
+and shared across instances through the dispatch LRU.
 """
 
 from __future__ import annotations
 
 import re
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -91,28 +91,43 @@ class ScanKernel:
         self.exclusive = exclusive
         self.block_n = block_n
         self.interpret = (not on_tpu()) if interpret is None else interpret
-        self._cache: dict[tuple, Any] = {}
+        self._src_key_cache: str | None = None
 
     def _binop_apply(self, a: str, b: str) -> str:
         if self.binop in ("+", "*"):
             return f"({a} {self.binop} {b})"
         return f"{self.binop}({a}, {b})"
 
-    def _build(self, n: int):
-        from repro.core.rtcg import SourceModule
-
-        bn = self.block_n
-        pn = -(-n // bn) * bn
-        grid = pn // bn
-        dt = self.dtype
-
-        src1 = _PASS1_TMPL.render(name=f"{self.name}_p1", dtype=str(dt),
+    def _render_passes(self) -> tuple[str, str]:
+        src1 = _PASS1_TMPL.render(name=f"{self.name}_p1", dtype=str(self.dtype),
                                   cumop=self.cumop)
-        k1 = SourceModule.load(src1).get_function(f"{self.name}_p1")
         src2 = _PASS2_TMPL.render(
             name=f"{self.name}_p2", exclusive=self.exclusive,
             binop_expr=self._binop_apply("y", "off"),
             combine=self._binop_apply("y_ref[...]", "off"))
+        return src1, src2
+
+    def _src_key(self) -> str:
+        if self._src_key_cache is None:
+            from repro.core.cache import stable_hash
+
+            self._src_key_cache = stable_hash((*self._render_passes(),
+                                               str(self.dtype), self.block_n,
+                                               self.neutral, self.interpret))
+        return self._src_key_cache
+
+    def _build_driver(self, grid: int):
+        """One driver per (source, grid bucket): padding with the neutral
+        element makes the tail blocks no-ops, so any ``n`` needing at
+        most ``grid`` blocks reuses this compile."""
+        from repro.core.rtcg import SourceModule
+
+        bn = self.block_n
+        pn = grid * bn
+        dt = self.dtype
+
+        src1, src2 = self._render_passes()
+        k1 = SourceModule.load(src1).get_function(f"{self.name}_p1")
         k2 = SourceModule.load(src2).get_function(f"{self.name}_p2")
 
         row = pl.BlockSpec((1, bn), lambda i: (i, 0))
@@ -128,35 +143,50 @@ class ScanKernel:
             interpret=self.interpret)
 
         neutral = self.neutral
+        binop = self.binop
 
-        def driver(x):
-            xf = jnp.ravel(x).astype(dt)
-            xp = jnp.pad(xf, (0, pn - n),
-                         constant_values=np.asarray(neutral, dt)).reshape(grid, bn)
+        @jax.jit
+        def core(xp):
             partial, totals = p1(xp)
-            # tiny host-side exclusive combine over block totals
-            if self.binop == "+":
+            # tiny exclusive combine over block totals
+            if binop == "+":
                 carry = jnp.cumsum(totals[:, 0]) - totals[:, 0]
                 carry = carry + jnp.asarray(neutral, dt)
-            elif self.binop == "*":
-                carry = jnp.cumprod(totals[:, 0]) / totals[:, 0]
+            elif binop == "*":
+                # exclusive product via shift, NOT cumprod/totals division
+                # (a zero block total would make that 0/0 = NaN)
+                shifted = jnp.concatenate(
+                    [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
+                carry = jnp.cumprod(shifted)
             else:
-                fn = jax.lax.cummax if "max" in self.binop else jax.lax.cummin
+                fn = jax.lax.cummax if "max" in binop else jax.lax.cummin
                 shifted = jnp.concatenate(
                     [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
                 carry = fn(shifted)
-            out = p2(partial, carry[:, None])
+            return p2(partial, carry[:, None])
+
+        def driver(n, x):
+            xf = jnp.ravel(jnp.asarray(x)).astype(dt)
+            if int(xf.size) != pn:
+                xp = jnp.pad(xf, (0, pn - int(xf.size)),
+                             constant_values=np.asarray(neutral, dt))
+            else:
+                xp = xf
+            out = core(xp.reshape(grid, bn))
             return out.reshape(-1)[:n]
 
-        return jax.jit(driver)
+        return driver
 
     def __call__(self, x):
-        n = int(np.prod(x.shape))
-        fn = self._cache.get(n)
-        if fn is None:
-            fn = self._build(n)
-            self._cache[n] = fn
-        return fn(x).reshape(x.shape)
+        from repro.core import dispatch
+
+        n = int(getattr(x, "size", 0)) or int(np.prod(x.shape))
+        grid = dispatch.next_pow2(-(-n // self.block_n))
+        key = ("scan", self._src_key(), grid)
+        drv = dispatch.get_or_build(key, lambda: self._build_driver(grid))
+        out = drv(n, x).reshape(x.shape)
+        dispatch.record_launch()  # after the driver: failed launches don't count
+        return out
 
 
 def InclusiveScanKernel(dtype, scan_expr, **kw):

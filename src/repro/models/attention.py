@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.sharding.partition import shard_map
 
 NEG_INF = -1e30
 
@@ -195,7 +196,7 @@ def kv_sharded_decode_attention(cfg: ModelConfig, ctx, q, k_cache, v_cache,
         o = lax.psum(o_loc, "model") / jnp.maximum(l, 1e-30)[..., None]
         return o.reshape(b, 1, H, dh).astype(q_l.dtype), k_l, v_l
 
-    out, k_cache, v_cache = jax.shard_map(
+    out, k_cache, v_cache = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(qspec, cspec, cspec, qspec, qspec, P()),
         out_specs=(qspec, cspec, cspec),

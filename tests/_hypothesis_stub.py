@@ -1,0 +1,44 @@
+"""Fallback shims for ``hypothesis`` so the suite runs without it.
+
+Property tests are the icing, not the cake: when hypothesis is absent
+the ``given``-decorated tests collect as zero-argument tests that skip
+with a clear reason, and everything else runs normally.  Import as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_stub import given, settings, st
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def decorate(fn):
+        def skipped():
+            pytest.skip("hypothesis not installed; property test skipped")
+
+        skipped.__name__ = fn.__name__
+        skipped.__doc__ = fn.__doc__
+        return skipped
+
+    return decorate
+
+
+def settings(*_args, **_kwargs):
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+class _AnyStrategy:
+    """Accepts any strategy constructor call and returns a placeholder."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _AnyStrategy()

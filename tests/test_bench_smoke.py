@@ -1,0 +1,40 @@
+"""CI smoke for the benchmark harness (marked slow).
+
+Runs ``benchmarks.run --only fusion`` in a subprocess on small sizes and
+checks the machine-readable BENCH_fusion.json contract: rows carry
+(name, us_per_call) plus launch bookkeeping, and the fused map-reduce
+path really is one generated-kernel launch vs two unfused.
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_fusion_suite_emits_json(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fusion",
+         "--repeats", "1", "--sizes", "20000", "--json-dir", str(tmp_path)],
+        cwd=str(REPO), env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+
+    out = tmp_path / "BENCH_fusion.json"
+    assert out.exists(), "BENCH_fusion.json not written"
+    payload = json.loads(out.read_text())
+    assert payload["suite"] == "fusion"
+    assert payload["compile_count"] >= 1 and payload["launch_count"] >= 1
+    rows = {r["name"]: r for r in payload["rows"]}
+    fused = rows["fusion.n20000.mapreduce_fused"]
+    unfused = rows["fusion.n20000.mapreduce_unfused"]
+    assert fused["kernels_launched"] == 1
+    assert unfused["kernels_launched"] == 2
+    assert fused["us_per_call"] > 0 and "speedup" in fused

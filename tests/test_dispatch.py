@@ -1,0 +1,206 @@
+"""Dispatch engine + fusion planner tests (the launch-path contract).
+
+Covers: bucketing math, driver reuse across shape churn (the
+``<= ceil(log2(range)) + 1`` acceptance bound), cross-instance driver
+sharing, LRU eviction bounding the cache, runtime-n masking in
+reductions, DAG map-reduce fusion vs NumPy, and hybrid autotuning.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro.core.array as ga
+from repro.core import dispatch
+from repro.core.cache import DiskCache, LRUCache
+from repro.core.elementwise import ElementwiseKernel
+from repro.core.reduction import ReductionKernel
+from repro.core.scan import InclusiveScanKernel
+
+rng = np.random.default_rng(7)
+
+
+# ------------------------------------------------------------ bucket math
+def test_next_pow2():
+    assert [dispatch.next_pow2(x) for x in (1, 2, 3, 7, 8, 9, 1000)] == \
+        [1, 2, 4, 8, 8, 16, 1024]
+
+
+@pytest.mark.parametrize("block_rows", [8, 32, 128])
+def test_bucket_rows_properties(block_rows):
+    prev = 0
+    for n in (1, 127, 128, 129, 4096, 100_000, 999_999):
+        b = dispatch.bucket_rows(n, block_rows)
+        assert b % block_rows == 0                      # grid divides
+        assert b * dispatch.LANES >= n                  # fits the data
+        assert b & (b - 1) == 0                         # power of two
+        assert b >= prev                                # monotone in n
+        prev = b
+
+
+def test_n_bucket_collapses_a_2x_range():
+    buckets = {dispatch.n_bucket(n) for n in range(4096 * 128, 8192 * 128, 4096)}
+    assert len(buckets) <= 2
+
+
+# ------------------------------------------------- driver reuse / sharing
+def test_shape_churn_compiles_log_many_drivers():
+    """64 calls with n sweeping a 2x range -> <= ceil(log2(2)) + 1 drivers."""
+    k = ElementwiseKernel("float *o, float *v", "o[i] = 3*v[i] - 1")
+    c0 = dispatch.compile_count()
+    for n in np.linspace(4096, 8191, 64).astype(int):
+        v = jnp.asarray(rng.standard_normal(int(n)).astype(np.float32))
+        np.testing.assert_allclose(k(v, v), 3 * v - 1, rtol=1e-5, atol=1e-5)
+    assert dispatch.compile_count() - c0 <= 2
+
+
+def test_identical_kernels_share_drivers():
+    src_args = ("float *o, float *v", "o[i] = v[i] * v[i]")
+    a, b = ElementwiseKernel(*src_args), ElementwiseKernel(*src_args)
+    v = jnp.asarray(rng.standard_normal(3000).astype(np.float32))
+    a(v, v)
+    c0 = dispatch.compile_count()
+    np.testing.assert_allclose(b(v, v), v * v, rtol=1e-5)
+    assert dispatch.compile_count() == c0  # second instance: pure cache hit
+
+
+def test_reduction_runtime_n_mask_across_bucket():
+    """One reduction driver serves many n; the runtime mask keeps padding
+    out of the result for every one of them."""
+    dot = ReductionKernel(np.float32, "0", "a+b", "x[i]*y[i]",
+                          "float *x, float *y")
+    c0 = dispatch.compile_count()
+    for n in (2049, 2500, 3000, 3500, 4096):
+        x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        y = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        assert float(dot(x, y)) == pytest.approx(float(x @ y), abs=5e-2)
+    assert dispatch.compile_count() - c0 <= 1  # all n share one bucket
+
+
+def test_scan_bucketed_across_sizes():
+    cumsum = InclusiveScanKernel(np.float32, "a+b")
+    c0 = dispatch.compile_count()
+    for n in (100, 3000, 4096, 5000, 8000):
+        v = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        np.testing.assert_allclose(cumsum(v), jnp.cumsum(v),
+                                   rtol=1e-4, atol=1e-3)
+    # 100..4096 share the 1-block bucket; 5000/8000 the 2-block bucket
+    assert dispatch.compile_count() - c0 <= 2
+
+
+# ------------------------------------------------------------ LRU bounds
+def test_lru_cache_unit():
+    c = LRUCache(maxsize=2)
+    c.put("a", 1); c.put("b", 2)
+    assert c.get("a") == 1          # refresh a
+    c.put("c", 3)                   # evicts b (LRU)
+    assert len(c) == 2 and "b" not in c and "a" in c and "c" in c
+    assert c.evictions == 1 and c.get("b", "gone") == "gone"
+
+
+def test_driver_lru_eviction_bounds_cache_and_rebuilds(monkeypatch):
+    monkeypatch.setattr(dispatch, "_driver_cache", LRUCache(maxsize=2))
+    v = jnp.asarray(rng.standard_normal(500).astype(np.float32))
+    kernels = [ElementwiseKernel("float *o, float *v", f"o[i] = v[i] + {j}")
+               for j in range(4)]
+    for j, k in enumerate(kernels):
+        np.testing.assert_allclose(k(v, v), v + j, rtol=1e-5)
+    assert len(dispatch.driver_cache()) <= 2
+    assert dispatch.driver_cache().evictions >= 2
+    # evicted driver rebuilds transparently and stays correct
+    c0 = dispatch.compile_count()
+    np.testing.assert_allclose(kernels[0](v, v), v + 0, rtol=1e-5)
+    assert dispatch.compile_count() == c0 + 1
+
+
+def test_multiplicative_scan_with_zero_block_total():
+    """cumprod carry must not divide by a zero block product (NaN bug)."""
+    cumprod = InclusiveScanKernel(np.float32, "a*b")
+    v = np.full(10_000, 1.0001, np.float32)  # > block_n: multi-block carry
+    v[100] = 0.0                             # zeroes block 0's total
+    got = np.asarray(cumprod(jnp.asarray(v)))
+    ref = np.cumprod(v, dtype=np.float64).astype(np.float32)
+    assert np.isfinite(got).all()
+    np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-6)
+
+
+def test_mismatched_vector_lengths_raise():
+    """Bucket padding must never silently zero-fill a short argument."""
+    k = ElementwiseKernel("float *z, float *x, float *y", "z[i] = x[i] + y[i]")
+    x = jnp.ones(1000, jnp.float32)
+    short = jnp.ones(400, jnp.float32)
+    with pytest.raises(ValueError, match="expected 1000"):
+        k(x, x, short)
+    dot = ReductionKernel(np.float32, "0", "a+b", "x[i]*y[i]",
+                          "float *x, float *y")
+    with pytest.raises(ValueError, match="'y' has 400"):
+        dot(x, short)
+
+
+# --------------------------------------------------- DAG map-reduce fusion
+def test_fused_mapreduce_matches_numpy_single_launch():
+    x = rng.standard_normal(3001).astype(np.float32)
+    y = rng.standard_normal(3001).astype(np.float32)
+    X, Y = ga.to_gpu(x), ga.to_gpu(y)
+
+    l0 = dispatch.launch_count()
+    got = float((X * 2 + Y * 3 - ga.exp(X)).sum())
+    assert dispatch.launch_count() - l0 == 1    # ONE generated kernel
+    ref = float(np.sum(2 * x + 3 * y - np.exp(x)))
+    assert got == pytest.approx(ref, rel=1e-4)
+
+    l0 = dispatch.launch_count()
+    got_unfused = float((X * 2 + Y * 3 - ga.exp(X)).sum(fuse=False))
+    assert dispatch.launch_count() - l0 == 2    # map, then reduce
+    assert got_unfused == pytest.approx(ref, rel=1e-4)
+
+
+def test_fused_mapreduce_max_min_dot_mean():
+    x = rng.standard_normal(2050).astype(np.float32)
+    y = rng.standard_normal(2050).astype(np.float32)
+    X, Y = ga.to_gpu(x), ga.to_gpu(y)
+    assert float((X * X).max()) == pytest.approx(float(np.max(x * x)), rel=1e-5)
+    assert float((X + Y).min()) == pytest.approx(float(np.min(x + y)), rel=1e-4)
+    assert float(X.dot(Y)) == pytest.approx(float(x @ y), abs=2e-2)
+    assert float((2 * X).mean()) == pytest.approx(float(np.mean(2 * x)), abs=1e-4)
+
+
+def test_fusion_planner_contract():
+    x = rng.standard_normal(100).astype(np.float32)
+    X = ga.to_gpu(x)
+    expr = (2 * X + 1)._expr
+    p = ga.plan(expr, reduce_expr="a+b", neutral="0")
+    assert p.kernel_launches == 1
+    assert p.snippet.count("v0") >= 1 and len(p.scalars) == 2
+    # isomorphic DAG (different scalar values) -> same generated kernel
+    p2 = ga.plan((5 * X + 9)._expr, reduce_expr="a+b", neutral="0")
+    assert p2.key == p.key
+    # ... but a different neutral element is a different kernel
+    p3 = ga.plan((5 * X + 9)._expr, reduce_expr="a+b", neutral="100")
+    assert p3.key != p.key
+    n0 = len(ga._reduce_cache)
+    p.launch(); p2.launch()
+    assert len(ga._reduce_cache) == n0 + 1
+
+
+# ------------------------------------------------------- hybrid autotune
+def test_hybrid_autotune_prunes_and_transfers_across_bucket(tmp_path):
+    k = ElementwiseKernel("float *o, float *v", "o[i] = 2*v[i] + 1")
+    cache = DiskCache("tune", root=tmp_path)
+    v = jnp.asarray(rng.standard_normal(100_000).astype(np.float32))
+    rep = k.autotune(v, v, cache=cache, repeats=1, warmup=1)
+    pruned = [r for r in rep.results if r.error == "pruned by analytic model"]
+    timed = [r for r in rep.results if r.ok]
+    assert timed and pruned                      # model pruned, clock decided
+    assert rep.best in [r.params for r in timed]
+    assert k._tuned[dispatch.n_bucket(100_000)] == rep.best["block_rows"]
+    # same bucket, different exact n -> tuning-cache hit, no re-timing
+    v2 = jnp.asarray(rng.standard_normal(98_304).astype(np.float32))
+    rep2 = k.autotune(v2, v2, cache=cache, repeats=1, warmup=1)
+    assert rep2.cached and rep2.best == rep.best
+
+
+def test_autotuner_hybrid_requires_cost_fn():
+    from repro.core.autotune import Autotuner
+    with pytest.raises(ValueError):
+        Autotuner("x", builder=lambda **kw: (lambda: None), measure="hybrid")

@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.kernels.matmul.matmul import pallas_matmul
 from repro.kernels.matmul.ref import matmul_ref

@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (Assign, Block, ElementwiseKernel, FunctionBody,
                         FunctionDeclaration, KernelTemplate, Module,
@@ -27,6 +30,28 @@ def test_sourcemodule_content_addressed():
     a = SourceModule.load(src)
     b = SourceModule.load(src)
     assert a is b  # identical source -> one module (the compiler cache)
+
+
+def test_sourcemodule_load_namespace_values_no_collision():
+    """Same source + same namespace KEYS but different VALUES must not
+    collide in the content-addressed registry (seed bug: only keys were
+    hashed)."""
+    src = "def g():\n    return helper()\n"
+    a = SourceModule.load(src, namespace={"helper": lambda: 1})
+    b = SourceModule.load(src, namespace={"helper": lambda: 2})
+    assert a is not b
+    assert a.get_function("g")() == 1
+    assert b.get_function("g")() == 2
+    # values whose reprs truncate identically (big arrays) must not alias
+    v1, v2 = np.zeros(2000, np.float32), np.zeros(2000, np.float32)
+    v2[1000] = 42.0
+    src2 = "def h():\n    return float(helper[1000])\n"
+    m1 = SourceModule.load(src2, namespace={"helper": v1})
+    m2 = SourceModule.load(src2, namespace={"helper": v2})
+    assert m1.get_function("h")() == 0.0
+    assert m2.get_function("h")() == 42.0
+    # the very same objects -> same module (cache still hits)
+    assert SourceModule.load(src2, namespace={"helper": v1}) is m1
 
 
 def test_sourcemodule_missing_function():

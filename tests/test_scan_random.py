@@ -3,7 +3,10 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # property tests skip without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import ExclusiveScanKernel, InclusiveScanKernel
 from repro.core import curandom
