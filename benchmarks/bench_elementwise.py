@@ -13,9 +13,9 @@ from repro.core import dispatch
 
 
 def _count_launches(fn) -> int:
-    before = dispatch.launch_count()
-    fn()
-    return dispatch.launch_count() - before
+    with dispatch.count_launches() as c:
+        fn()
+    return c.delta
 
 
 def run(repeats: int = 5, sizes=(100_000, 1_000_000)):
@@ -47,11 +47,12 @@ def run(repeats: int = 5, sizes=(100_000, 1_000_000)):
              kernels_launched=k_eager)
 
         # ---- DAG-level map-reduce fusion: .sum() is ONE ReductionKernel
+        # (reductions are lazy since planner v2 — .value forces the launch)
         def fused_sum():
-            return (2 * X + 3 * Y - ga.exp(X)).sum()
+            return (2 * X + 3 * Y - ga.exp(X)).sum().value
 
         def unfused_sum():
-            return (2 * X + 3 * Y - ga.exp(X)).sum(fuse=False)
+            return (2 * X + 3 * Y - ga.exp(X)).sum(fuse=False).value
 
         fused_sum(); unfused_sum()  # warm the driver cache
         k_fused = _count_launches(fused_sum)

@@ -1,0 +1,61 @@
+"""Fusion planner v2 claim: a reduction feeding further elementwise work
+(softmax-style normalize-by-sum) schedules as ONE generated reduction
+plus ONE fused epilogue kernel — versus the unfused baseline that
+materializes the exponentials, reduces the temporary, then divides
+(three launches and an extra HBM round-trip for the temporary)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+import repro.core.array as ga
+from repro.core import dispatch
+
+
+def run(repeats: int = 5, sizes=(100_000, 1_000_000)):
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        x = rng.standard_normal(n).astype(np.float32)
+        X = ga.to_gpu(x)
+
+        def fused():
+            # reduce(sum of exp) + epilogue(exp/s0): 2 launches
+            return ga.softmax(X).value
+
+        def unfused():
+            # eager 3-launch baseline: map, reduce the temp, divide
+            e = ga.exp(X).evaluate()
+            s = float(e.sum())
+            return (e / s).value
+
+        # correctness guard before timing anything
+        np.testing.assert_allclose(np.asarray(fused()),
+                                   np.asarray(jax.nn.softmax(jnp.asarray(x))),
+                                   atol=1e-5)
+
+        # per-bucket tune BOTH paths' generated kernels (block_rows), so
+        # the comparison is launch-schedule vs launch-schedule, not
+        # tuned-vs-untuned
+        ga.autotune(ga.softmax(X), repeats=1, warmup=1)
+        E = ga.exp(X)
+        ga.plan(E._expr).autotune(repeats=1, warmup=1)
+        EV = ga.to_gpu(E.value)
+        ga.autotune(EV.sum(), repeats=1, warmup=1)
+        ga.plan((EV / 2.0)._expr).autotune(repeats=1, warmup=1)
+
+        fused(); unfused()  # warm the driver cache
+        with dispatch.count_launches() as cf:
+            fused()
+        with dispatch.count_launches() as cu:
+            unfused()
+        t_fused = timeit(fused, repeats=repeats)
+        t_unfused = timeit(unfused, repeats=repeats)
+        emit(f"softmax.n{n}.fused", t_fused,
+             f"{cf.delta} launches (reduce + fused epilogue)",
+             kernels_launched=cf.delta, speedup=t_unfused / t_fused)
+        emit(f"softmax.n{n}.unfused", t_unfused,
+             f"{cu.delta} launches (map; reduce temp; divide)",
+             kernels_launched=cu.delta)

@@ -28,12 +28,13 @@ def main() -> None:
     ap.add_argument("--json-dir", default=".",
                     help="directory for BENCH_<suite>.json files")
     ap.add_argument("--sizes", default="",
-                    help="comma list of element counts for the fusion suite "
-                         "(smoke tests use small sizes)")
+                    help="comma list of element counts for the fusion/softmax "
+                         "suites (smoke tests use small sizes)")
     args = ap.parse_args()
 
     from benchmarks import (bench_copperhead, bench_dgfem, bench_elementwise,
-                            bench_filterbank, bench_model, bench_nn)
+                            bench_filterbank, bench_model, bench_nn,
+                            bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
     from repro.core import dispatch
@@ -48,6 +49,7 @@ def main() -> None:
         "table2": bench_copperhead.run,
         "table4": bench_nn.run,
         "fusion": lambda repeats: bench_elementwise.run(repeats=repeats, **fusion_kwargs),
+        "softmax": lambda repeats: bench_softmax.run(repeats=repeats, **fusion_kwargs),
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }

@@ -13,6 +13,14 @@ a = ga.to_gpu(np.random.randn(4, 4).astype(np.float32))
 a_doubled = (2 * a).get()
 print("2*a ->\n", a_doubled)
 
+# 1b. Fusion planner v2: reductions as *interior* DAG nodes — softmax
+#     is ONE generated reduction + ONE fused epilogue kernel (2 launches)
+v = ga.to_gpu(np.random.randn(10000).astype(np.float32))
+sm = ga.softmax(v).value
+print("fused softmax sums to:", float(sm.sum()))
+print("variance (2 reduce launches, /n on host):",
+      float(((v - v.mean()) ** 2).mean()))
+
 # 2. ElementwiseKernel: C-like snippet -> generated tiled Pallas kernel
 #    (paper Fig. 4a, verbatim API)
 from repro.core import ElementwiseKernel

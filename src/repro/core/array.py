@@ -13,37 +13,63 @@ and emits ONE fused elementwise kernel through the same RTCG machinery
 compiles exactly one generated kernel with no temporaries — the paper's
 expression-template argument, done at run time with trivial code.
 
-The **fusion planner** (`plan`) extends this across the map/reduce
-boundary: a DAG terminated by ``.sum()`` / ``.max()`` / ``.dot()``
-compiles into ONE generated `ReductionKernel` whose ``map_expr`` *is*
-the serialized elementwise chain — the loo.py-style map-reduce fusion.
-The planner's contract:
+The **fusion planner** extends this across the map/reduce boundary, and
+— planner v2 — lets reductions sit *inside* the DAG, not only at its
+root.  ``.sum()/.max()/.min()/.mean()/.dot()`` are lazy: they return a
+scalar-shaped RTCGArray holding a ``reduce`` node, so
+
+    softmax = x.exp() / x.exp().sum()          # reduction feeds elementwise
+    centered = x - x.mean()
+    var = ((x - x.mean()) ** 2).mean()         # nested reductions
+
+all stay lazy until evaluation.  The scheduler (`plan_many`) then emits
+a *minimal launch schedule*:
+
+  * reduce nodes are partitioned into dependency **waves**; each wave
+    compiles to ONE multi-accumulator `ReductionKernel` (sibling
+    reductions — min/max/sum quantization stats — share one pass over
+    the mapped chain and cost one launch);
+  * already-computed reductions appearing inside later snippets become
+    positional **scalar args** ``s<j>`` of the generated kernel, so the
+    epilogue elementwise work after a reduction fuses into ONE
+    `ElementwiseKernel` launch (softmax = reduce + epilogue = 2);
+  * roots that are pure scalar arithmetic over reduced values (e.g. the
+    ``/ n`` of ``.mean()``) are folded on the host — zero extra launches.
+
+Plan contract (v1, still the single-kernel fast path for reduce-free
+chains and root-level reductions):
 
   * DAG -> C snippet: leaves become positional vector args ``v0..vk``
     (dtype-preserving, deduplicated by identity), embedded Python
     scalars become positional scalar args ``s0..sj`` (so the compiled
     kernel is reusable across scalar churn), interior nodes serialize
     to infix/intrinsic C (`_Expr.collect`).
-  * Terminal reduce: the snippet is handed to `ReductionKernel` as
-    ``map_expr`` with the op's ``reduce_expr``/neutral — one kernel,
-    one launch, no intermediate array ever materialized.
+  * Plans are **dtype-faithful**: the plan dtype is
+    ``jnp.result_type`` over leaf dtypes *and* embedded scalars (with
+    float promotion under transcendental ops), generated scalar args
+    are typed accordingly (never hard-coded float32), and max/min
+    neutral elements come from ``jnp.finfo``/``jnp.iinfo`` of the plan
+    dtype — never a baked ``±3.0e38``.
   * Generated *kernels* are content-cached on
-    ``stable_hash(snippet, leaf dtypes, scalar count, reduce_expr,
+    ``stable_hash(snippet, leaf dtypes, scalar dtypes, reduce_expr,
     neutral, out dtype)`` — scalar values never enter the key, so an
-    isomorphic expression reuses the compiled kernel.  Planning itself
+    isomorphic expression reuses the compiled kernel.  Both kernel
+    caches are bounded `LRUCache`s (``REPRO_FUSION_CACHE_SIZE``,
+    default 128 each); eviction only costs a rebuild.  Planning itself
     (DAG walk + snippet + hash) is re-done per call; it is a few
     microseconds of pure Python, and launch-path cost then rides the
     shape-bucketed drivers of `repro.core.dispatch`.
 
 Set ``repro.core.array.EAGER = True`` to force one-kernel-per-op
 execution, or pass ``fuse=False`` to a reduction to run the unfused
-two-kernel path (evaluate, then reduce) — the baselines the fusion
-benchmark compares against.
+multi-kernel path (evaluate, then reduce) — the baselines the fusion
+benchmarks compare against.
 """
 
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -51,8 +77,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import stable_hash
-from repro.core.elementwise import ElementwiseKernel, ScalarArg, VectorArg
+from repro.core.cache import LRUCache, stable_hash
+from repro.core.elementwise import ElementwiseKernel, ScalarArg, VectorArg, _canonical
 from repro.core.reduction import ReductionKernel
 
 EAGER = False
@@ -62,20 +88,58 @@ _UNARY_FUNCS = {
     "sin": "sinf", "cos": "cosf", "tanh": "tanhf", "sigmoid": "sigmoid",
 }
 
-_kernel_cache: dict[str, ElementwiseKernel] = {}
-_reduce_cache: dict[str, ReductionKernel] = {}
+# Unary ops whose result is floating even over integer operands.
+_FLOAT_FUNCS = {"exp", "log", "sqrt", "sin", "cos", "tanh", "sigmoid"}
+
+# Reduction kinds: kind -> C reduce_expr; neutrals are dtype-derived.
+_REDUCE_EXPRS = {"sum": "a+b", "max": "fmaxf(a,b)", "min": "fminf(a,b)"}
+
+# Generated-kernel caches are bounded like the driver cache (PR 1): an
+# unbounded dict keyed on DAG structure is a leak under expression churn.
+_FUSION_CACHE_SIZE = int(os.environ.get("REPRO_FUSION_CACHE_SIZE", "128"))
+_kernel_cache: LRUCache = LRUCache(maxsize=_FUSION_CACHE_SIZE)
+_reduce_cache: LRUCache = LRUCache(maxsize=_FUSION_CACHE_SIZE)
+
+
+def _neutral_for(kind: str, dtype) -> str:
+    """Neutral-element literal for a reduction over ``dtype``.
+
+    ``finfo``/``iinfo`` of the *plan* dtype — a float32-ish ``-3.0e38``
+    is wrong for float64 (finite values exist beyond it) and overflows
+    integer dtypes entirely.
+    """
+    if kind == "sum":
+        return "0"
+    dt = _canonical(dtype)
+    if jnp.issubdtype(dt, jnp.floating):
+        info = jnp.finfo(dt)
+        return repr(float(info.min if kind == "max" else info.max))
+    info = jnp.iinfo(dt)
+    return str(int(info.min if kind == "max" else info.max))
 
 
 class _Expr:
-    """Expression DAG node. Leaves hold concrete jnp arrays or scalars."""
+    """Expression DAG node. Leaves hold concrete jnp arrays or scalars.
+
+    ``reduce`` nodes (``value`` names the kind: sum/max/min) are scalar-
+    shaped interior nodes: serialization registers them as scalar-arg
+    slots (the value is computed by an earlier launch of the schedule),
+    which is exactly how a reduction's result re-enters fused
+    elementwise code.
+    """
 
     def __init__(self, op: str, children: tuple = (), value: Any = None):
-        self.op = op  # 'leaf' | 'scalar' | '+','-','*','/','**' | unary name
+        self.op = op  # 'leaf' | 'scalar' | 'reduce' | '+','-','*','/','**' | unary
         self.children = children
         self.value = value
 
-    def collect(self, leaves: list, scalars: list) -> str:
-        """Serialize to a C snippet, registering leaves/scalars by position."""
+    def collect(self, leaves: list, scalars: list, allow_reduce: bool = False) -> str:
+        """Serialize to a C snippet, registering leaves/scalars by position.
+
+        ``scalars`` entries are either embedded Python numbers or
+        `_Expr` reduce nodes (deduplicated by identity) whose computed
+        value is bound at launch time.
+        """
         if self.op == "leaf":
             for j, (arr, _) in enumerate(leaves):
                 if arr is self.value:
@@ -85,18 +149,28 @@ class _Expr:
         if self.op == "scalar":
             scalars.append(self.value)
             return f"s{len(scalars) - 1}"
+        if self.op == "reduce":
+            if not allow_reduce:
+                raise ValueError(
+                    "reduction is an interior node here; plan it through "
+                    "plan_many (fusion planner v2)")
+            for j, s in enumerate(scalars):
+                if s is self:
+                    return f"s{j}"
+            scalars.append(self)
+            return f"s{len(scalars) - 1}"
         if self.op in ("+", "-", "*", "/"):
-            a = self.children[0].collect(leaves, scalars)
-            b = self.children[1].collect(leaves, scalars)
+            a = self.children[0].collect(leaves, scalars, allow_reduce)
+            b = self.children[1].collect(leaves, scalars, allow_reduce)
             return f"({a} {self.op} {b})"
         if self.op == "**":
-            a = self.children[0].collect(leaves, scalars)
-            b = self.children[1].collect(leaves, scalars)
+            a = self.children[0].collect(leaves, scalars, allow_reduce)
+            b = self.children[1].collect(leaves, scalars, allow_reduce)
             return f"powf({a}, {b})"
         if self.op == "neg":
-            return f"(-{self.children[0].collect(leaves, scalars)})"
+            return f"(-{self.children[0].collect(leaves, scalars, allow_reduce)})"
         if self.op in _UNARY_FUNCS:
-            return f"{_UNARY_FUNCS[self.op]}({self.children[0].collect(leaves, scalars)})"
+            return f"{_UNARY_FUNCS[self.op]}({self.children[0].collect(leaves, scalars, allow_reduce)})"
         raise ValueError(f"unknown expr op {self.op!r}")
 
     def structure(self) -> str:
@@ -106,7 +180,91 @@ class _Expr:
             return f"L<{self.value.dtype}>"
         if self.op == "scalar":
             return "S"
+        if self.op == "reduce":
+            return f"(R:{self.value} {self.children[0].structure()})"
         return f"({self.op} {' '.join(c.structure() for c in self.children)})"
+
+
+# ------------------------------------------------------------ DAG walkers
+def _dtype_of(expr: _Expr):
+    """Plan dtype: `jnp.result_type` over every leaf dtype and embedded
+    scalar in the (sub)tree — reduce nodes are transparent — with float
+    promotion when a transcendental sits anywhere in the chain."""
+    parts: list = []
+    floaty = False
+
+    def walk(e: _Expr) -> None:
+        nonlocal floaty
+        if e.op == "leaf":
+            parts.append(e.value.dtype)
+            return
+        if e.op == "scalar":
+            parts.append(e.value)
+            return
+        if e.op in _FLOAT_FUNCS:
+            floaty = True
+        for c in e.children:
+            walk(c)
+
+    walk(expr)
+    if not parts:
+        raise ValueError("expression has no array leaves")
+    dt = jnp.result_type(*parts)
+    if floaty:
+        dt = jnp.promote_types(dt, jnp.float32)
+    return _canonical(dt)
+
+
+def _shape_of(expr: _Expr) -> tuple:
+    if expr.op == "leaf":
+        return tuple(expr.value.shape)
+    if expr.op in ("scalar", "reduce"):
+        return ()
+    return tuple(np.broadcast_shapes(*[_shape_of(c) for c in expr.children]))
+
+
+def _has_reduce(expr: _Expr) -> bool:
+    if expr.op == "reduce":
+        return True
+    return any(_has_reduce(c) for c in expr.children)
+
+
+def _interior_reduce_ids(expr: _Expr) -> set:
+    """ids of every reduce node in the subtree (the root included)."""
+    out: set = set()
+
+    def walk(e: _Expr) -> None:
+        if e.op == "reduce":
+            out.add(id(e))
+        for c in e.children:
+            walk(c)
+
+    walk(expr)
+    return out
+
+
+def _vector_outside_reduce(expr: _Expr) -> bool:
+    """True if the expression reads a vector leaf *outside* any reduction
+    (i.e. evaluating it needs an elementwise launch, not host math)."""
+    if expr.op == "leaf":
+        return True
+    if expr.op in ("scalar", "reduce"):
+        return False
+    return any(_vector_outside_reduce(c) for c in expr.children)
+
+
+def _extend_slot_dtypes(scalars: list, slot_dts: list, owner_dtype) -> None:
+    """Type the scalar-arg slots appended by the serialization of ONE
+    root/map chain: a computed reduction keeps its own plan dtype; an
+    embedded number promotes with the dtype of the chain that *owns* it
+    — never with unrelated outputs of the same schedule (an int chain
+    sharing a plan with a float chain must stay exact int), and never a
+    hard-coded float32."""
+    for s in scalars[len(slot_dts):]:
+        if isinstance(s, _Expr):
+            slot_dts.append(_dtype_of(s))
+        else:
+            slot_dts.append(_canonical(jnp.result_type(s, owner_dtype)))
 
 
 @dataclass
@@ -115,61 +273,183 @@ class FusionPlan:
 
     ``snippet`` is the serialized DAG in the C dialect; ``leaves`` and
     ``scalars`` are the positional arguments it references as ``v<j>[i]``
-    / ``s<j>``.  ``reduce_expr is None`` plans a pure elementwise kernel
-    (one launch, writes ``out``); otherwise the snippet becomes the
-    ``map_expr`` of a single generated `ReductionKernel` (one launch,
-    returns a scalar).  Generated kernels are content-cached on ``key``
-    (DAG structure x dtypes, never scalar values), so isomorphic plans
-    share one kernel.
+    / ``s<j>`` (a scalar entry may be a computed-reduction `_Expr` whose
+    value is bound at launch).  ``reduce_expr is None`` plans a pure
+    elementwise kernel (one launch, writes the output template);
+    otherwise the snippet becomes the ``map_expr`` of a single generated
+    `ReductionKernel` (one launch, returns scalar(s)).  Lists in
+    ``snippet``/``out_dtype``/``reduce_expr``/``neutral`` plan ONE
+    multi-output kernel (`plan_many`).  Generated kernels are
+    content-cached on ``key`` (DAG structure x dtypes, never scalar
+    values), so isomorphic plans share one kernel.
     """
 
-    snippet: str
+    snippet: str | list
     leaves: list = field(default_factory=list)
     scalars: list = field(default_factory=list)
     out_dtype: Any = None
-    reduce_expr: str | None = None
-    neutral: str | None = None
+    reduce_expr: str | list | None = None
+    neutral: str | list | None = None
     key: str = ""
+    scalar_dtypes: list = field(default_factory=list)
+    nodes: list = field(default_factory=list)  # reduce nodes this plan computes
 
     @property
     def kernel_launches(self) -> int:
         return 1  # the whole point: any plan is exactly one launch
+
+    @property
+    def _multi(self) -> bool:
+        return isinstance(self.snippet, (list, tuple))
+
+    def _out_dtypes(self) -> list:
+        return list(self.out_dtype) if isinstance(self.out_dtype, (list, tuple)) \
+            else [self.out_dtype]
+
+    def _scalar_args(self) -> list:
+        dts = self.scalar_dtypes or [self._out_dtypes()[0]] * len(self.scalars)
+        return [ScalarArg(dt, f"s{j}") for j, dt in enumerate(dts)]
 
     def kernel(self):
         """Build-or-fetch the one generated kernel realizing this plan."""
         if self.reduce_expr is None:
             kern = _kernel_cache.get(self.key)
             if kern is None:
-                args = ([ScalarArg(jnp.float32, f"s{j}") for j in range(len(self.scalars))]
+                snips = [self.snippet] if not self._multi else list(self.snippet)
+                odts = self._out_dtypes()
+                out_names = ["out"] if not self._multi else \
+                    [f"out{j}" for j in range(len(snips))]
+                args = (self._scalar_args()
                         + [VectorArg(a.dtype, f"v{j}") for j, a in enumerate(self.leaves)]
-                        + [VectorArg(self.out_dtype, "out")])
-                kern = ElementwiseKernel(args, f"out[i] = {self.snippet}",
+                        + [VectorArg(d, nm) for nm, d in zip(out_names, odts)])
+                operation = "; ".join(f"{nm}[i] = {sn}"
+                                      for nm, sn in zip(out_names, snips))
+                kern = ElementwiseKernel(args, operation,
                                          name=f"fused_{self.key[:8]}")
-                _kernel_cache[self.key] = kern
+                _kernel_cache.put(self.key, kern)
             return kern
         kern = _reduce_cache.get(self.key)
         if kern is None:
-            args = ([ScalarArg(jnp.float32, f"s{j}") for j in range(len(self.scalars))]
+            args = (self._scalar_args()
                     + [VectorArg(a.dtype, f"v{j}") for j, a in enumerate(self.leaves)])
             kern = ReductionKernel(self.out_dtype, self.neutral, self.reduce_expr,
                                    self.snippet, args, name=f"fusedred_{self.key[:8]}")
-            _reduce_cache[self.key] = kern
+            _reduce_cache.put(self.key, kern)
         return kern
 
-    def launch(self) -> jax.Array:
-        kern = self.kernel()
-        call_args = list(self.scalars) + list(self.leaves)
+    def resolve_scalars(self, values: dict | None = None) -> list:
+        svals = []
+        for s in self.scalars:
+            if isinstance(s, _Expr):
+                if values is None or id(s) not in values:
+                    raise ValueError("plan references a reduction whose value "
+                                     "is not computed yet (launch the schedule)")
+                svals.append(values[id(s)])
+            else:
+                svals.append(s)
+        return svals
+
+    def _call_args(self, values: dict | None = None) -> list:
+        call_args = self.resolve_scalars(values) + list(self.leaves)
         if self.reduce_expr is None:
-            call_args.append(self.leaves[0].astype(self.out_dtype))
-        return kern(*call_args)
+            # proper output template(s): allocate, never alias an input
+            shape = self.leaves[0].shape
+            call_args.extend(jnp.zeros(shape, d) for d in self._out_dtypes())
+        return call_args
+
+    def launch(self, values: dict | None = None):
+        return self.kernel()(*self._call_args(values))
+
+    def autotune(self, values: dict | None = None, **tune_kwargs):
+        """Per-bucket tune the generated kernel's ``block_rows`` for this
+        plan's arguments.  The winner sticks to the content-cached kernel
+        instance, so every later isomorphic plan in the same shape bucket
+        launches with it."""
+        return self.kernel().autotune(*self._call_args(values), **tune_kwargs)
+
+
+@dataclass
+class FusionSchedule:
+    """Minimal launch schedule for DAGs with interior reductions.
+
+    ``steps`` are dependency-ordered reduction waves (each ONE generated
+    multi-accumulator `ReductionKernel` launch); ``epilogue`` is the ONE
+    fused elementwise kernel covering every vector-valued root, with
+    computed reductions bound as scalar args; scalar-only roots (e.g.
+    the ``/n`` of a terminal ``.mean()``) are folded on the host for
+    zero extra launches.
+    """
+
+    steps: list = field(default_factory=list)       # FusionPlans (reductions)
+    epilogue: FusionPlan | None = None
+    outputs: list = field(default_factory=list)     # (kind, payload) per root
+
+    @property
+    def kernel_launches(self) -> int:
+        return len(self.steps) + (1 if self.epilogue is not None else 0)
+
+    def _run_steps(self) -> dict:
+        values: dict = {}
+        for step in self.steps:
+            outs = step.launch(values)
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            for node, v in zip(step.nodes, outs):
+                values[id(node)] = v
+        return values
+
+    def autotune(self, **tune_kwargs) -> list:
+        """Per-bucket tune every generated kernel in the schedule (the
+        reduce waves, then the epilogue with the reduced values bound).
+        Returns the `TuneReport` list."""
+        reports = []
+        values: dict = {}
+        for step in self.steps:
+            reports.append(step.autotune(values, **tune_kwargs))
+            outs = step.launch(values)
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            for node, v in zip(step.nodes, outs):
+                values[id(node)] = v
+        if self.epilogue is not None:
+            reports.append(self.epilogue.autotune(values, **tune_kwargs))
+        return reports
+
+    def launch(self) -> list:
+        values = self._run_steps()
+        epi_outs: tuple = ()
+        if self.epilogue is not None:
+            outs = self.epilogue.launch(values)
+            epi_outs = outs if isinstance(outs, tuple) else (outs,)
+        results = []
+        for kind, payload in self.outputs:
+            if kind == "value":
+                results.append(payload)
+            elif kind == "reduce":
+                results.append(values[id(payload)])
+            elif kind == "epi":
+                results.append(epi_outs[payload])
+            else:  # host-folded scalar expression
+                snippet, scalars = payload
+                from repro.core import snippets as _snippets
+
+                env = {"jnp": jnp, "jax": jax}
+                plan_stub = FusionPlan(snippet=snippet, scalars=scalars)
+                for j, v in enumerate(plan_stub.resolve_scalars(values)):
+                    env[f"s{j}"] = v
+                results.append(jnp.asarray(
+                    eval(_snippets.translate_expression(snippet), env)))  # noqa: S307
+        return results
 
 
 def plan(expr: _Expr, reduce_expr: str | None = None,
          neutral: str | None = None) -> FusionPlan:
-    """Fusion planner: serialize an expression DAG into one kernel plan.
+    """Fusion planner (v1 surface): serialize a reduce-free expression DAG
+    into one kernel plan.
 
     With ``reduce_expr`` the elementwise chain *becomes* the generated
     reduction's ``map_expr`` — map+reduce in a single kernel launch.
+    DAGs with *interior* reductions go through `plan_many`.
     """
     leaves: list = []
     scalars: list = []
@@ -177,21 +457,142 @@ def plan(expr: _Expr, reduce_expr: str | None = None,
     arrs = [a for a, _ in leaves]
     if not arrs:
         raise ValueError("expression has no array leaves")
-    out_dtype = jnp.result_type(*[a.dtype for a in arrs])
+    out_dtype = _dtype_of(expr)
     key = stable_hash((snippet, [str(a.dtype) for a in arrs], len(scalars),
                        reduce_expr or "", neutral or "", str(out_dtype)))
-    return FusionPlan(snippet=snippet, leaves=arrs,
-                      scalars=[float(s) for s in scalars],
+    return FusionPlan(snippet=snippet, leaves=arrs, scalars=list(scalars),
                       out_dtype=out_dtype, reduce_expr=reduce_expr,
-                      neutral=neutral, key=key)
+                      neutral=neutral, key=key,
+                      scalar_dtypes=[out_dtype] * len(scalars))
+
+
+def _plan_reduce_wave(ready: list) -> FusionPlan:
+    """ONE multi-accumulator ReductionKernel plan for a wave of reduce
+    nodes whose interior dependencies are already computed: their mapped
+    chains share leaves/scalars positionally, so sibling reductions over
+    one chain ride a single pass over the data."""
+    leaves: list = []
+    scalars: list = []
+    slot_dts: list = []
+    snips, neutrals, rexprs, odts = [], [], [], []
+    for node in ready:
+        snip = node.children[0].collect(leaves, scalars, allow_reduce=True)
+        dt = _dtype_of(node.children[0])
+        _extend_slot_dtypes(scalars, slot_dts, dt)
+        snips.append(snip)
+        odts.append(dt)
+        neutrals.append(_neutral_for(node.value, dt))
+        rexprs.append(_REDUCE_EXPRS[node.value])
+    arrs = [a for a, _ in leaves]
+    if not arrs:
+        raise ValueError("reduction has no array leaves")
+    key = stable_hash((snips, [str(a.dtype) for a in arrs],
+                       [str(d) for d in slot_dts], rexprs, neutrals,
+                       [str(d) for d in odts]))
+    return FusionPlan(snippet=snips, leaves=arrs, scalars=list(scalars),
+                      out_dtype=odts, reduce_expr=rexprs, neutral=neutrals,
+                      key=key, scalar_dtypes=slot_dts, nodes=list(ready))
+
+
+def plan_many(exprs: list) -> FusionSchedule:
+    """Fusion planner v2: schedule one or more expression DAGs — with
+    reductions as interior nodes — into a minimal launch sequence.
+
+    Reduce nodes are partitioned into dependency waves (one generated
+    multi-accumulator `ReductionKernel` launch per wave — sibling
+    reductions share it), every vector-valued root fuses into ONE
+    epilogue `ElementwiseKernel` launch that receives computed
+    reductions as ``s<j>`` scalar args, and scalar-only roots are folded
+    on the host.  Returns a `FusionSchedule`; ``launch()`` yields one
+    result per input expression.
+    """
+    roots = [e._expr if isinstance(e, RTCGArray) else e for e in exprs]
+
+    # -- reduce nodes across all roots, post-order, deduped by identity
+    reduces: list[_Expr] = []
+    seen: set = set()
+
+    def visit(e: _Expr) -> None:
+        if id(e) in seen:
+            return
+        seen.add(id(e))
+        for c in e.children:
+            visit(c)
+        if e.op == "reduce":
+            reduces.append(e)
+
+    for r in roots:
+        visit(r)
+
+    # -- dependency waves: a reduce is ready once every reduce strictly
+    #    below it has been computed by an earlier wave
+    steps: list[FusionPlan] = []
+    done: set = set()
+    pending = list(reduces)
+    while pending:
+        ready = [r for r in pending
+                 if _interior_reduce_ids(r.children[0]) <= done]
+        if not ready:  # cycle-impossible for DAGs built via operators
+            raise ValueError("unschedulable reduction dependencies")
+        steps.append(_plan_reduce_wave(ready))
+        done |= {id(r) for r in ready}
+        pending = [r for r in pending if id(r) not in done]
+
+    # -- roots: computed reductions / fused epilogue / host-folded scalars
+    outputs: list = []
+    epi_snips: list = []
+    epi_leaves: list = []
+    epi_scalars: list = []
+    epi_dtypes: list = []
+    slot_dts: list = []
+    for root in roots:
+        if root.op == "leaf":
+            outputs.append(("value", root.value))
+        elif root.op == "reduce":
+            outputs.append(("reduce", root))
+        elif _vector_outside_reduce(root):
+            snip = root.collect(epi_leaves, epi_scalars, allow_reduce=True)
+            _extend_slot_dtypes(epi_scalars, slot_dts, _dtype_of(root))
+            outputs.append(("epi", len(epi_snips)))
+            epi_snips.append(snip)
+            epi_dtypes.append(_dtype_of(root))
+        else:
+            host_scalars: list = []
+            snip = root.collect([], host_scalars, allow_reduce=True)
+            outputs.append(("host", (snip, host_scalars)))
+
+    epilogue = None
+    if epi_snips:
+        arrs = [a for a, _ in epi_leaves]
+        key = stable_hash((epi_snips, [str(a.dtype) for a in arrs],
+                           [str(d) for d in slot_dts], "", "",
+                           [str(d) for d in epi_dtypes]))
+        epilogue = FusionPlan(snippet=epi_snips, leaves=arrs,
+                              scalars=list(epi_scalars), out_dtype=epi_dtypes,
+                              reduce_expr=None, neutral=None, key=key,
+                              scalar_dtypes=slot_dts)
+    return FusionSchedule(steps=steps, epilogue=epilogue, outputs=outputs)
+
+
+def autotune(*exprs, **tune_kwargs) -> list:
+    """Per-bucket tune every generated kernel behind these lazy
+    expressions (`FusionSchedule.autotune`): winners are recorded per
+    `dispatch.n_bucket` on the content-cached kernel instances, so all
+    later isomorphic plans in the bucket launch tuned."""
+    return plan_many(list(exprs)).autotune(**tune_kwargs)
 
 
 def _as_expr(x) -> _Expr:
     if isinstance(x, RTCGArray):
         return x._expr
-    if isinstance(x, (int, float, np.floating, np.integer)):
+    if isinstance(x, (bool, np.bool_, int, np.integer)):
+        return _Expr("scalar", value=int(x))
+    if isinstance(x, (float, np.floating)):
         return _Expr("scalar", value=float(x))
     if isinstance(x, (np.ndarray, jax.Array)):
+        if getattr(x, "ndim", 1) == 0:  # 0-d arrays are scalars, not leaves
+            v = np.asarray(x).item()
+            return _Expr("scalar", value=v)
         return _Expr("leaf", value=jnp.asarray(x))
     raise TypeError(f"cannot mix RTCGArray with {type(x).__name__}")
 
@@ -216,21 +617,11 @@ class RTCGArray:
 
     @property
     def shape(self):
-        return self._leaf_template().shape
+        return _shape_of(self._expr)
 
     @property
     def dtype(self):
-        leaves: list = []
-        scalars: list = []
-        self._expr.collect(leaves, scalars)
-        return jnp.result_type(*[a.dtype for a, _ in leaves]) if leaves else jnp.float32
-
-    def _leaf_template(self):
-        leaves: list = []
-        self._expr.collect(leaves, [])
-        if not leaves:
-            raise ValueError("expression has no array leaves")
-        return leaves[0][0]
+        return _dtype_of(self._expr)
 
     # -- lazy ops ---------------------------------------------------------
     def _bin(self, other, op, rev=False):
@@ -248,16 +639,27 @@ class RTCGArray:
     __truediv__ = lambda self, o: self._bin(o, "/")
     __rtruediv__ = lambda self, o: self._bin(o, "/", rev=True)
     __pow__ = lambda self, o: self._bin(o, "**")
+    __rpow__ = lambda self, o: self._bin(o, "**", rev=True)
     __neg__ = lambda self: RTCGArray(_expr=_Expr("neg", (self._expr,)))
 
     def _unary(self, name):
         return RTCGArray(_expr=_Expr(name, (self._expr,)))
+
+    exp = lambda self: self._unary("exp")
+    log = lambda self: self._unary("log")
+    sqrt = lambda self: self._unary("sqrt")
+    tanh = lambda self: self._unary("tanh")
+    sigmoid = lambda self: self._unary("sigmoid")
+    abs = lambda self: self._unary("abs")
+    __abs__ = abs
 
     # -- evaluation -------------------------------------------------------
     def _evaluate_expr(self) -> jax.Array:
         expr = self._expr
         if expr.op == "leaf":
             return expr.value
+        if _has_reduce(expr):
+            return plan_many([expr]).launch()[0]
         return plan(expr).launch()
 
     def evaluate(self) -> "RTCGArray":
@@ -272,30 +674,36 @@ class RTCGArray:
     def value(self) -> jax.Array:
         return self.evaluate()._expr.value
 
+    def __float__(self) -> float:
+        return float(self.value)
+
+    def __int__(self) -> int:
+        return int(self.value)
+
     # -- fused reductions ---------------------------------------------------
-    def _reduce(self, neutral: str, reduce_expr: str, fuse: bool = True) -> jax.Array:
+    def _reduce(self, kind: str, fuse: bool = True) -> "RTCGArray":
         if not fuse and self._expr.op != "leaf":
             # Unfused baseline: materialize the map (kernel 1), then
             # reduce the temporary (kernel 2) — what an eager
             # operator-overloading package would do.
-            return self.evaluate()._reduce(neutral, reduce_expr)
-        return plan(self._expr, reduce_expr=reduce_expr, neutral=neutral).launch()
+            return self.evaluate()._reduce(kind)
+        return RTCGArray(_expr=_Expr("reduce", (self._expr,), value=kind))
 
-    def sum(self, fuse: bool = True):
-        return self._reduce("0", "a+b", fuse=fuse)
+    def sum(self, fuse: bool = True) -> "RTCGArray":
+        return self._reduce("sum", fuse=fuse)
 
-    def mean(self, fuse: bool = True):
+    def mean(self, fuse: bool = True) -> "RTCGArray":
         n = int(np.prod(self.shape))
-        return self._reduce("0", "a+b", fuse=fuse) / n
+        return self._reduce("sum", fuse=fuse) / float(n)
 
-    def max(self, fuse: bool = True):
-        return self._reduce("-3.0e38", "fmaxf(a,b)", fuse=fuse)
+    def max(self, fuse: bool = True) -> "RTCGArray":
+        return self._reduce("max", fuse=fuse)
 
-    def min(self, fuse: bool = True):
-        return self._reduce("3.0e38", "fminf(a,b)", fuse=fuse)
+    def min(self, fuse: bool = True) -> "RTCGArray":
+        return self._reduce("min", fuse=fuse)
 
-    def dot(self, other: "RTCGArray", fuse: bool = True):
-        return (self * other)._reduce("0", "a+b", fuse=fuse)
+    def dot(self, other: "RTCGArray", fuse: bool = True) -> "RTCGArray":
+        return (self * other)._reduce("sum", fuse=fuse)
 
     def __repr__(self):
         tag = "lazy" if self._expr.op != "leaf" else "concrete"
@@ -328,3 +736,17 @@ def tanh(a: RTCGArray) -> RTCGArray:
 
 def abs(a: RTCGArray) -> RTCGArray:  # noqa: A001 - mirrors numpy namespace
     return a._unary("abs")
+
+
+def softmax(a: RTCGArray, stable: bool = False) -> RTCGArray:
+    """Softmax through the fusion planner.
+
+    Unstable form (default) schedules as ONE reduce + ONE fused epilogue
+    (2 launches); ``stable=True`` subtracts the max first (3 launches:
+    max wave, sum wave, epilogue) for large-magnitude inputs.
+    """
+    if stable:
+        e = (a - a.max()).exp()
+    else:
+        e = a.exp()
+    return e / e.sum()

@@ -41,6 +41,54 @@ import jax
 from repro.core.cache import DiskCache, stable_hash, tuning_cache
 
 
+def block_rows_candidates(n: int, lanes: int = 128) -> list[dict]:
+    """Shared ``block_rows`` candidate pool for the row-blocked kernel
+    families (elementwise, reduction): powers of two up to the padded
+    (pow2-bucketed) row count — so the largest candidate is a single
+    grid step over the bucket with zero extra padding, and every
+    candidate keeps the grid divisible."""
+    rows = -(-n // lanes)
+    cap = 1 << (max(8, rows) - 1).bit_length()  # next_pow2, >= 8
+    cands = [{"block_rows": b}
+             for b in (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192)
+             if b <= cap]
+    return cands or [{"block_rows": 8}]
+
+
+def block_n_candidates(n: int) -> list[dict]:
+    """``block_n`` candidate pool for the blocked scan: power-of-two
+    block lengths no larger than the padded input (one block minimum)."""
+    cap = max(1024, 1 << (max(1, n) - 1).bit_length())
+    cands = [{"block_n": b} for b in (1024, 2048, 4096, 8192, 16384)
+             if b <= cap]
+    return cands or [{"block_n": 1024}]
+
+
+def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
+                    candidates: Sequence[dict], args: Sequence[Any], n: int,
+                    tuned: dict, param: str, *, measure: str = "hybrid",
+                    cache: "DiskCache | None" = None, repeats: int = 3,
+                    warmup: int = 1, prune_keep: int | None = None) -> "TuneReport":
+    """Shared per-bucket tuning path for the kernel families.
+
+    Wires `Autotuner(signature_fn=dispatch.bucketed_signature)` (so the
+    tuning-cache key collapses exact sizes to their shape bucket) and
+    records the winner's ``param`` in ``tuned[dispatch.n_bucket(n)]``,
+    where the family's ``_pick_*`` lookup finds it on later plain calls.
+    Elementwise/Reduction tune ``block_rows``; Scan tunes ``block_n``.
+    """
+    from repro.core import dispatch
+
+    nb = dispatch.n_bucket(n)
+    tuner = Autotuner(name, builder=builder, measure=measure, cost_fn=cost_fn,
+                      cache=cache, repeats=repeats, warmup=warmup,
+                      signature_fn=dispatch.bucketed_signature,
+                      prune_keep=prune_keep)
+    report = tuner.tune(candidates, args, key_extra=("n_bucket", nb))
+    tuned[nb] = report.best[param]
+    return report
+
+
 def signature_of(args: Sequence[Any]) -> list:
     sig = []
     for a in args:

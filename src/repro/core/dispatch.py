@@ -155,6 +155,27 @@ def launch_count() -> int:
         return _launch_count
 
 
+class _LaunchCounter:
+    """Context manager over the launch counter: ``delta`` after exit is
+    the number of generated-kernel launches inside the block."""
+
+    def __enter__(self):
+        self._start = launch_count()
+        self.delta = 0
+        return self
+
+    def __exit__(self, *exc):
+        self.delta = launch_count() - self._start
+        return False
+
+
+def count_launches() -> _LaunchCounter:
+    """``with dispatch.count_launches() as c: ...; c.delta`` — the test/
+    benchmark idiom for asserting launch schedules (e.g. fused softmax
+    is a reduce + one epilogue: delta == 2)."""
+    return _LaunchCounter()
+
+
 def reset_counters() -> None:
     """Zero the compile/launch counters (cache contents are kept)."""
     global _compile_count, _launch_count

@@ -297,29 +297,22 @@ class ElementwiseKernel:
         tuning-cache key uses `dispatch.bucketed_signature` so results
         persist across exact-n churn too.
         """
-        from repro.core.autotune import Autotuner
+        from repro.core.autotune import tune_per_bucket
 
         first = call_args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
-        nb = dispatch.n_bucket(n)
-        cands = candidates or self.candidate_configs(n)
-        tuner = Autotuner(
+        return tune_per_bucket(
             f"eltwise.{self.name}",
             builder=lambda block_rows: (lambda *a: self(*a, block_rows=block_rows)),
-            measure=measure,
             cost_fn=self.block_cost,
-            cache=cache,
-            repeats=repeats, warmup=warmup,
-            signature_fn=dispatch.bucketed_signature,
-            prune_keep=prune_keep,
-        )
-        report = tuner.tune(cands, call_args, key_extra=("n_bucket", nb))
-        self._tuned[nb] = report.best["block_rows"]
-        return report
+            candidates=candidates or self.candidate_configs(n),
+            args=call_args, n=n, tuned=self._tuned, param="block_rows",
+            measure=measure, cache=cache, repeats=repeats, warmup=warmup,
+            prune_keep=prune_keep)
 
-    # candidate block_rows values for the autotuner
+    # candidate block_rows values for the autotuner (shared pool)
     @staticmethod
     def candidate_configs(n: int) -> list[dict]:
-        rows = -(-n // LANES)
-        cands = [{"block_rows": b} for b in (8, 16, 32, 64, 128, 256, 512) if b <= max(8, rows)]
-        return cands or [{"block_rows": 8}]
+        from repro.core.autotune import block_rows_candidates
+
+        return block_rows_candidates(n, LANES)

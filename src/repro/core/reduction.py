@@ -15,6 +15,22 @@ bucketing math and the shared driver LRU.
     dot = ReductionKernel(np.float32, neutral="0",
                           reduce_expr="a+b", map_expr="x[i]*y[i]",
                           arguments="float *x, float *y")
+
+Multi-accumulator form (fusion planner `plan_many`): pass *lists* for
+``dtype_out`` / ``neutral`` / ``reduce_expr`` / ``map_expr`` (equal
+length) and the generated kernel evaluates every map expression over
+one pass of the inputs, folding each into its own (1,1) accumulator —
+sibling reductions (min/max/sum quantization stats) cost ONE launch:
+
+    stats = ReductionKernel([np.float32] * 3, ["3.4e38", "-3.4e38", "0"],
+                            ["fminf(a,b)", "fmaxf(a,b)", "a+b"],
+                            ["x[i]", "x[i]", "x[i]"], "float *x")
+    lo, hi, tot = stats(x)
+
+Per-bucket autotuning: ``autotune()`` wires the shared `Autotuner`
+(``signature_fn=dispatch.bucketed_signature``) to ``block_rows``, and
+the winner is recorded per `dispatch.n_bucket` so every later call in
+the same shape bucket uses it automatically.
 """
 
 from __future__ import annotations
@@ -25,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import snippets
+from repro.core import dispatch, snippets
 from repro.core.elementwise import (LANES, ScalarArg, VectorArg, _canonical,
                                     _parse_arguments, on_tpu)
 from repro.core.templates import KernelTemplate
@@ -44,7 +60,7 @@ _BLOCK_REDUCERS = {
 _KERNEL_TMPL = KernelTemplate(
     "reduction",
     '''
-def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}o_ref):
+def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
     _n = _n_ref[0, 0]
 {% for s in scalar_names %}
     {{ s }} = {{ s }}_ref[0, 0]
@@ -55,36 +71,59 @@ def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}o_
 {% for v in loaded_vectors %}
     {{ v }} = {{ v }}_ref[...]
 {% endfor %}
-    _mapped = jnp.asarray({{ map_expr }}).astype(jnp.{{ out_dtype }})
-    _mapped = jnp.where(i < _n, _mapped, jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}))
-    _partial = {{ block_reduce }}(_mapped)
-    _prev = jnp.where(pl.program_id(0) == 0,
-                      jnp.asarray({{ neutral }}, jnp.{{ out_dtype }}),
-                      o_ref[0, 0])
-    o_ref[0, 0] = {{ combine }}
+{% for o in outs %}
+    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
+    _mapped{{ loop.index0 }} = jnp.where(i < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
+    _partial{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }})
+    _prev{{ loop.index0 }} = jnp.where(pl.program_id(0) == 0,
+                                       jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}),
+                                       o{{ loop.index0 }}_ref[0, 0])
+    o{{ loop.index0 }}_ref[0, 0] = {{ o.combine }}
+{% endfor %}
 ''',
 )
 
 
 class ReductionKernel:
-    def __init__(self, dtype_out, neutral: str, reduce_expr: str, map_expr: str,
+    def __init__(self, dtype_out, neutral, reduce_expr, map_expr,
                  arguments, name: str = "reduce", preamble: str = "",
                  block_rows: int | None = None, interpret: bool | None = None):
-        self.dtype_out = _canonical(dtype_out)
-        self.neutral = snippets.translate_expression(neutral)
-        self.reduce_expr = reduce_expr
-        self.map_expr = map_expr
+        # Normalize the single-output and multi-accumulator forms to lists;
+        # `self.multi` records which way results are handed back.
+        self.multi = isinstance(map_expr, (list, tuple))
+        map_exprs = list(map_expr) if self.multi else [map_expr]
+        k = len(map_exprs)
+
+        def _aslist(v):
+            return list(v) if isinstance(v, (list, tuple)) else [v] * k
+
+        neutrals, reduce_exprs = _aslist(neutral), _aslist(reduce_expr)
+        dtypes_out = _aslist(dtype_out)
+        if not (len(neutrals) == len(reduce_exprs) == len(dtypes_out) == k):
+            raise ValueError("dtype_out/neutral/reduce_expr/map_expr lengths differ")
+
+        self.dtypes_out = [_canonical(d) for d in dtypes_out]
+        self.dtype_out = self.dtypes_out[0]   # single-output compat alias
+        self.neutrals = [snippets.translate_expression(nt) for nt in neutrals]
+        self.neutral = self.neutrals[0]
+        self.reduce_exprs = reduce_exprs
+        self.reduce_expr = reduce_exprs[0]
+        self.map_exprs = map_exprs
+        self.map_expr = map_exprs[0]
         self.args = _parse_arguments(arguments)
         self.name = re.sub(r"\W", "_", name)
         self.preamble = preamble
         self.block_rows = block_rows
         self.interpret = (not on_tpu()) if interpret is None else interpret
 
-        key = re.sub(r"\s", "", reduce_expr)
-        if key not in _BLOCK_REDUCERS:
-            raise NotImplementedError(
-                f"reduce_expr {reduce_expr!r} not recognized; supported: {sorted(_BLOCK_REDUCERS)}")
-        self.block_reduce, self._combine_op = _BLOCK_REDUCERS[key]
+        self._reducers = []
+        for rexpr in reduce_exprs:
+            key = re.sub(r"\s", "", rexpr)
+            if key not in _BLOCK_REDUCERS:
+                raise NotImplementedError(
+                    f"reduce_expr {rexpr!r} not recognized; supported: {sorted(_BLOCK_REDUCERS)}")
+            self._reducers.append(_BLOCK_REDUCERS[key])
+        self.block_reduce, self._combine_op = self._reducers[0]
         self.scalar_args = [a for a in self.args if isinstance(a, ScalarArg)]
         self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
         if not self.vector_args:
@@ -94,23 +133,34 @@ class ReductionKernel:
         self._arg_meta = tuple((a.name, a.jnp_dtype, isinstance(a, ScalarArg))
                                for a in self.args)
         self._src_keys: dict[int, str] = {}
+        self._tuned: dict[int, int] = {}      # n_bucket -> tuned block_rows
+
+    def _outs(self) -> list[dict]:
+        outs = []
+        for j, (mapped, nt, (block_reduce, op)) in enumerate(
+                zip(self.map_exprs, self.neutrals, self._reducers)):
+            combine = (f"_prev{j} {op} _partial{j}" if op in ("+", "*")
+                       else f"{op}(_prev{j}, _partial{j})")
+            outs.append({
+                "map_expr": snippets.translate_expression(mapped),
+                "neutral": nt,
+                "block_reduce": block_reduce,
+                "combine": combine,
+                "dtype": str(self.dtypes_out[j]),
+            })
+        return outs
 
     def render(self, block_rows: int) -> str:
-        mapped = snippets.translate_expression(self.map_expr)
-        combine = (f"_prev {self._combine_op} _partial" if self._combine_op in ("+", "*")
-                   else f"{self._combine_op}(_prev, _partial)")
+        outs = self._outs()
         read = sorted({v.name for v in self.vector_args
-                       if re.search(rf"\b{re.escape(v.name)}\b", mapped)})
+                       if any(re.search(rf"\b{re.escape(v.name)}\b", o["map_expr"])
+                              for o in outs)})
         src = _KERNEL_TMPL.render(
             name=self.name,
             in_names=[a.name for a in self.args],
             scalar_names=[s.name for s in self.scalar_args],
             loaded_vectors=read,
-            map_expr=mapped,
-            block_reduce=self.block_reduce,
-            combine=combine,
-            neutral=self.neutral,
-            out_dtype=str(self.dtype_out),
+            outs=outs,
             block_rows=block_rows,
             lanes=LANES,
         )
@@ -123,7 +173,7 @@ class ReductionKernel:
 
             key = stable_hash((self.render(block_rows),
                                [str(m[1]) for m in self._arg_meta],
-                               str(self.dtype_out), self.interpret))
+                               [str(d) for d in self.dtypes_out], self.interpret))
             self._src_keys[block_rows] = key
         return key
 
@@ -144,12 +194,13 @@ class ReductionKernel:
             kernel,
             grid=(grid,),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, 1), lambda r: (0, 0)),
-            out_shape=jax.ShapeDtypeStruct((1, 1), self.dtype_out),
+            out_specs=[pl.BlockSpec((1, 1), lambda r: (0, 0))] * len(self.dtypes_out),
+            out_shape=[jax.ShapeDtypeStruct((1, 1), d) for d in self.dtypes_out],
             interpret=self.interpret,
         ))
         padded_size = bucket * LANES
         arg_meta = self._arg_meta
+        multi = self.multi
 
         def driver(n, flat_args):
             padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
@@ -165,19 +216,66 @@ class ReductionKernel:
                     if n != padded_size:
                         v = jnp.pad(v, (0, padded_size - n))
                     padded.append(v.reshape(bucket, LANES))
-            return call(*padded)[0, 0]
+            outs = call(*padded)
+            if multi:
+                return tuple(o[0, 0] for o in outs)
+            return outs[0][0, 0]
 
         return driver
 
-    def __call__(self, *call_args, block_rows: int | None = None):
-        from repro.core import dispatch
+    def _pick_block_rows(self, n: int, block_rows: int | None) -> int:
+        if block_rows:
+            return block_rows
+        tuned = self._tuned.get(dispatch.n_bucket(n))
+        return tuned or self.block_rows or dispatch.default_block_rows(n)
 
+    def __call__(self, *call_args, block_rows: int | None = None):
         first_vec = call_args[self._first_vec_pos]
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(first_vec.shape))
-        br = block_rows or self.block_rows or dispatch.default_block_rows(n)
+        br = self._pick_block_rows(n, block_rows)
         bucket = dispatch.bucket_rows(n, br)
         key = ("reduce", self._src_key(br), bucket, br)
         drv = dispatch.get_or_build(key, lambda: self._build_driver(bucket, br))
         out = drv(n, call_args)
         dispatch.record_launch()  # after the driver: failed launches don't count
         return out
+
+    # -- tuning ------------------------------------------------------------
+    def block_cost(self, params: dict, args) -> "Any":
+        """Analytic `BlockCost` of one config — hybrid-mode pre-pruner."""
+        from repro.core.autotune import BlockCost
+
+        br = params["block_rows"]
+        first = args[self._first_vec_pos]
+        n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
+        bucket = dispatch.bucket_rows(n, br)
+        vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
+        return BlockCost(
+            flops=float(2 * len(self.map_exprs)) * bucket * LANES,
+            hbm_bytes=float(bucket * LANES * vec_bytes),
+            vmem_bytes=float(br * LANES * vec_bytes),
+            grid=bucket // br,
+        )
+
+    def autotune(self, *call_args, candidates: list[dict] | None = None,
+                 measure: str = "hybrid", cache=None, repeats: int = 3,
+                 warmup: int = 1, prune_keep: int | None = None):
+        """Tune ``block_rows`` for the *bucket* of these arguments.
+
+        Same contract as `ElementwiseKernel.autotune`: the winner is
+        recorded per `dispatch.n_bucket` and the tuning-cache key uses
+        `dispatch.bucketed_signature`, so one tuning run covers every
+        ``n`` in the bucket.
+        """
+        from repro.core.autotune import block_rows_candidates, tune_per_bucket
+
+        first = call_args[self._first_vec_pos]
+        n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
+        return tune_per_bucket(
+            f"reduce.{self.name}",
+            builder=lambda block_rows: (lambda *a: self(*a, block_rows=block_rows)),
+            cost_fn=self.block_cost,
+            candidates=candidates or block_rows_candidates(n),
+            args=call_args, n=n, tuned=self._tuned, param="block_rows",
+            measure=measure, cache=cache, repeats=repeats, warmup=warmup,
+            prune_keep=prune_keep)

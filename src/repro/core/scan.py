@@ -13,6 +13,12 @@ Like ReductionKernel, the combine operator comes from a C-like snippet
 drivers are compiled per power-of-two *grid bucket* (`repro.core.dispatch`)
 with neutral-element padding on the way in and slicing on the way out,
 and shared across instances through the dispatch LRU.
+
+The block length ``block_n`` is the scan's tunable (the analogue of
+``block_rows`` elsewhere): ``autotune()`` wires the shared `Autotuner`
+with ``signature_fn=dispatch.bucketed_signature`` and records the
+winner per `dispatch.n_bucket`, so later calls in the same shape bucket
+pick it up automatically.
 """
 
 from __future__ import annotations
@@ -23,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core import snippets
+from repro.core import dispatch, snippets
 from repro.core.elementwise import DEFAULT_BLOCK_ROWS, LANES, _canonical, on_tpu
 from repro.core.templates import KernelTemplate
 
@@ -92,6 +98,7 @@ class ScanKernel:
         self.block_n = block_n
         self.interpret = (not on_tpu()) if interpret is None else interpret
         self._src_key_cache: str | None = None
+        self._tuned: dict[int, int] = {}      # n_bucket -> tuned block_n
 
     def _binop_apply(self, a: str, b: str) -> str:
         if self.binop in ("+", "*"):
@@ -108,21 +115,22 @@ class ScanKernel:
         return src1, src2
 
     def _src_key(self) -> str:
+        # Source is block_n-independent (the block length only enters the
+        # BlockSpecs); the dispatch key carries (grid, block_n) separately.
         if self._src_key_cache is None:
             from repro.core.cache import stable_hash
 
             self._src_key_cache = stable_hash((*self._render_passes(),
-                                               str(self.dtype), self.block_n,
+                                               str(self.dtype),
                                                self.neutral, self.interpret))
         return self._src_key_cache
 
-    def _build_driver(self, grid: int):
-        """One driver per (source, grid bucket): padding with the neutral
-        element makes the tail blocks no-ops, so any ``n`` needing at
-        most ``grid`` blocks reuses this compile."""
+    def _build_driver(self, grid: int, bn: int):
+        """One driver per (source, grid bucket, block_n): padding with the
+        neutral element makes the tail blocks no-ops, so any ``n`` needing
+        at most ``grid`` blocks reuses this compile."""
         from repro.core.rtcg import SourceModule
 
-        bn = self.block_n
         pn = grid * bn
         dt = self.dtype
 
@@ -177,16 +185,62 @@ class ScanKernel:
 
         return driver
 
-    def __call__(self, x):
-        from repro.core import dispatch
+    def _pick_block_n(self, n: int, block_n: int | None) -> int:
+        if block_n:
+            return block_n
+        tuned = self._tuned.get(dispatch.n_bucket(n))
+        return tuned or self.block_n
 
+    def __call__(self, x, block_n: int | None = None):
         n = int(getattr(x, "size", 0)) or int(np.prod(x.shape))
-        grid = dispatch.next_pow2(-(-n // self.block_n))
-        key = ("scan", self._src_key(), grid)
-        drv = dispatch.get_or_build(key, lambda: self._build_driver(grid))
+        bn = self._pick_block_n(n, block_n)
+        grid = dispatch.next_pow2(-(-n // bn))
+        key = ("scan", self._src_key(), grid, bn)
+        drv = dispatch.get_or_build(key, lambda: self._build_driver(grid, bn))
         out = drv(n, x).reshape(x.shape)
         dispatch.record_launch()  # after the driver: failed launches don't count
         return out
+
+    # -- tuning ------------------------------------------------------------
+    def block_cost(self, params: dict, args) -> "Any":
+        """Analytic `BlockCost` of one config — hybrid-mode pre-pruner."""
+        from repro.core.autotune import BlockCost
+
+        bn = params["block_n"]
+        x = args[0]
+        n = int(getattr(x, "size", 0)) or int(np.prod(x.shape))
+        grid = dispatch.next_pow2(-(-n // bn))
+        pn = grid * bn
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return BlockCost(
+            flops=float(2 * pn),
+            # pass 1 reads + writes, pass 2 reads + writes
+            hbm_bytes=float(4 * pn * itemsize),
+            vmem_bytes=float(3 * bn * itemsize),
+            grid=2 * grid,
+        )
+
+    def autotune(self, x, candidates: list[dict] | None = None,
+                 measure: str = "hybrid", cache=None, repeats: int = 3,
+                 warmup: int = 1, prune_keep: int | None = None):
+        """Tune ``block_n`` for the *bucket* of this input.
+
+        Same contract as the other kernel families: the winner is
+        recorded per `dispatch.n_bucket` and the tuning-cache key uses
+        `dispatch.bucketed_signature`, so one tuning run covers every
+        ``n`` in the bucket.
+        """
+        from repro.core.autotune import block_n_candidates, tune_per_bucket
+
+        n = int(getattr(x, "size", 0)) or int(np.prod(x.shape))
+        return tune_per_bucket(
+            f"scan.{self.name}",
+            builder=lambda block_n: (lambda a: self(a, block_n=block_n)),
+            cost_fn=self.block_cost,
+            candidates=candidates or block_n_candidates(n),
+            args=(x,), n=n, tuned=self._tuned, param="block_n",
+            measure=measure, cache=cache, repeats=repeats, warmup=warmup,
+            prune_keep=prune_keep)
 
 
 def InclusiveScanKernel(dtype, scan_expr, **kw):

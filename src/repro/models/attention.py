@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.models.layers import fused_softmax
 from repro.sharding.partition import shard_map
 
 NEG_INF = -1e30
@@ -44,7 +45,7 @@ def naive_attention(q, k, v, *, causal: bool, scale: float):
         Sq, Skv = q.shape[1], k.shape[1]
         mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
         s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = fused_softmax(s)
     return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
@@ -142,7 +143,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, scale: float):
     col = jnp.arange(Smax)
     valid = col[None, :] <= jnp.reshape(pos, (-1, 1))     # (B or 1, Smax)
     s = jnp.where(valid[:, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = fused_softmax(s)
     out = jnp.einsum("bhs,bshd->bhd", p, _gqa_expand(v_cache.astype(jnp.float32), H))
     return out.reshape(B, 1, H, dh).astype(q.dtype)
 

@@ -6,6 +6,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
@@ -53,7 +54,6 @@ def apply_mrope(x, positions3, theta: float, sections: tuple):
     assert sum(sections) == half, (sections, half)
     inv = rope_freqs(dh, theta)                        # (half,)
     # pick the position stream per frequency section (static table)
-    import numpy as np
     sec_id = jnp.asarray(np.repeat(np.arange(3), np.asarray(sections)), jnp.int32)
     pos = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)  # (B, S, 3)
     pos = jnp.take(pos, sec_id, axis=-1)               # (B, S, half)
@@ -74,6 +74,28 @@ def position_encode(cfg: ModelConfig, x, positions):
             positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
         return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
     return x
+
+
+# ------------------------------------------------------------- softmax
+def fused_softmax(x, *, stable: bool = True):
+    """Softmax dispatch with an RTCG fused host path.
+
+    Concrete vectors (a logits row outside jit, the shapes the serving
+    sampler sees) route through the fusion planner — one generated
+    reduction plus one fused epilogue kernel instead of three separate
+    launches.  Traced values and multi-dim batches fall back to
+    ``jax.nn.softmax``; axis is always the last one.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return jax.nn.softmax(x, axis=-1)
+    lead = int(np.prod(x.shape[:-1])) if getattr(x, "ndim", 0) > 1 else 1
+    if getattr(x, "ndim", 0) == 0 or lead != 1:
+        return jax.nn.softmax(x, axis=-1)
+    from repro.core import array as ga
+
+    flat = jnp.reshape(x, (-1,))
+    out = ga.softmax(ga.RTCGArray(flat), stable=stable).value
+    return jnp.reshape(out, x.shape)
 
 
 # ---------------------------------------------------------------- MLPs

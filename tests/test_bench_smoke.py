@@ -38,3 +38,24 @@ def test_fusion_suite_emits_json(tmp_path):
     assert fused["kernels_launched"] == 1
     assert unfused["kernels_launched"] == 2
     assert fused["us_per_call"] > 0 and "speedup" in fused
+
+
+@pytest.mark.slow
+def test_softmax_suite_emits_json(tmp_path):
+    """Planner v2 smoke: the softmax suite writes BENCH_softmax.json and
+    the fused schedule really is reduce + ONE epilogue (2 launches) vs 3."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "softmax",
+         "--repeats", "1", "--sizes", "20000", "--json-dir", str(tmp_path)],
+        cwd=str(REPO), env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+
+    payload = json.loads((tmp_path / "BENCH_softmax.json").read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    fused = rows["softmax.n20000.fused"]
+    unfused = rows["softmax.n20000.unfused"]
+    assert fused["kernels_launched"] == 2
+    assert unfused["kernels_launched"] == 3
+    assert fused["us_per_call"] > 0 and "speedup" in fused
