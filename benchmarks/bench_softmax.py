@@ -1,8 +1,17 @@
-"""Fusion planner v2 claim: a reduction feeding further elementwise work
+"""Fusion planner claims, flat and axis-aware.
+
+Flat (planner v2): a reduction feeding further elementwise work
 (softmax-style normalize-by-sum) schedules as ONE generated reduction
 plus ONE fused epilogue kernel — versus the unfused baseline that
 materializes the exponentials, reduces the temporary, then divides
-(three launches and an extra HBM round-trip for the temporary)."""
+(three launches and an extra HBM round-trip for the temporary).
+
+Batched (planner v3, axis-aware): softmax over a full ``(B, N)`` matrix
+schedules as ONE row-segmented reduction wave (one accumulator per row)
+plus ONE fused 2-D epilogue — 2 launches for the whole batch.  The
+unfused baseline is what the serving path did before axis-aware fusion:
+one 3-launch flat schedule per row, ``3·B`` launches total.  The stable
+variant stays at 2 launches (max + shifted-exp sum share one wave)."""
 
 from __future__ import annotations
 
@@ -15,47 +24,113 @@ import repro.core.array as ga
 from repro.core import dispatch
 
 
-def run(repeats: int = 5, sizes=(100_000, 1_000_000)):
+def _flat(n: int, repeats: int, rng) -> None:
+    x = rng.standard_normal(n).astype(np.float32)
+    X = ga.to_gpu(x)
+
+    def fused():
+        # reduce(sum of exp) + epilogue(exp/s0): 2 launches
+        return ga.softmax(X).value
+
+    def unfused():
+        # eager 3-launch baseline: map, reduce the temp, divide
+        e = ga.exp(X).evaluate()
+        s = float(e.sum())
+        return (e / s).value
+
+    # correctness guard before timing anything
+    np.testing.assert_allclose(np.asarray(fused()),
+                               np.asarray(jax.nn.softmax(jnp.asarray(x))),
+                               atol=1e-5)
+
+    # per-bucket tune BOTH paths' generated kernels (block_rows), so
+    # the comparison is launch-schedule vs launch-schedule, not
+    # tuned-vs-untuned
+    ga.autotune(ga.softmax(X), repeats=3, warmup=1)
+    E = ga.exp(X)
+    ga.plan(E._expr).autotune(repeats=1, warmup=1)
+    EV = ga.to_gpu(E.value)
+    ga.autotune(EV.sum(), repeats=3, warmup=1)
+    ga.plan((EV / 2.0)._expr).autotune(repeats=1, warmup=1)
+
+    fused(); unfused()  # warm the driver cache
+    with dispatch.count_launches() as cf:
+        fused()
+    with dispatch.count_launches() as cu:
+        unfused()
+    t_fused = timeit(fused, repeats=repeats)
+    t_unfused = timeit(unfused, repeats=repeats)
+    emit(f"softmax.n{n}.fused", t_fused,
+         f"{cf.delta} launches (reduce + fused epilogue)",
+         kernels_launched=cf.delta, speedup=t_unfused / t_fused)
+    emit(f"softmax.n{n}.unfused", t_unfused,
+         f"{cu.delta} launches (map; reduce temp; divide)",
+         kernels_launched=cu.delta)
+
+
+def _batched(B: int, N: int, repeats: int, rng) -> None:
+    x = rng.standard_normal((B, N)).astype(np.float32)
+    X = ga.to_gpu(x)
+    row_arrays = [ga.to_gpu(x[i]) for i in range(B)]
+
+    def fused():
+        # ONE row-segmented reduce wave + ONE fused 2-D epilogue
+        return ga.softmax(X).value
+
+    def fused_stable():
+        # max + shifted-exp sum share the wave: still 2 launches
+        return ga.softmax(X, stable=True).value
+
+    def unfused():
+        # pre-axis-aware serving path: a 3-launch flat schedule per row
+        outs = []
+        for R in row_arrays:
+            e = ga.exp(R).evaluate()
+            s = float(e.sum())
+            outs.append((e / s).value)
+        return jnp.stack(outs)
+
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=-1))
+    np.testing.assert_allclose(np.asarray(fused()), ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused_stable()), ref, atol=1e-5)
+
+    # per-bucket tune the fused row kernels (the stable plan's wave and
+    # epilogue are structurally different kernels — tune them too) and
+    # the per-row baseline
+    ga.autotune(ga.softmax(X), repeats=3, warmup=1)
+    ga.autotune(ga.softmax(X, stable=True), repeats=3, warmup=1)
+    R0 = row_arrays[0]
+    ga.plan(ga.exp(R0)._expr).autotune(repeats=1, warmup=1)
+    EV = ga.to_gpu(ga.exp(R0).value)
+    ga.autotune(EV.sum(), repeats=3, warmup=1)
+    ga.plan((EV / 2.0)._expr).autotune(repeats=1, warmup=1)
+
+    fused(); fused_stable(); unfused()  # warm the driver cache
+    with dispatch.count_launches() as cf:
+        fused()
+    with dispatch.count_launches() as cs:
+        fused_stable()
+    with dispatch.count_launches() as cu:
+        unfused()
+    t_fused = timeit(fused, repeats=repeats)
+    t_stable = timeit(fused_stable, repeats=repeats)
+    t_unfused = timeit(unfused, repeats=repeats)
+    tag = f"softmax.b{B}x{N}"
+    emit(f"{tag}.fused", t_fused,
+         f"{cf.delta} launches (row wave + fused 2-D epilogue)",
+         kernels_launched=cf.delta, speedup=t_unfused / t_fused)
+    emit(f"{tag}.fused_stable", t_stable,
+         f"{cs.delta} launches (max+shifted-sum wave + epilogue)",
+         kernels_launched=cs.delta, speedup=t_unfused / t_stable)
+    emit(f"{tag}.unfused", t_unfused,
+         f"{cu.delta} launches (3 per row, B={B})",
+         kernels_launched=cu.delta)
+
+
+def run(repeats: int = 5, sizes=(100_000,),
+        batches=((32, 1024), (64, 4096), (256, 8192))):
     rng = np.random.default_rng(0)
     for n in sizes:
-        x = rng.standard_normal(n).astype(np.float32)
-        X = ga.to_gpu(x)
-
-        def fused():
-            # reduce(sum of exp) + epilogue(exp/s0): 2 launches
-            return ga.softmax(X).value
-
-        def unfused():
-            # eager 3-launch baseline: map, reduce the temp, divide
-            e = ga.exp(X).evaluate()
-            s = float(e.sum())
-            return (e / s).value
-
-        # correctness guard before timing anything
-        np.testing.assert_allclose(np.asarray(fused()),
-                                   np.asarray(jax.nn.softmax(jnp.asarray(x))),
-                                   atol=1e-5)
-
-        # per-bucket tune BOTH paths' generated kernels (block_rows), so
-        # the comparison is launch-schedule vs launch-schedule, not
-        # tuned-vs-untuned
-        ga.autotune(ga.softmax(X), repeats=1, warmup=1)
-        E = ga.exp(X)
-        ga.plan(E._expr).autotune(repeats=1, warmup=1)
-        EV = ga.to_gpu(E.value)
-        ga.autotune(EV.sum(), repeats=1, warmup=1)
-        ga.plan((EV / 2.0)._expr).autotune(repeats=1, warmup=1)
-
-        fused(); unfused()  # warm the driver cache
-        with dispatch.count_launches() as cf:
-            fused()
-        with dispatch.count_launches() as cu:
-            unfused()
-        t_fused = timeit(fused, repeats=repeats)
-        t_unfused = timeit(unfused, repeats=repeats)
-        emit(f"softmax.n{n}.fused", t_fused,
-             f"{cf.delta} launches (reduce + fused epilogue)",
-             kernels_launched=cf.delta, speedup=t_unfused / t_fused)
-        emit(f"softmax.n{n}.unfused", t_unfused,
-             f"{cu.delta} launches (map; reduce temp; divide)",
-             kernels_launched=cu.delta)
+        _flat(n, repeats, rng)
+    for B, N in batches:
+        _batched(B, N, repeats, rng)

@@ -8,8 +8,18 @@
 #   table4  — bench_nn:          brute-force nearest neighbor scaling
 #   §5.2    — bench_elementwise: fused RTCG kernels vs eager temporaries,
 #             plus DAG-level map-reduce fusion (1 launch vs 2)
+#   softmax — bench_softmax:     flat + axis-aware batched softmax (2
+#             launches for a whole (B, N) batch vs 3·B unfused)
+#   rmsnorm — bench_rmsnorm:     planner-fused row norm vs hand-written
+#             Pallas kernel vs eager baseline
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
+#
+# ``--compare DIR`` re-reads the committed ``BENCH_<suite>.json`` from
+# DIR and fails (exit 1) when a fused row regressed by more than
+# ``--compare-tol`` (default 20%).  Rows are matched by name; the metric
+# is the row's ``speedup`` over its same-run unfused baseline when
+# present (machine-portable), else ``us_per_call``.
 #
 # All numbers are CPU (interpret-mode Pallas / XLA-CPU) wall clock — the
 # TPU-target roofline lives in EXPERIMENTS.md §Roofline, produced by
@@ -21,6 +31,44 @@ import traceback
 from pathlib import Path
 
 
+def compare_rows(fresh: dict, committed: dict, tol: float = 0.20) -> list[str]:
+    """Regressions in *fused* rows of ``fresh`` vs ``committed``.
+
+    Only rows whose name marks them as a fused path (``.fused`` /
+    ``.fused_stable`` suffixes) gate the build; baselines move with the
+    machine.  Rows present on one side only are skipped (a new suite
+    size is not a regression).  Returns human-readable messages.
+    """
+    old = {r["name"]: r for r in committed.get("rows", [])}
+    problems = []
+    for row in fresh.get("rows", []):
+        name = row["name"]
+        if ".fused" not in name:
+            continue
+        ref = old.get(name)
+        if ref is None:
+            continue
+        # the launch schedule is the fusion contract and is noise-free:
+        # a fused row that needs MORE launches always fails, whatever tol
+        if ("kernels_launched" in row and "kernels_launched" in ref
+                and row["kernels_launched"] > ref["kernels_launched"]):
+            problems.append(
+                f"{name}: {row['kernels_launched']} launches > committed "
+                f"{ref['kernels_launched']} (fusion schedule regressed)")
+            continue
+        if "speedup" in row and "speedup" in ref:
+            # machine-portable: fused-vs-unfused ratio within one run
+            if row["speedup"] < ref["speedup"] * (1.0 - tol):
+                problems.append(
+                    f"{name}: speedup {row['speedup']:.2f}x < "
+                    f"{(1 - tol):.0%} of committed {ref['speedup']:.2f}x")
+        elif row["us_per_call"] > ref["us_per_call"] * (1.0 + tol):
+            problems.append(
+                f"{name}: {row['us_per_call']:.1f}us > "
+                f"{(1 + tol):.0%} of committed {ref['us_per_call']:.1f}us")
+    return problems
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list: table1,table2,...")
@@ -30,26 +78,43 @@ def main() -> None:
     ap.add_argument("--sizes", default="",
                     help="comma list of element counts for the fusion/softmax "
                          "suites (smoke tests use small sizes)")
+    ap.add_argument("--batches", default="",
+                    help="comma list of BxN row shapes (e.g. 8x512,64x4096) "
+                         "for the batched softmax / rmsnorm suites")
+    ap.add_argument("--compare", default="",
+                    help="directory holding committed BENCH_<suite>.json; "
+                         "fail on >tol regression in fused rows")
+    ap.add_argument("--compare-tol", type=float, default=0.20)
     args = ap.parse_args()
 
     from benchmarks import (bench_copperhead, bench_dgfem, bench_elementwise,
                             bench_filterbank, bench_model, bench_nn,
-                            bench_softmax)
+                            bench_rmsnorm, bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
     from repro.core import dispatch
     from repro.core.cache import environment_fingerprint
 
     fusion_kwargs = {}
+    softmax_kwargs = {}
+    rmsnorm_kwargs = {}
     if args.sizes:
-        fusion_kwargs["sizes"] = tuple(int(s) for s in args.sizes.split(","))
+        sizes = tuple(int(s) for s in args.sizes.split(","))
+        fusion_kwargs["sizes"] = sizes
+        softmax_kwargs["sizes"] = sizes
+    if args.batches:
+        shapes = tuple(tuple(int(d) for d in s.split("x"))
+                       for s in args.batches.split(","))
+        softmax_kwargs["batches"] = shapes
+        rmsnorm_kwargs["shapes"] = shapes
 
     suites = {
         "table1": bench_filterbank.run,
         "table2": bench_copperhead.run,
         "table4": bench_nn.run,
         "fusion": lambda repeats: bench_elementwise.run(repeats=repeats, **fusion_kwargs),
-        "softmax": lambda repeats: bench_softmax.run(repeats=repeats, **fusion_kwargs),
+        "softmax": lambda repeats: bench_softmax.run(repeats=repeats, **softmax_kwargs),
+        "rmsnorm": lambda repeats: bench_rmsnorm.run(repeats=repeats, **rmsnorm_kwargs),
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }
@@ -58,6 +123,7 @@ def main() -> None:
     json_dir.mkdir(parents=True, exist_ok=True)
     header()
     failed = []
+    regressions: list[str] = []
     for name in chosen:
         row_start = len(common.ROWS)
         compiles0, launches0 = dispatch.compile_count(), dispatch.launch_count()
@@ -82,8 +148,22 @@ def main() -> None:
         out = json_dir / f"BENCH_{name}.json"
         out.write_text(json.dumps(payload, indent=2, default=str))
         print(f"# wrote {out}", flush=True)
+        if args.compare:
+            committed = Path(args.compare) / f"BENCH_{name}.json"
+            if committed.exists():
+                probs = compare_rows(payload, json.loads(committed.read_text()),
+                                     tol=args.compare_tol)
+                regressions.extend(f"[{name}] {p}" for p in probs)
+            else:
+                print(f"# compare: no committed {committed}, skipping",
+                      flush=True)
+    if regressions:
+        print("PERF REGRESSIONS (fused rows):", file=sys.stderr)
+        for p in regressions:
+            print(f"  {p}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
+    if failed or regressions:
         sys.exit(1)
 
 

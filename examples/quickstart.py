@@ -21,6 +21,21 @@ print("fused softmax sums to:", float(sm.sum()))
 print("variance (2 reduce launches, /n on host):",
       float(((v - v.mean()) ** 2).mean()))
 
+# 1c. Axis-aware fusion (planner v3): a whole (B, N) batch of rows is
+#     STILL 2 launches — one row-segmented reduction wave (one
+#     accumulator per row; stable softmax's max and shifted-exp sum
+#     share it) plus one fused 2-D epilogue.  Unequal-length leaves
+#     broadcast inside the fused kernel: (N,) weights per-col, per-row
+#     reduced values as (B, 1) args — batched rmsnorm rides the same
+#     schedule.
+scores = ga.to_gpu(np.random.randn(32, 1024).astype(np.float32))
+batched = ga.softmax(scores, stable=True).value       # (32, 1024), 2 launches
+print("batched softmax rows sum to 1:",
+      bool(np.allclose(np.asarray(batched.sum(axis=-1)), 1.0, atol=1e-5)))
+w = ga.to_gpu(np.random.randn(1024).astype(np.float32))
+rms = (scores / (((scores * scores).mean(axis=-1) + 1e-6).sqrt()) * w).value
+print("fused batched rmsnorm:", rms.shape)            # also 2 launches
+
 # 2. ElementwiseKernel: C-like snippet -> generated tiled Pallas kernel
 #    (paper Fig. 4a, verbatim API)
 from repro.core import ElementwiseKernel

@@ -9,7 +9,8 @@ from repro.core.cache import DiskCache, LRUCache, environment_fingerprint, stabl
 from repro.core.codebuilder import (Assign, Block, Comment, For, FunctionBody,
                                     FunctionDeclaration, If, Line, Module, Return)
 from repro.core.dsl import cu, op_add, op_max, op_min, op_mul
-from repro.core.elementwise import ElementwiseKernel, ScalarArg, VectorArg
+from repro.core.elementwise import (BroadcastArg, ElementwiseKernel,
+                                    ScalarArg, VectorArg)
 from repro.core.reduction import ReductionKernel
 from repro.core.rtcg import SourceModule
 from repro.core.scan import ExclusiveScanKernel, InclusiveScanKernel, ScanKernel
@@ -22,7 +23,7 @@ __all__ = [
     "Assign", "Block", "Comment", "For", "FunctionBody",
     "FunctionDeclaration", "If", "Line", "Module", "Return",
     "cu", "op_add", "op_max", "op_min", "op_mul",
-    "ElementwiseKernel", "ScalarArg", "VectorArg",
+    "BroadcastArg", "ElementwiseKernel", "ScalarArg", "VectorArg",
     "ReductionKernel", "SourceModule", "KernelTemplate", "render_string",
     "ExclusiveScanKernel", "InclusiveScanKernel", "ScanKernel",
 ]

@@ -13,52 +13,54 @@ and emits ONE fused elementwise kernel through the same RTCG machinery
 compiles exactly one generated kernel with no temporaries — the paper's
 expression-template argument, done at run time with trivial code.
 
-The **fusion planner** extends this across the map/reduce boundary, and
-— planner v2 — lets reductions sit *inside* the DAG, not only at its
-root.  ``.sum()/.max()/.min()/.mean()/.dot()`` are lazy: they return a
-scalar-shaped RTCGArray holding a ``reduce`` node, so
+The **fusion planner** extends this across the map/reduce boundary
+(planner v2: reductions as *interior* DAG nodes), and — planner v3 —
+is **axis-aware**: reductions may run per row over 2-D operands.
+``.sum(axis=-1)/.max(axis=-1)/.mean(axis=-1)`` on a ``(B, N)`` array
+return ``(B,)``-shaped lazy ``reduce`` nodes, so
 
-    softmax = x.exp() / x.exp().sum()          # reduction feeds elementwise
-    centered = x - x.mean()
-    var = ((x - x.mean()) ** 2).mean()         # nested reductions
+    softmax = x.exp() / x.exp().sum(axis=-1)   # batched: (B, N) rows
+    rms     = x / ((x * x).mean(axis=-1) + eps).sqrt() * w
 
-all stay lazy until evaluation.  The scheduler (`plan_many`) then emits
-a *minimal launch schedule*:
+schedule as ONE row-segmented `ReductionKernel` launch (one accumulator
+*per row*) plus ONE fused `ElementwiseKernel` epilogue in the 2-D row
+layout — 2 launches for the whole batch instead of ``3·B`` per-row
+launches or an unfused fallback.  Inside an expression a row-reduced
+value broadcasts like a keepdims ``(B, 1)`` operand.
 
-  * reduce nodes are partitioned into dependency **waves**; each wave
-    compiles to ONE multi-accumulator `ReductionKernel` (sibling
-    reductions — min/max/sum quantization stats — share one pass over
-    the mapped chain and cost one launch);
-  * already-computed reductions appearing inside later snippets become
-    positional **scalar args** ``s<j>`` of the generated kernel, so the
-    epilogue elementwise work after a reduction fuses into ONE
-    `ElementwiseKernel` launch (softmax = reduce + epilogue = 2);
-  * roots that are pure scalar arithmetic over reduced values (e.g. the
+Scheduling (`plan_many`) emits a *minimal launch schedule*:
+
+  * reduce nodes are partitioned into dependency **waves**; each wave is
+    ONE multi-accumulator `ReductionKernel` launch (sibling reductions —
+    min/max/sum quantization stats — share one pass over the mapped
+    chain).  Row waves are grouped per ``(B, N)`` geometry, and a
+    row reduction depending on a *sibling* row reduction of the same
+    geometry joins the same wave: inside a row block the dependency
+    resolves in-kernel (``_acc<k>``), which is how stable softmax keeps
+    max + shifted-exp-sum in one launch;
+  * computed reductions re-enter later snippets as positional args:
+    scalar reductions as ``s<j>`` scalar args, row reductions as
+    ``r<j>`` per-row `BroadcastArg`s bound ``(B, 1)``;
+  * every vector-valued root fuses into ONE epilogue `ElementwiseKernel`
+    per output geometry; leaves of unequal length broadcast inside one
+    epilogue (``(B, 1)`` per-row, ``(N,)`` per-col, 1-element as scalar
+    args) instead of raising on mismatched sizes;
+  * repeated subtrees across the snippets of one generated kernel are
+    hoisted into named temporaries (``_t<k>``) in the generated source —
+    common-subexpression sharing, so sibling reductions over one chain
+    evaluate the chain once;
+  * roots that are pure scalar/row arithmetic over reduced values (the
     ``/ n`` of ``.mean()``) are folded on the host — zero extra launches.
 
-Plan contract (v1, still the single-kernel fast path for reduce-free
-chains and root-level reductions):
-
-  * DAG -> C snippet: leaves become positional vector args ``v0..vk``
-    (dtype-preserving, deduplicated by identity), embedded Python
-    scalars become positional scalar args ``s0..sj`` (so the compiled
-    kernel is reusable across scalar churn), interior nodes serialize
-    to infix/intrinsic C (`_Expr.collect`).
-  * Plans are **dtype-faithful**: the plan dtype is
-    ``jnp.result_type`` over leaf dtypes *and* embedded scalars (with
-    float promotion under transcendental ops), generated scalar args
-    are typed accordingly (never hard-coded float32), and max/min
-    neutral elements come from ``jnp.finfo``/``jnp.iinfo`` of the plan
-    dtype — never a baked ``±3.0e38``.
-  * Generated *kernels* are content-cached on
-    ``stable_hash(snippet, leaf dtypes, scalar dtypes, reduce_expr,
-    neutral, out dtype)`` — scalar values never enter the key, so an
-    isomorphic expression reuses the compiled kernel.  Both kernel
-    caches are bounded `LRUCache`s (``REPRO_FUSION_CACHE_SIZE``,
-    default 128 each); eviction only costs a rebuild.  Planning itself
-    (DAG walk + snippet + hash) is re-done per call; it is a few
-    microseconds of pure Python, and launch-path cost then rides the
-    shape-bucketed drivers of `repro.core.dispatch`.
+Plans are **dtype-faithful**: the plan dtype is ``jnp.result_type`` over
+leaf dtypes *and* embedded scalars (with float promotion under
+transcendental ops), generated scalar args are typed accordingly, and
+max/min neutral elements come from ``jnp.finfo``/``jnp.iinfo`` of the
+plan dtype.  Generated kernels are content-cached on DAG structure ×
+dtypes × arg kinds (never scalar values) in bounded `LRUCache`s
+(``REPRO_FUSION_CACHE_SIZE``, default 128 each); launch-path cost rides
+the shape-bucketed drivers of `repro.core.dispatch` (row kernels bucket
+on *both* the batch and row-length dimensions).
 
 Set ``repro.core.array.EAGER = True`` to force one-kernel-per-op
 execution, or pass ``fuse=False`` to a reduction to run the unfused
@@ -78,7 +80,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import LRUCache, stable_hash
-from repro.core.elementwise import ElementwiseKernel, ScalarArg, VectorArg, _canonical
+from repro.core.elementwise import (BroadcastArg, ElementwiseKernel, ScalarArg,
+                                    VectorArg, _canonical)
 from repro.core.reduction import ReductionKernel
 
 EAGER = False
@@ -121,57 +124,19 @@ def _neutral_for(kind: str, dtype) -> str:
 class _Expr:
     """Expression DAG node. Leaves hold concrete jnp arrays or scalars.
 
-    ``reduce`` nodes (``value`` names the kind: sum/max/min) are scalar-
-    shaped interior nodes: serialization registers them as scalar-arg
-    slots (the value is computed by an earlier launch of the schedule),
-    which is exactly how a reduction's result re-enters fused
-    elementwise code.
+    ``reduce`` nodes (``value`` names the kind: sum/max/min) are interior
+    nodes: ``axis is None`` plans a full (scalar) reduction, ``axis ==
+    -1`` a per-row reduction over the chain's last dimension, whose
+    ``(B,)`` result re-enters fused elementwise code as a per-row
+    broadcast argument.
     """
 
-    def __init__(self, op: str, children: tuple = (), value: Any = None):
+    def __init__(self, op: str, children: tuple = (), value: Any = None,
+                 axis: int | None = None):
         self.op = op  # 'leaf' | 'scalar' | 'reduce' | '+','-','*','/','**' | unary
         self.children = children
         self.value = value
-
-    def collect(self, leaves: list, scalars: list, allow_reduce: bool = False) -> str:
-        """Serialize to a C snippet, registering leaves/scalars by position.
-
-        ``scalars`` entries are either embedded Python numbers or
-        `_Expr` reduce nodes (deduplicated by identity) whose computed
-        value is bound at launch time.
-        """
-        if self.op == "leaf":
-            for j, (arr, _) in enumerate(leaves):
-                if arr is self.value:
-                    return f"v{j}[i]"
-            leaves.append((self.value, None))
-            return f"v{len(leaves) - 1}[i]"
-        if self.op == "scalar":
-            scalars.append(self.value)
-            return f"s{len(scalars) - 1}"
-        if self.op == "reduce":
-            if not allow_reduce:
-                raise ValueError(
-                    "reduction is an interior node here; plan it through "
-                    "plan_many (fusion planner v2)")
-            for j, s in enumerate(scalars):
-                if s is self:
-                    return f"s{j}"
-            scalars.append(self)
-            return f"s{len(scalars) - 1}"
-        if self.op in ("+", "-", "*", "/"):
-            a = self.children[0].collect(leaves, scalars, allow_reduce)
-            b = self.children[1].collect(leaves, scalars, allow_reduce)
-            return f"({a} {self.op} {b})"
-        if self.op == "**":
-            a = self.children[0].collect(leaves, scalars, allow_reduce)
-            b = self.children[1].collect(leaves, scalars, allow_reduce)
-            return f"powf({a}, {b})"
-        if self.op == "neg":
-            return f"(-{self.children[0].collect(leaves, scalars, allow_reduce)})"
-        if self.op in _UNARY_FUNCS:
-            return f"{_UNARY_FUNCS[self.op]}({self.children[0].collect(leaves, scalars, allow_reduce)})"
-        raise ValueError(f"unknown expr op {self.op!r}")
+        self.axis = axis
 
     def structure(self) -> str:
         """Shape-free structural key for kernel caching (scalar values are
@@ -181,7 +146,7 @@ class _Expr:
         if self.op == "scalar":
             return "S"
         if self.op == "reduce":
-            return f"(R:{self.value} {self.children[0].structure()})"
+            return f"(R:{self.value}:{self.axis} {self.children[0].structure()})"
         return f"({self.op} {' '.join(c.structure() for c in self.children)})"
 
 
@@ -215,12 +180,47 @@ def _dtype_of(expr: _Expr):
     return _canonical(dt)
 
 
-def _shape_of(expr: _Expr) -> tuple:
+def _bshape(expr: _Expr) -> tuple:
+    """Broadcast shape of a node: a row reduction contributes its chain
+    shape with the last dim collapsed to 1 (keepdims semantics), so
+    ``x / x.sum(axis=-1)`` broadcasts like NumPy keepdims would."""
     if expr.op == "leaf":
         return tuple(expr.value.shape)
-    if expr.op in ("scalar", "reduce"):
+    if expr.op == "scalar":
         return ()
-    return tuple(np.broadcast_shapes(*[_shape_of(c) for c in expr.children]))
+    if expr.op == "reduce":
+        if expr.axis is None:
+            return ()
+        child = _bshape(expr.children[0])
+        return child[:-1] + (1,)
+    return tuple(np.broadcast_shapes(*[_bshape(c) for c in expr.children]))
+
+
+def _has_row_reduce_outside(expr: _Expr) -> bool:
+    """Any row reduction reachable without crossing another reduction."""
+    if expr.op == "reduce":
+        return expr.axis is not None
+    return any(_has_row_reduce_outside(c) for c in expr.children)
+
+
+def _shape_of(expr: _Expr) -> tuple:
+    """User-visible shape.  Row reductions produce ``(B,)`` results (no
+    keepdims), so expressions made *only* of reduced values — a root
+    reduce, or the host-folded ``sum/n`` of ``.mean(axis=-1)`` — drop
+    the trailing 1 that `_bshape` keeps for broadcasting."""
+    s = _bshape(expr)
+    if (s and s[-1] == 1 and not _vector_outside_reduce(expr)
+            and _has_row_reduce_outside(expr)):
+        return s[:-1]
+    return s
+
+
+def _row_geometry(bshape: tuple) -> tuple[int, int]:
+    """Collapse a >=2-D broadcast shape to (batch rows, row length)."""
+    lead = 1
+    for d in bshape[:-1]:
+        lead *= int(d)
+    return (max(1, lead), int(bshape[-1]))
 
 
 def _has_reduce(expr: _Expr) -> bool:
@@ -253,35 +253,184 @@ def _vector_outside_reduce(expr: _Expr) -> bool:
     return any(_vector_outside_reduce(c) for c in expr.children)
 
 
-def _extend_slot_dtypes(scalars: list, slot_dts: list, owner_dtype) -> None:
-    """Type the scalar-arg slots appended by the serialization of ONE
-    root/map chain: a computed reduction keeps its own plan dtype; an
-    embedded number promotes with the dtype of the chain that *owns* it
-    — never with unrelated outputs of the same schedule (an int chain
-    sharing a plan with a float chain must stay exact int), and never a
-    hard-coded float32."""
-    for s in scalars[len(slot_dts):]:
-        if isinstance(s, _Expr):
-            slot_dts.append(_dtype_of(s))
-        else:
-            slot_dts.append(_canonical(jnp.result_type(s, owner_dtype)))
+def _leaf_kind(arr, b: int, n: int) -> str:
+    """Classify a leaf against the plan geometry ``(b, n)``: 'full' reads
+    one element per lane, 'row'/'col' broadcast a (B,1)/(1,N) vector
+    across the block, 'scalar' binds a 1-element leaf as a scalar arg —
+    the broadcasting-leaves contract (unequal lengths fuse, they no
+    longer raise)."""
+    shape = tuple(int(d) for d in arr.shape)
+    size = 1
+    for d in shape:
+        size *= d
+    if size <= 1:
+        return "scalar"
+    if size == b * n:
+        return "full"
+    if len(shape) >= 2 and shape[-1] == 1 and size == b:
+        return "row"
+    if size == n and (len(shape) == 1 or shape[-1] == n):
+        return "col"
+    raise ValueError(
+        f"leaf of shape {shape} does not broadcast against plan geometry "
+        f"({b}, {n}); supported: full, (B, 1) per-row, (N,) per-col, "
+        f"1-element scalar")
+
+
+class _Serializer:
+    """Shared serialization state for every snippet of ONE generated
+    kernel: positional argument slots plus structural common-
+    subexpression elimination.
+
+    Slots: concrete array leaves -> ``v<j>`` (dedup by identity),
+    embedded Python numbers and computed *scalar* reductions -> ``s<j>``,
+    computed *row* reductions -> ``r<j>`` per-row broadcast args.  Reduce
+    nodes listed in ``local_nodes`` (same row wave) serialize to
+    ``_acc<k>`` — resolved in-kernel, no argument at all.
+
+    CSE: a first `count` pass tallies structurally-identical subtrees
+    across all roots; during `emit`, a subtree seen >= 2 times is
+    serialized once into a named temporary (``_t<k>`` prelude statement)
+    and referenced by name afterwards — sibling reductions over one
+    mapped chain evaluate the chain once per block.
+    """
+
+    def __init__(self, allow_reduce: bool = False, local_nodes: tuple = (),
+                 cse: bool = True):
+        self.allow_reduce = allow_reduce
+        self.local = {id(n): j for j, n in enumerate(local_nodes)}
+        self.cse = cse
+        self.leaves: list = []
+        self.scalars: list = []
+        self.scalar_dtypes: list = []
+        self.bvecs: list = []
+        self.bvec_dtypes: list = []
+        self.prelude: list = []
+        self._counts: dict = {}
+        self._skeys: dict = {}
+        self._temps: dict = {}
+
+    def _skey(self, e: _Expr):
+        k = self._skeys.get(id(e))
+        if k is None:
+            if e.op == "leaf":
+                k = ("leaf", id(e.value))
+            elif e.op == "scalar":
+                k = ("scalar", repr(e.value))
+            elif e.op == "reduce":
+                k = ("reduce", id(e))
+            else:
+                k = (e.op,) + tuple(self._skey(c) for c in e.children)
+            self._skeys[id(e)] = k
+        return k
+
+    def count(self, e: _Expr) -> None:
+        if not self.cse:
+            return
+        k = self._skey(e)
+        c = self._counts.get(k, 0) + 1
+        self._counts[k] = c
+        # don't descend into repeats: nested subtrees of a hoisted parent
+        # serialize once inside the temp, so they must not inflate counts
+        if c == 1 and e.op not in ("leaf", "scalar", "reduce"):
+            for ch in e.children:
+                self.count(ch)
+
+    def _has_local_reduce(self, e: _Expr) -> bool:
+        if e.op == "reduce" and id(e) in self.local:
+            return True
+        return any(self._has_local_reduce(c) for c in e.children)
+
+    def emit(self, e: _Expr) -> str:
+        k = self._skey(e)
+        hoist = (self.cse and e.op not in ("leaf", "scalar", "reduce")
+                 and self._counts.get(k, 0) >= 2
+                 and not self._has_local_reduce(e))
+        if hoist and k in self._temps:
+            return self._temps[k]
+        s = self._emit_node(e)
+        if hoist:
+            name = f"_t{len(self._temps)}"
+            self._temps[k] = name
+            self.prelude.append(f"{name} = {s}")
+            return name
+        return s
+
+    def _emit_node(self, e: _Expr) -> str:
+        if e.op == "leaf":
+            for j, a in enumerate(self.leaves):
+                if a is e.value:
+                    return f"v{j}[i]"
+            self.leaves.append(e.value)
+            return f"v{len(self.leaves) - 1}[i]"
+        if e.op == "scalar":
+            self.scalars.append(e.value)
+            self.scalar_dtypes.append(None)  # typed by finish_chain
+            return f"s{len(self.scalars) - 1}"
+        if e.op == "reduce":
+            if id(e) in self.local:
+                return f"_acc{self.local[id(e)]}"
+            if not self.allow_reduce:
+                raise ValueError(
+                    "reduction is an interior node here; plan it through "
+                    "plan_many (fusion planner v2)")
+            if e.axis is None:
+                for j, s in enumerate(self.scalars):
+                    if s is e:
+                        return f"s{j}"
+                self.scalars.append(e)
+                self.scalar_dtypes.append(_dtype_of(e))
+                return f"s{len(self.scalars) - 1}"
+            for j, nd in enumerate(self.bvecs):
+                if nd is e:
+                    return f"r{j}"
+            self.bvecs.append(e)
+            self.bvec_dtypes.append(_dtype_of(e))
+            return f"r{len(self.bvecs) - 1}"
+        if e.op in ("+", "-", "*", "/"):
+            a = self.emit(e.children[0])
+            b = self.emit(e.children[1])
+            return f"({a} {e.op} {b})"
+        if e.op == "**":
+            a = self.emit(e.children[0])
+            b = self.emit(e.children[1])
+            return f"powf({a}, {b})"
+        if e.op == "neg":
+            return f"(-{self.emit(e.children[0])})"
+        if e.op in _UNARY_FUNCS:
+            return f"{_UNARY_FUNCS[e.op]}({self.emit(e.children[0])})"
+        raise ValueError(f"unknown expr op {e.op!r}")
+
+    def finish_chain(self, owner_dtype) -> None:
+        """Type the scalar slots appended by the chain just emitted: a
+        computed reduction keeps its own plan dtype (set at emit); an
+        embedded number promotes with the dtype of the chain that *owns*
+        it — never with unrelated outputs of the same schedule."""
+        for j in range(len(self.scalar_dtypes)):
+            if self.scalar_dtypes[j] is None:
+                self.scalar_dtypes[j] = _canonical(
+                    jnp.result_type(self.scalars[j], owner_dtype))
+
+    def leaf_kinds(self, b: int, n: int) -> list:
+        return [_leaf_kind(a, b, n) for a in self.leaves]
 
 
 @dataclass
 class FusionPlan:
     """Executable product of the fusion planner (module docstring: contract).
 
-    ``snippet`` is the serialized DAG in the C dialect; ``leaves`` and
-    ``scalars`` are the positional arguments it references as ``v<j>[i]``
-    / ``s<j>`` (a scalar entry may be a computed-reduction `_Expr` whose
-    value is bound at launch).  ``reduce_expr is None`` plans a pure
-    elementwise kernel (one launch, writes the output template);
-    otherwise the snippet becomes the ``map_expr`` of a single generated
-    `ReductionKernel` (one launch, returns scalar(s)).  Lists in
-    ``snippet``/``out_dtype``/``reduce_expr``/``neutral`` plan ONE
+    ``snippet`` is the serialized DAG in the C dialect (``prelude`` holds
+    hoisted common subexpressions); ``leaves``/``scalars``/``bvecs`` are
+    the positional arguments it references as ``v<j>``/``s<j>``/``r<j>``
+    (scalar entries may be computed scalar reductions, ``bvecs`` are
+    computed row reductions, both bound at launch).  ``reduce_expr is
+    None`` plans a fused elementwise kernel; otherwise the snippet(s)
+    become the map expression(s) of a single generated `ReductionKernel`
+    — flat when ``axis is None``, row-segmented (one accumulator per row
+    of the ``geometry``) when ``axis == -1``.  Lists plan ONE
     multi-output kernel (`plan_many`).  Generated kernels are
-    content-cached on ``key`` (DAG structure x dtypes, never scalar
-    values), so isomorphic plans share one kernel.
+    content-cached on ``key`` (DAG structure × dtypes × arg kinds, never
+    scalar values), so isomorphic plans share one kernel.
     """
 
     snippet: str | list
@@ -292,7 +441,14 @@ class FusionPlan:
     neutral: str | list | None = None
     key: str = ""
     scalar_dtypes: list = field(default_factory=list)
-    nodes: list = field(default_factory=list)  # reduce nodes this plan computes
+    nodes: list = field(default_factory=list)   # reduce nodes this plan computes
+    bvecs: list = field(default_factory=list)   # row-reduce _Expr args
+    bvec_dtypes: list = field(default_factory=list)
+    leaf_kinds: list = field(default_factory=list)
+    prelude: list = field(default_factory=list)
+    axis: int | None = None                     # None: flat | -1: row layout
+    geometry: tuple = ()                        # (n,) flat | (B, N) rows
+    out_shapes: list = field(default_factory=list)  # epilogue template shapes
 
     @property
     def kernel_launches(self) -> int:
@@ -306,9 +462,20 @@ class FusionPlan:
         return list(self.out_dtype) if isinstance(self.out_dtype, (list, tuple)) \
             else [self.out_dtype]
 
-    def _scalar_args(self) -> list:
+    def _arg_list(self) -> list:
         dts = self.scalar_dtypes or [self._out_dtypes()[0]] * len(self.scalars)
-        return [ScalarArg(dt, f"s{j}") for j, dt in enumerate(dts)]
+        args = [ScalarArg(dt, f"s{j}") for j, dt in enumerate(dts)]
+        args += [BroadcastArg(dt, f"r{j}", "row")
+                 for j, dt in enumerate(self.bvec_dtypes)]
+        kinds = self.leaf_kinds or ["full"] * len(self.leaves)
+        for j, (a, k) in enumerate(zip(self.leaves, kinds)):
+            if k == "full":
+                args.append(VectorArg(a.dtype, f"v{j}"))
+            elif k == "scalar":
+                args.append(ScalarArg(a.dtype, f"v{j}"))
+            else:
+                args.append(BroadcastArg(a.dtype, f"v{j}", k))
+        return args
 
     def kernel(self):
         """Build-or-fetch the one generated kernel realizing this plan."""
@@ -319,21 +486,21 @@ class FusionPlan:
                 odts = self._out_dtypes()
                 out_names = ["out"] if not self._multi else \
                     [f"out{j}" for j in range(len(snips))]
-                args = (self._scalar_args()
-                        + [VectorArg(a.dtype, f"v{j}") for j, a in enumerate(self.leaves)]
+                args = (self._arg_list()
                         + [VectorArg(d, nm) for nm, d in zip(out_names, odts)])
-                operation = "; ".join(f"{nm}[i] = {sn}"
-                                      for nm, sn in zip(out_names, snips))
-                kern = ElementwiseKernel(args, operation,
-                                         name=f"fused_{self.key[:8]}")
+                stmts = list(self.prelude) + [
+                    f"{nm}[i] = {sn}" for nm, sn in zip(out_names, snips)]
+                kern = ElementwiseKernel(
+                    args, "; ".join(stmts), name=f"fused_{self.key[:8]}",
+                    layout="rows" if self.axis is not None else "flat")
                 _kernel_cache.put(self.key, kern)
             return kern
         kern = _reduce_cache.get(self.key)
         if kern is None:
-            args = (self._scalar_args()
-                    + [VectorArg(a.dtype, f"v{j}") for j, a in enumerate(self.leaves)])
             kern = ReductionKernel(self.out_dtype, self.neutral, self.reduce_expr,
-                                   self.snippet, args, name=f"fusedred_{self.key[:8]}")
+                                   self.snippet, self._arg_list(),
+                                   name=f"fusedred_{self.key[:8]}",
+                                   axis=self.axis, prelude=self.prelude)
             _reduce_cache.put(self.key, kern)
         return kern
 
@@ -349,12 +516,26 @@ class FusionPlan:
                 svals.append(s)
         return svals
 
+    def _resolve_bvecs(self, values: dict | None = None) -> list:
+        out = []
+        for nd in self.bvecs:
+            if values is None or id(nd) not in values:
+                raise ValueError("plan references a row reduction whose value "
+                                 "is not computed yet (launch the schedule)")
+            out.append(values[id(nd)])
+        return out
+
     def _call_args(self, values: dict | None = None) -> list:
-        call_args = self.resolve_scalars(values) + list(self.leaves)
+        kinds = self.leaf_kinds or ["full"] * len(self.leaves)
+        leaf_args = [jnp.asarray(a).reshape(()) if k == "scalar" else a
+                     for a, k in zip(self.leaves, kinds)]
+        call_args = (self.resolve_scalars(values) + self._resolve_bvecs(values)
+                     + leaf_args)
         if self.reduce_expr is None:
             # proper output template(s): allocate, never alias an input
-            shape = self.leaves[0].shape
-            call_args.extend(jnp.zeros(shape, d) for d in self._out_dtypes())
+            shapes = self.out_shapes or [self.geometry] * len(self._out_dtypes())
+            call_args.extend(jnp.zeros(s, d)
+                             for s, d in zip(shapes, self._out_dtypes()))
         return call_args
 
     def launch(self, values: dict | None = None):
@@ -373,20 +554,25 @@ class FusionSchedule:
     """Minimal launch schedule for DAGs with interior reductions.
 
     ``steps`` are dependency-ordered reduction waves (each ONE generated
-    multi-accumulator `ReductionKernel` launch); ``epilogue`` is the ONE
-    fused elementwise kernel covering every vector-valued root, with
-    computed reductions bound as scalar args; scalar-only roots (e.g.
-    the ``/n`` of a terminal ``.mean()``) are folded on the host for
-    zero extra launches.
+    multi-accumulator `ReductionKernel` launch — flat or row-segmented);
+    ``epilogues`` hold ONE fused elementwise kernel per output geometry,
+    with computed reductions bound as scalar (``s<j>``) or per-row
+    broadcast (``r<j>``) args; scalar-only roots (e.g. the ``/n`` of a
+    terminal ``.mean()``) are folded on the host for zero extra launches.
     """
 
     steps: list = field(default_factory=list)       # FusionPlans (reductions)
-    epilogue: FusionPlan | None = None
+    epilogues: list = field(default_factory=list)   # FusionPlans (elementwise)
     outputs: list = field(default_factory=list)     # (kind, payload) per root
 
     @property
+    def epilogue(self):
+        """Single-epilogue compat accessor (most schedules have <= 1)."""
+        return self.epilogues[0] if self.epilogues else None
+
+    @property
     def kernel_launches(self) -> int:
-        return len(self.steps) + (1 if self.epilogue is not None else 0)
+        return len(self.steps) + len(self.epilogues)
 
     def _run_steps(self) -> dict:
         values: dict = {}
@@ -400,7 +586,7 @@ class FusionSchedule:
 
     def autotune(self, **tune_kwargs) -> list:
         """Per-bucket tune every generated kernel in the schedule (the
-        reduce waves, then the epilogue with the reduced values bound).
+        reduce waves, then the epilogues with the reduced values bound).
         Returns the `TuneReport` list."""
         reports = []
         values: dict = {}
@@ -411,16 +597,16 @@ class FusionSchedule:
                 outs = (outs,)
             for node, v in zip(step.nodes, outs):
                 values[id(node)] = v
-        if self.epilogue is not None:
-            reports.append(self.epilogue.autotune(values, **tune_kwargs))
+        for epi in self.epilogues:
+            reports.append(epi.autotune(values, **tune_kwargs))
         return reports
 
     def launch(self) -> list:
         values = self._run_steps()
-        epi_outs: tuple = ()
-        if self.epilogue is not None:
-            outs = self.epilogue.launch(values)
-            epi_outs = outs if isinstance(outs, tuple) else (outs,)
+        epi_outs: list = []
+        for epi in self.epilogues:
+            outs = epi.launch(values)
+            epi_outs.append(outs if isinstance(outs, tuple) else (outs,))
         results = []
         for kind, payload in self.outputs:
             if kind == "value":
@@ -428,15 +614,17 @@ class FusionSchedule:
             elif kind == "reduce":
                 results.append(values[id(payload)])
             elif kind == "epi":
-                results.append(epi_outs[payload])
-            else:  # host-folded scalar expression
-                snippet, scalars = payload
+                gi, idx = payload
+                results.append(epi_outs[gi][idx])
+            else:  # host-folded scalar/row expression over reduced values
+                snippet, scalars, bvecs = payload
                 from repro.core import snippets as _snippets
 
                 env = {"jnp": jnp, "jax": jax}
-                plan_stub = FusionPlan(snippet=snippet, scalars=scalars)
-                for j, v in enumerate(plan_stub.resolve_scalars(values)):
-                    env[f"s{j}"] = v
+                for j, s in enumerate(scalars):
+                    env[f"s{j}"] = values[id(s)] if isinstance(s, _Expr) else s
+                for j, nd in enumerate(bvecs):
+                    env[f"r{j}"] = values[id(nd)]
                 results.append(jnp.asarray(
                     eval(_snippets.translate_expression(snippet), env)))  # noqa: S307
         return results
@@ -449,62 +637,160 @@ def plan(expr: _Expr, reduce_expr: str | None = None,
 
     With ``reduce_expr`` the elementwise chain *becomes* the generated
     reduction's ``map_expr`` — map+reduce in a single kernel launch.
-    DAGs with *interior* reductions go through `plan_many`.
+    DAGs with *interior* reductions go through `plan_many`.  Reduce-free
+    chains over mixed-size leaves (``(B, N)`` with ``(N,)`` weights or
+    ``(B, 1)`` per-row vectors) plan the 2-D row layout; equal-size
+    leaves keep the flat lane layout.
     """
-    leaves: list = []
-    scalars: list = []
-    snippet = expr.collect(leaves, scalars)
-    arrs = [a for a, _ in leaves]
-    if not arrs:
+    ser = _Serializer(allow_reduce=False)
+    ser.count(expr)
+    snippet = ser.emit(expr)
+    if not ser.leaves:
         raise ValueError("expression has no array leaves")
     out_dtype = _dtype_of(expr)
-    key = stable_hash((snippet, [str(a.dtype) for a in arrs], len(scalars),
-                       reduce_expr or "", neutral or "", str(out_dtype)))
-    return FusionPlan(snippet=snippet, leaves=arrs, scalars=list(scalars),
-                      out_dtype=out_dtype, reduce_expr=reduce_expr,
-                      neutral=neutral, key=key,
-                      scalar_dtypes=[out_dtype] * len(scalars))
+    ser.finish_chain(out_dtype)
+    bs = _bshape(expr)
+    axis = None
+    if reduce_expr is None and len(bs) >= 2:
+        b, n = _row_geometry(bs)
+        kinds = ser.leaf_kinds(b, n)
+        if any(k in ("row", "col") for k in kinds):
+            axis = -1
+            geometry = (b, n)
+    if axis is None:
+        n = 1
+        for d in bs:
+            n *= int(d)
+        n = max(1, n)
+        geometry = (n,)
+        kinds = ser.leaf_kinds(1, n)
+    key = stable_hash((snippet, ser.prelude,
+                       [str(a.dtype) for a in ser.leaves], kinds,
+                       len(ser.scalars), reduce_expr or "", neutral or "",
+                       str(out_dtype), axis or 0))
+    return FusionPlan(snippet=snippet, leaves=list(ser.leaves),
+                      scalars=list(ser.scalars), out_dtype=out_dtype,
+                      reduce_expr=reduce_expr, neutral=neutral, key=key,
+                      scalar_dtypes=list(ser.scalar_dtypes), leaf_kinds=kinds,
+                      prelude=list(ser.prelude), axis=axis, geometry=geometry,
+                      out_shapes=[tuple(bs)] if reduce_expr is None else [])
 
 
-def _plan_reduce_wave(ready: list) -> FusionPlan:
+def _plan_reduce_wave(ready: list, axis: int | None = None) -> FusionPlan:
     """ONE multi-accumulator ReductionKernel plan for a wave of reduce
-    nodes whose interior dependencies are already computed: their mapped
-    chains share leaves/scalars positionally, so sibling reductions over
-    one chain ride a single pass over the data."""
-    leaves: list = []
-    scalars: list = []
-    slot_dts: list = []
+    nodes: their mapped chains share leaves/scalars positionally (CSE
+    hoists the repeated chain into one temporary), so sibling reductions
+    ride a single pass over the data.  Row waves (``axis=-1``) may
+    contain nodes depending on *earlier nodes of the same wave* — those
+    references resolve in-kernel as ``_acc<k>``."""
+    ser = _Serializer(allow_reduce=True,
+                      local_nodes=tuple(ready) if axis is not None else ())
+    for node in ready:
+        ser.count(node.children[0])
     snips, neutrals, rexprs, odts = [], [], [], []
     for node in ready:
-        snip = node.children[0].collect(leaves, scalars, allow_reduce=True)
+        snip = ser.emit(node.children[0])
         dt = _dtype_of(node.children[0])
-        _extend_slot_dtypes(scalars, slot_dts, dt)
+        ser.finish_chain(dt)
         snips.append(snip)
         odts.append(dt)
         neutrals.append(_neutral_for(node.value, dt))
         rexprs.append(_REDUCE_EXPRS[node.value])
-    arrs = [a for a, _ in leaves]
-    if not arrs:
+    if axis is None and ser.bvecs:
+        raise NotImplementedError(
+            "a row-wise reduction feeding a full reduction is not "
+            "fusable; evaluate the row reduction first")
+    if not ser.leaves:
         raise ValueError("reduction has no array leaves")
-    key = stable_hash((snips, [str(a.dtype) for a in arrs],
-                       [str(d) for d in slot_dts], rexprs, neutrals,
-                       [str(d) for d in odts]))
-    return FusionPlan(snippet=snips, leaves=arrs, scalars=list(scalars),
-                      out_dtype=odts, reduce_expr=rexprs, neutral=neutrals,
-                      key=key, scalar_dtypes=slot_dts, nodes=list(ready))
+    if axis is None:
+        bshapes = [_bshape(node.children[0]) for node in ready]
+        n = 1
+        for d in np.broadcast_shapes(*bshapes):
+            n *= int(d)
+        geometry = (max(1, n),)
+        kinds = ser.leaf_kinds(1, geometry[0])
+    else:
+        bshapes = [_bshape(node.children[0]) for node in ready]
+        geometry = _row_geometry(tuple(np.broadcast_shapes(*bshapes)))
+        kinds = ser.leaf_kinds(*geometry)
+    key = stable_hash((snips, ser.prelude, [str(a.dtype) for a in ser.leaves],
+                       kinds, [str(d) for d in ser.scalar_dtypes],
+                       [str(d) for d in ser.bvec_dtypes], rexprs, neutrals,
+                       [str(d) for d in odts], axis or 0))
+    return FusionPlan(snippet=snips, leaves=list(ser.leaves),
+                      scalars=list(ser.scalars), out_dtype=odts,
+                      reduce_expr=rexprs, neutral=neutrals, key=key,
+                      scalar_dtypes=list(ser.scalar_dtypes), nodes=list(ready),
+                      bvecs=list(ser.bvecs), bvec_dtypes=list(ser.bvec_dtypes),
+                      leaf_kinds=kinds, prelude=list(ser.prelude), axis=axis,
+                      geometry=geometry)
+
+
+def _schedule_waves(reduces: list) -> list:
+    """Partition reduce nodes into dependency waves.  Flat reductions
+    whose interior reductions are computed go together (one flat
+    multi-accumulator launch); row reductions group per (B, N) geometry
+    — and a pending row reduction whose remaining dependencies all sit
+    *inside* a forming wave of the same geometry joins that wave (the
+    dependency resolves in-kernel), which is how stable softmax's
+    shifted-exp sum shares the max's launch."""
+    steps: list = []
+    done: set = set()
+    pending = list(reduces)
+    while pending:
+        ready = [r for r in pending
+                 if _interior_reduce_ids(r.children[0]) <= done]
+        if not ready:  # cycle-impossible for DAGs built via operators
+            raise ValueError("unschedulable reduction dependencies")
+        placed: list = []
+        flat_ready = [r for r in ready if r.axis is None]
+        if flat_ready:
+            steps.append(_plan_reduce_wave(flat_ready))
+            placed += flat_ready
+        row_ready = [r for r in ready if r.axis is not None]
+        groups: dict = {}
+        for r in row_ready:
+            g = _row_geometry(_bshape(r.children[0]))
+            groups.setdefault(g, []).append(r)
+        placed_ids = {id(p) for p in placed}
+        for g, nodes in groups.items():
+            wave_ids = {id(r) for r in nodes}
+            changed = True
+            while changed:  # pull same-geometry dependents into the wave
+                changed = False
+                for r in pending:
+                    if (id(r) in wave_ids or id(r) in placed_ids
+                            or id(r) in done or r.axis is None):
+                        continue
+                    if _row_geometry(_bshape(r.children[0])) != g:
+                        continue
+                    deps = _interior_reduce_ids(r.children[0])
+                    if deps <= (done | wave_ids):
+                        nodes.append(r)
+                        wave_ids.add(id(r))
+                        changed = True
+            steps.append(_plan_reduce_wave(nodes, axis=-1))
+            placed += nodes
+            placed_ids |= wave_ids
+        done |= {id(r) for r in placed}
+        pending = [r for r in pending if id(r) not in done]
+    return steps
 
 
 def plan_many(exprs: list) -> FusionSchedule:
-    """Fusion planner v2: schedule one or more expression DAGs — with
-    reductions as interior nodes — into a minimal launch sequence.
+    """Fusion planner v2/v3: schedule one or more expression DAGs — with
+    scalar *and* row-wise reductions as interior nodes — into a minimal
+    launch sequence.
 
     Reduce nodes are partitioned into dependency waves (one generated
     multi-accumulator `ReductionKernel` launch per wave — sibling
-    reductions share it), every vector-valued root fuses into ONE
-    epilogue `ElementwiseKernel` launch that receives computed
-    reductions as ``s<j>`` scalar args, and scalar-only roots are folded
-    on the host.  Returns a `FusionSchedule`; ``launch()`` yields one
-    result per input expression.
+    reductions share it; row waves resolve same-wave dependencies
+    in-kernel), every vector-valued root fuses into ONE epilogue
+    `ElementwiseKernel` launch per output geometry that receives
+    computed reductions as ``s<j>`` scalar / ``r<j>`` per-row args, and
+    scalar-only roots are folded on the host.  Returns a
+    `FusionSchedule`; ``launch()`` yields one result per input
+    expression.
     """
     roots = [e._expr if isinstance(e, RTCGArray) else e for e in exprs]
 
@@ -524,61 +810,79 @@ def plan_many(exprs: list) -> FusionSchedule:
     for r in roots:
         visit(r)
 
-    # -- dependency waves: a reduce is ready once every reduce strictly
-    #    below it has been computed by an earlier wave
-    steps: list[FusionPlan] = []
-    done: set = set()
-    pending = list(reduces)
-    while pending:
-        ready = [r for r in pending
-                 if _interior_reduce_ids(r.children[0]) <= done]
-        if not ready:  # cycle-impossible for DAGs built via operators
-            raise ValueError("unschedulable reduction dependencies")
-        steps.append(_plan_reduce_wave(ready))
-        done |= {id(r) for r in ready}
-        pending = [r for r in pending if id(r) not in done]
+    steps = _schedule_waves(reduces)
 
-    # -- roots: computed reductions / fused epilogue / host-folded scalars
+    # -- roots: computed reductions / fused epilogues / host-folded scalars
     outputs: list = []
-    epi_snips: list = []
-    epi_leaves: list = []
-    epi_scalars: list = []
-    epi_dtypes: list = []
-    slot_dts: list = []
+    groups: list = []        # (geometry key, [roots])
+    group_index: dict = {}
     for root in roots:
         if root.op == "leaf":
             outputs.append(("value", root.value))
         elif root.op == "reduce":
             outputs.append(("reduce", root))
         elif _vector_outside_reduce(root):
-            snip = root.collect(epi_leaves, epi_scalars, allow_reduce=True)
-            _extend_slot_dtypes(epi_scalars, slot_dts, _dtype_of(root))
-            outputs.append(("epi", len(epi_snips)))
-            epi_snips.append(snip)
-            epi_dtypes.append(_dtype_of(root))
+            gkey = tuple(int(d) for d in _bshape(root))
+            gi = group_index.get(gkey)
+            if gi is None:
+                gi = len(groups)
+                group_index[gkey] = gi
+                groups.append((gkey, []))
+            outputs.append(("epi", (gi, len(groups[gi][1]))))
+            groups[gi][1].append(root)
         else:
-            host_scalars: list = []
-            snip = root.collect([], host_scalars, allow_reduce=True)
-            outputs.append(("host", (snip, host_scalars)))
+            ser = _Serializer(allow_reduce=True, cse=False)
+            snip = ser.emit(root)
+            outputs.append(("host", (snip, list(ser.scalars), list(ser.bvecs))))
 
-    epilogue = None
-    if epi_snips:
-        arrs = [a for a, _ in epi_leaves]
-        key = stable_hash((epi_snips, [str(a.dtype) for a in arrs],
-                           [str(d) for d in slot_dts], "", "",
-                           [str(d) for d in epi_dtypes]))
-        epilogue = FusionPlan(snippet=epi_snips, leaves=arrs,
-                              scalars=list(epi_scalars), out_dtype=epi_dtypes,
-                              reduce_expr=None, neutral=None, key=key,
-                              scalar_dtypes=slot_dts)
-    return FusionSchedule(steps=steps, epilogue=epilogue, outputs=outputs)
+    epilogues: list = []
+    for gkey, groots in groups:
+        ser = _Serializer(allow_reduce=True)
+        for r in groots:
+            ser.count(r)
+        snips, odts, oshapes = [], [], []
+        for r in groots:
+            snips.append(ser.emit(r))
+            dt = _dtype_of(r)
+            ser.finish_chain(dt)
+            odts.append(dt)
+            oshapes.append(gkey)
+        if len(gkey) >= 2:
+            b, n = _row_geometry(gkey)
+            kinds = ser.leaf_kinds(b, n)
+            # 2-D roots need the row layout only when something actually
+            # broadcasts per row/col; all-full leaves keep the flat lanes
+            rows = bool(ser.bvecs) or any(k in ("row", "col") for k in kinds)
+            axis = -1 if rows else None
+            geometry = (b, n) if rows else (b * n,)
+        else:
+            n = int(gkey[0]) if gkey else 1
+            axis, geometry = None, (max(1, n),)
+            if ser.bvecs:
+                raise NotImplementedError(
+                    "a row-reduced value cannot re-enter a 1-D epilogue")
+            kinds = ser.leaf_kinds(1, geometry[0])
+        key = stable_hash((snips, ser.prelude,
+                           [str(a.dtype) for a in ser.leaves], kinds,
+                           [str(d) for d in ser.scalar_dtypes],
+                           [str(d) for d in ser.bvec_dtypes], "", "",
+                           [str(d) for d in odts], axis or 0))
+        epilogues.append(FusionPlan(
+            snippet=snips, leaves=list(ser.leaves), scalars=list(ser.scalars),
+            out_dtype=odts, reduce_expr=None, neutral=None, key=key,
+            scalar_dtypes=list(ser.scalar_dtypes), bvecs=list(ser.bvecs),
+            bvec_dtypes=list(ser.bvec_dtypes), leaf_kinds=kinds,
+            prelude=list(ser.prelude), axis=axis, geometry=geometry,
+            out_shapes=oshapes))
+    return FusionSchedule(steps=steps, epilogues=epilogues, outputs=outputs)
 
 
 def autotune(*exprs, **tune_kwargs) -> list:
     """Per-bucket tune every generated kernel behind these lazy
     expressions (`FusionSchedule.autotune`): winners are recorded per
-    `dispatch.n_bucket` on the content-cached kernel instances, so all
-    later isomorphic plans in the bucket launch tuned."""
+    `dispatch.n_bucket` (or `dispatch.rc_bucket` pair for row-segmented
+    kernels) on the content-cached kernel instances, so all later
+    isomorphic plans in the bucket launch tuned."""
     return plan_many(list(exprs)).autotune(**tune_kwargs)
 
 
@@ -618,6 +922,10 @@ class RTCGArray:
     @property
     def shape(self):
         return _shape_of(self._expr)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
 
     @property
     def dtype(self):
@@ -681,26 +989,44 @@ class RTCGArray:
         return int(self.value)
 
     # -- fused reductions ---------------------------------------------------
-    def _reduce(self, kind: str, fuse: bool = True) -> "RTCGArray":
+    def _norm_axis(self, axis) -> int | None:
+        nd = len(self.shape)
+        if axis is None:
+            return None
+        if axis in (-1, nd - 1) and nd >= 2:
+            return -1
+        if axis in (-1, 0) and nd <= 1:
+            return None  # last-axis of a vector IS the full reduction
+        raise NotImplementedError(
+            f"axis={axis} over a {nd}-d operand; only axis=None (full) and "
+            f"axis=-1 (row-wise) reductions are fusable")
+
+    def _reduce(self, kind: str, fuse: bool = True,
+                axis: int | None = None) -> "RTCGArray":
+        axis = self._norm_axis(axis)
         if not fuse and self._expr.op != "leaf":
             # Unfused baseline: materialize the map (kernel 1), then
             # reduce the temporary (kernel 2) — what an eager
             # operator-overloading package would do.
-            return self.evaluate()._reduce(kind)
-        return RTCGArray(_expr=_Expr("reduce", (self._expr,), value=kind))
+            return self.evaluate()._reduce(kind, axis=axis)
+        return RTCGArray(_expr=_Expr("reduce", (self._expr,), value=kind,
+                                     axis=axis))
 
-    def sum(self, fuse: bool = True) -> "RTCGArray":
-        return self._reduce("sum", fuse=fuse)
+    def sum(self, axis: int | None = None, fuse: bool = True) -> "RTCGArray":
+        return self._reduce("sum", fuse=fuse, axis=axis)
 
-    def mean(self, fuse: bool = True) -> "RTCGArray":
-        n = int(np.prod(self.shape))
-        return self._reduce("sum", fuse=fuse) / float(n)
+    def mean(self, axis: int | None = None, fuse: bool = True) -> "RTCGArray":
+        if self._norm_axis(axis) is not None:
+            n = int(self.shape[-1])
+        else:
+            n = int(np.prod(self.shape))
+        return self._reduce("sum", fuse=fuse, axis=axis) / float(n)
 
-    def max(self, fuse: bool = True) -> "RTCGArray":
-        return self._reduce("max", fuse=fuse)
+    def max(self, axis: int | None = None, fuse: bool = True) -> "RTCGArray":
+        return self._reduce("max", fuse=fuse, axis=axis)
 
-    def min(self, fuse: bool = True) -> "RTCGArray":
-        return self._reduce("min", fuse=fuse)
+    def min(self, axis: int | None = None, fuse: bool = True) -> "RTCGArray":
+        return self._reduce("min", fuse=fuse, axis=axis)
 
     def dot(self, other: "RTCGArray", fuse: bool = True) -> "RTCGArray":
         return (self * other)._reduce("sum", fuse=fuse)
@@ -739,14 +1065,21 @@ def abs(a: RTCGArray) -> RTCGArray:  # noqa: A001 - mirrors numpy namespace
 
 
 def softmax(a: RTCGArray, stable: bool = False) -> RTCGArray:
-    """Softmax through the fusion planner.
+    """Softmax through the fusion planner — axis is always the last one.
 
-    Unstable form (default) schedules as ONE reduce + ONE fused epilogue
-    (2 launches); ``stable=True`` subtracts the max first (3 launches:
-    max wave, sum wave, epilogue) for large-magnitude inputs.
+    1-D operands keep the flat schedule: unstable is ONE reduce + ONE
+    fused epilogue (2 launches); ``stable=True`` subtracts the max first
+    (3 launches — the flat reduction streams grid steps, so the shifted
+    sum can't see the max in the same pass).
+
+    2-D ``(B, N)`` operands schedule *row-segmented*: every row's
+    reduction lands in one launch, and because each row is complete
+    inside its block, ``stable=True`` stays at 2 launches — the max and
+    the shifted-exp sum share one wave (same-wave ``_acc`` chaining).
     """
+    ax = -1 if len(a.shape) >= 2 else None
     if stable:
-        e = (a - a.max()).exp()
+        e = (a - a.max(axis=ax)).exp()
     else:
         e = a.exp()
-    return e / e.sum()
+    return e / e.sum(axis=ax)

@@ -55,6 +55,19 @@ def block_rows_candidates(n: int, lanes: int = 128) -> list[dict]:
     return cands or [{"block_rows": 8}]
 
 
+def batch_block_candidates(b: int) -> list[dict]:
+    """``block_rows`` candidate pool for *row-segmented* kernels, where
+    the blocked dimension is the batch-row count of a ``(B, N)`` operand:
+    powers of two from a single row up to one grid step over the padded
+    batch bucket (small batches — the serving sampler's B=1 softmax —
+    need tiny blocks that the flat pool never offers)."""
+    cap = 1 << (max(1, b) - 1).bit_length()  # next_pow2(b)
+    cands = [{"block_rows": r}
+             for r in (1, 2, 4, 8, 16, 32, 64, 128, 256)
+             if r <= cap]
+    return cands or [{"block_rows": 1}]
+
+
 def block_n_candidates(n: int) -> list[dict]:
     """``block_n`` candidate pool for the blocked scan: power-of-two
     block lengths no larger than the padded input (one block minimum)."""
@@ -68,7 +81,9 @@ def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
                     candidates: Sequence[dict], args: Sequence[Any], n: int,
                     tuned: dict, param: str, *, measure: str = "hybrid",
                     cache: "DiskCache | None" = None, repeats: int = 3,
-                    warmup: int = 1, prune_keep: int | None = None) -> "TuneReport":
+                    warmup: int = 1, prune_keep: int | None = None,
+                    bucket_key: Any = None,
+                    signature_fn: Callable | None = None) -> "TuneReport":
     """Shared per-bucket tuning path for the kernel families.
 
     Wires `Autotuner(signature_fn=dispatch.bucketed_signature)` (so the
@@ -76,15 +91,21 @@ def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
     records the winner's ``param`` in ``tuned[dispatch.n_bucket(n)]``,
     where the family's ``_pick_*`` lookup finds it on later plain calls.
     Elementwise/Reduction tune ``block_rows``; Scan tunes ``block_n``.
+
+    Row-segmented (axis-aware) kernels pass ``bucket_key=rc_bucket(b, n)``
+    and ``signature_fn=dispatch.bucketed_signature_2d`` so the winner is
+    recorded per (batch, row-length) bucket *pair* instead of per flat
+    element-count bucket.
     """
     from repro.core import dispatch
 
-    nb = dispatch.n_bucket(n)
+    nb = bucket_key if bucket_key is not None else dispatch.n_bucket(n)
     tuner = Autotuner(name, builder=builder, measure=measure, cost_fn=cost_fn,
                       cache=cache, repeats=repeats, warmup=warmup,
-                      signature_fn=dispatch.bucketed_signature,
+                      signature_fn=signature_fn or dispatch.bucketed_signature,
                       prune_keep=prune_keep)
-    report = tuner.tune(candidates, args, key_extra=("n_bucket", nb))
+    report = tuner.tune(candidates, args, key_extra=("n_bucket", list(nb) if
+                                                     isinstance(nb, tuple) else nb))
     tuned[nb] = report.best[param]
     return report
 

@@ -89,6 +89,45 @@ def n_bucket(n: int, lanes: int = LANES) -> int:
     return next_pow2(-(-n // lanes))
 
 
+# ------------------------------------------- 2-D (row-segmented) buckets
+def bucket_batch(b: int, block_rows: int) -> int:
+    """Padded batch-row count for a row-segmented kernel over ``(B, N)``
+    operands: next multiple of ``block_rows`` (the grid must divide),
+    then the next power of two — the same shape-churn bound as
+    `bucket_rows`, applied to the *batch* dimension, so a batch-size
+    sweep over a ``k×`` range compiles ≤ ``ceil(log2(k)) + 1`` drivers.
+    """
+    rows = -(-max(1, int(b)) // block_rows) * block_rows
+    bucket = next_pow2(rows)
+    return -(-bucket // block_rows) * block_rows
+
+
+def bucket_cols(n: int, lanes: int = LANES) -> int:
+    """Padded row length for a row-segmented kernel: a power-of-two
+    number of LANES-wide lane groups, so a row-length sweep also
+    compiles log-many drivers.  The runtime row length masks padding
+    lanes inside the kernel (reductions) or is sliced off (elementwise).
+    """
+    return next_pow2(-(-max(1, int(n)) // lanes)) * lanes
+
+
+def rc_bucket(b: int, n: int, lanes: int = LANES) -> tuple:
+    """(batch, row-length) bucket pair — the per-bucket tuning key for
+    row-segmented kernels, independent of ``block_rows`` (analogue of
+    `n_bucket` for the 2-D layout)."""
+    return (next_pow2(max(1, int(b))), next_pow2(-(-max(1, int(n)) // lanes)))
+
+
+def default_batch_block(b: int, target_grid: int = 8, min_rows: int = 1,
+                        max_rows: int = 256) -> int:
+    """Bucket-derived default batch ``block_rows`` for row-segmented
+    kernels: keep the sequential grid near ``target_grid`` steps.
+    ``min_rows=1`` (not 8) because a single-row batch — the serving
+    sampler's softmax — must not pay an 8× row-padding tax."""
+    br = next_pow2(max(1, int(b))) // target_grid
+    return max(min_rows, min(max_rows, br or min_rows))
+
+
 def default_block_rows(n: int, lanes: int = LANES, target_grid: int = 8,
                        min_rows: int = 8, max_rows: int = 512) -> int:
     """Bucket-derived default ``block_rows``: scale the block so the
@@ -114,6 +153,31 @@ def bucketed_signature(args: Sequence[Any], lanes: int = LANES) -> list:
         shape = getattr(a, "shape", None)
         dtype = getattr(a, "dtype", None)
         if shape is not None:
+            size = 1
+            for d in shape:
+                size *= int(d)
+            sig.append(["bucket", n_bucket(max(1, size), lanes), str(dtype)])
+        else:
+            sig.append([type(a).__name__])
+    return sig
+
+
+def bucketed_signature_2d(args: Sequence[Any], lanes: int = LANES) -> list:
+    """2-D counterpart of `bucketed_signature` for row-segmented kernels:
+    the last dim buckets as a row length, the leading dims collapse to a
+    batch-row bucket (`rc_bucket`), so a tuning winner transfers across
+    a whole ``(B, N)`` sweep within one bucket pair."""
+    sig = []
+    for a in args:
+        shape = getattr(a, "shape", None)
+        dtype = getattr(a, "dtype", None)
+        if shape is not None and len(shape) >= 2:
+            b = 1
+            for d in shape[:-1]:
+                b *= int(d)
+            rb, cb = rc_bucket(b, int(shape[-1]), lanes)
+            sig.append(["bucket2d", rb, cb, str(dtype)])
+        elif shape is not None:
             size = 1
             for d in shape:
                 size *= int(d)

@@ -24,6 +24,13 @@ bucket, and the hot path is a couple of integer ops plus a cache
 lookup: no argument re-parsing, no dict construction, no re-render.
 Per-bucket tuned ``block_rows`` (see `autotune`) are applied
 automatically when the call site does not pin one.
+
+Row layout (axis-aware fusion, PR 3): ``layout="rows"`` keeps ``(B, N)``
+operands 2-D — blocks are ``(block_rows, ncols)`` row groups, buckets
+cover *both* dimensions (`dispatch.bucket_batch` × `bucket_cols`), and
+`BroadcastArg` inputs bind per-row ``(B, 1)`` or per-col ``(1, N)``
+values that jnp broadcasting stretches across the block — how computed
+row reductions and shared feature weights enter a fused 2-D epilogue.
 """
 
 from __future__ import annotations
@@ -70,6 +77,77 @@ class ScalarArg:
         return _canonical(self.dtype)
 
 
+@dataclass(frozen=True)
+class BroadcastArg:
+    """Broadcast vector argument of a *row-layout* kernel over ``(B, N)``
+    operands: ``kind='row'`` binds a length-B vector as a ``(B, 1)``
+    block (a per-row reduced value re-entering fused elementwise code),
+    ``kind='col'`` binds a length-N vector as a ``(1, N)`` block (a
+    per-feature weight shared by every row).  In snippets the name is
+    referenced bare (no ``[i]``) or as ``name[i]`` — either way jnp
+    broadcasting inside the kernel stretches it across the block."""
+
+    dtype: Any
+    name: str
+    kind: str = "row"  # 'row' -> (B, 1) | 'col' -> (1, N)
+
+    @property
+    def jnp_dtype(self):
+        return _canonical(self.dtype)
+
+
+def _arg_kind(a) -> str:
+    if isinstance(a, ScalarArg):
+        return "scalar"
+    if isinstance(a, BroadcastArg):
+        return a.kind
+    return "full"
+
+
+# Shared row-layout plumbing: ElementwiseKernel and ReductionKernel
+# drivers pad/validate operands and pick block specs identically — one
+# copy here keeps the two kernel families from diverging.
+def row_block_specs(block_rows: int, ncols: int) -> dict:
+    """BlockSpec per operand kind for a (brows, ncols) row layout."""
+    return {
+        "scalar": pl.BlockSpec((1, 1), lambda r: (0, 0)),
+        "full": pl.BlockSpec((block_rows, ncols), lambda r: (r, 0)),
+        "row": pl.BlockSpec((block_rows, 1), lambda r: (r, 0)),
+        "col": pl.BlockSpec((1, ncols), lambda r: (0, 0)),
+    }
+
+
+def pad_row_operand(kind: str, name: str, arg, dt, b: int, n: int,
+                    brows: int, ncols: int):
+    """Validate one operand against the (b, n) geometry and zero-pad it
+    to its bucketed block shape (padding must never hide a size bug)."""
+    if kind == "scalar":
+        return jnp.full((1, 1), arg, dtype=dt)
+    v = jnp.asarray(arg)
+    if kind == "full":
+        if v.size != b * n:
+            raise ValueError(f"vector argument {name!r} has {v.size} "
+                             f"elements, expected {b}x{n}")
+        return jnp.pad(v.reshape(b, n), ((0, brows - b), (0, ncols - n)))
+    if kind == "row":
+        if v.size != b:
+            raise ValueError(f"per-row argument {name!r} has {v.size} "
+                             f"elements, expected {b} rows")
+        return jnp.pad(v.reshape(b, 1), ((0, brows - b), (0, 0)))
+    if v.size != n:
+        raise ValueError(f"per-col argument {name!r} has {v.size} "
+                         f"elements, expected row length {n}")
+    return jnp.pad(v.reshape(1, n), ((0, 0), (0, ncols - n)))
+
+
+def rows_geometry(first_vec) -> tuple[int, int]:
+    """(batch rows, row length) of the leading full vector operand."""
+    shape = first_vec.shape
+    n = int(shape[-1])
+    b = max(1, int(np.prod(shape[:-1]))) if len(shape) > 1 else 1
+    return b, n
+
+
 def _parse_arguments(arguments) -> list:
     if isinstance(arguments, str):
         out = []
@@ -114,16 +192,23 @@ class ElementwiseKernel:
 
     def __init__(self, arguments, operation: str, name: str = "eltwise",
                  preamble: str = "", block_rows: int | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, layout: str = "flat"):
         self.args = _parse_arguments(arguments)
         self.operation = operation
         self.name = re.sub(r"\W", "_", name)
         self.preamble = preamble
         self.block_rows = block_rows
         self.interpret = (not on_tpu()) if interpret is None else interpret
+        self.layout = layout
 
         self.scalar_args = [a for a in self.args if isinstance(a, ScalarArg)]
         self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
+        self.bcast_args = [a for a in self.args if isinstance(a, BroadcastArg)]
+        if layout not in ("flat", "rows"):
+            raise ValueError(f"unknown layout {layout!r} (flat | rows)")
+        if self.bcast_args and layout != "rows":
+            raise ValueError("BroadcastArg requires layout='rows' "
+                             "(per-row/per-col binding needs the 2-D layout)")
         self.out_names = snippets.written_names(operation)
         unknown = set(self.out_names) - {v.name for v in self.vector_args}
         if unknown:
@@ -131,28 +216,33 @@ class ElementwiseKernel:
         if not self.out_names:
             raise ValueError("elementwise snippet writes no vector (need e.g. 'z[i] = ...')")
         self._body_lines, self._loaded = self._translate()
+        if layout == "rows" and self._needs_i():
+            raise ValueError("row-layout kernels have no flat element index "
+                             "'i'; address data per block instead")
         # Launch fast path: everything derivable from the signature is
         # precomputed here so __call__ does no per-call parsing.
         names = [a.name for a in self.args]
         self._first_vec_pos = names.index(self.vector_args[0].name)
-        self._arg_meta = tuple((a.name, a.jnp_dtype, isinstance(a, ScalarArg))
+        self._arg_meta = tuple((a.name, a.jnp_dtype, _arg_kind(a))
                                for a in self.args)
+        self._out_positions = [names.index(o) for o in self.out_names]
         self._out_dtypes = [dict((v.name, v.jnp_dtype) for v in self.vector_args)[o]
                             for o in self.out_names]
-        self._src_keys: dict[int, str] = {}   # block_rows -> source hash
-        self._tuned: dict[int, int] = {}      # n_bucket -> tuned block_rows
+        self._src_keys: dict = {}             # (block_rows[, ncols]) -> source hash
+        self._tuned: dict = {}                # bucket (key) -> tuned block_rows
 
     # -- codegen ----------------------------------------------------------
     def _translate(self) -> tuple[list[str], list[str]]:
         body: list[str] = []
         vec_names = {v.name for v in self.vector_args}
+        load_names = vec_names | {b.name for b in self.bcast_args}
         dtypes = {v.name: str(v.jnp_dtype) for v in self.vector_args}
         read: set[str] = set()
         stmts = snippets.split_statements(self.operation)
         # vectors read anywhere on an RHS (incl. read-modify-write outputs)
         for s in stmts:
             tgt, expr = snippets.translate_statement(s)
-            for v in vec_names:
+            for v in load_names:
                 if re.search(rf"\b{re.escape(v)}\b", expr):
                     read.add(v)
         for s in stmts:
@@ -175,7 +265,10 @@ class ElementwiseKernel:
         probe = snippets._SUBSCRIPT_RE.sub(lambda m: m.group(1), self.operation)
         return bool(re.search(r"\bi\b", probe))
 
-    def render(self, block_rows: int) -> str:
+    def render(self, block_rows: int, ncols: int | None = None) -> str:
+        """Row layout renders the same template with the lane axis widened
+        to the (bucketed) row length ``ncols`` — blocks are
+        ``(block_rows, ncols)`` row groups instead of flat lane tiles."""
         src = _KERNEL_TMPL.render(
             name=self.name,
             in_names=[a.name for a in self.args],
@@ -185,22 +278,23 @@ class ElementwiseKernel:
             body_lines=self._body_lines,
             needs_i=self._needs_i(),
             block_rows=block_rows,
-            lanes=LANES,
+            lanes=ncols if ncols is not None else LANES,
         )
         if self.preamble:
             src = self.preamble + "\n" + src
         return src
 
     # -- driver -----------------------------------------------------------
-    def _src_key(self, block_rows: int) -> str:
-        """Content key of the driver source for one block_rows (cached)."""
-        key = self._src_keys.get(block_rows)
+    def _src_key(self, block_rows: int, ncols: int | None = None) -> str:
+        """Content key of the driver source for one block shape (cached)."""
+        cache_key = (block_rows, ncols)
+        key = self._src_keys.get(cache_key)
         if key is None:
-            key = stable_hash((self.render(block_rows),
+            key = stable_hash((self.render(block_rows, ncols),
                                [str(d) for d in self._out_dtypes],
-                               [str(m[1]) for m in self._arg_meta],
+                               [(m[0], str(m[1]), m[2]) for m in self._arg_meta],
                                self.interpret))
-            self._src_keys[block_rows] = key
+            self._src_keys[cache_key] = key
         return key
 
     def _build_driver(self, bucket: int, block_rows: int):
@@ -219,7 +313,8 @@ class ElementwiseKernel:
 
         blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
         scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
-        in_specs = [scl if is_s else blk for _, _, is_s in self._arg_meta]
+        in_specs = [scl if kind == "scalar" else blk
+                    for _, _, kind in self._arg_meta]
         out_shape = [jax.ShapeDtypeStruct((bucket, LANES), d) for d in self._out_dtypes]
 
         call = jax.jit(pl.pallas_call(
@@ -235,8 +330,8 @@ class ElementwiseKernel:
 
         def driver(n, flat_args):
             padded = []
-            for (name, dt, is_scalar), arg in zip(arg_meta, flat_args):
-                if is_scalar:
+            for (name, dt, kind), arg in zip(arg_meta, flat_args):
+                if kind == "scalar":
                     padded.append(jnp.full((1, 1), arg, dtype=dt))
                 else:
                     v = jnp.ravel(jnp.asarray(arg))
@@ -252,13 +347,68 @@ class ElementwiseKernel:
 
         return driver
 
+    def _build_row_driver(self, brows: int, ncols: int, block_rows: int):
+        """One driver per (source, batch-bucket, row-length-bucket): blocks
+        are ``(block_rows, ncols)`` row groups, per-row broadcast args bind
+        as ``(block_rows, 1)``, per-col as ``(1, ncols)``.  Row padding is
+        sliced off on the way out, so any ``(B, N)`` whose buckets match
+        reuses this compile."""
+        from repro.core.rtcg import SourceModule
+
+        grid = brows // block_rows
+        mod = SourceModule.load(self.render(block_rows, ncols), name=self.name)
+        kernel = mod.get_function(f"{self.name}_kernel")
+
+        spec = row_block_specs(block_rows, ncols)
+        in_specs = [spec[kind] for _, _, kind in self._arg_meta]
+        out_shape = [jax.ShapeDtypeStruct((brows, ncols), d)
+                     for d in self._out_dtypes]
+        call = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[spec["full"]] * len(self.out_names),
+            out_shape=out_shape,
+            interpret=self.interpret,
+        ))
+        arg_meta = self._arg_meta
+
+        def driver(b, n, flat_args):
+            padded = [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            return [o[:b, :n] for o in outs]
+
+        return driver
+
     def _pick_block_rows(self, n: int, block_rows: int | None) -> int:
         if block_rows:
             return block_rows
         tuned = self._tuned.get(dispatch.n_bucket(n))
         return tuned or self.block_rows or dispatch.default_block_rows(n)
 
+    def _rows_geometry(self, call_args) -> tuple[int, int]:
+        return rows_geometry(call_args[self._first_vec_pos])
+
+    def _call_rows(self, call_args, block_rows: int | None):
+        b, n = self._rows_geometry(call_args)
+        br = (block_rows or self._tuned.get(dispatch.rc_bucket(b, n))
+              or self.block_rows or dispatch.default_batch_block(b))
+        brows = dispatch.bucket_batch(b, br)
+        ncols = dispatch.bucket_cols(n)
+        key = ("eltwise_rows", self._src_key(br, ncols), brows, ncols, br)
+        drv = dispatch.get_or_build(
+            key, lambda: self._build_row_driver(brows, ncols, br))
+        outs = drv(b, n, call_args)
+        # each output takes the shape of its template argument
+        outs = [o.reshape(call_args[p].shape)
+                for o, p in zip(outs, self._out_positions)]
+        dispatch.record_launch()
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
     def __call__(self, *call_args, block_rows: int | None = None):
+        if self.layout == "rows":
+            return self._call_rows(call_args, block_rows)
         first_vec = call_args[self._first_vec_pos]
         shape = first_vec.shape
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(shape))
@@ -276,10 +426,20 @@ class ElementwiseKernel:
         from repro.core.autotune import BlockCost
 
         br = params["block_rows"]
+        vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
+        if self.layout == "rows":
+            b, n = self._rows_geometry(args)
+            brows = dispatch.bucket_batch(b, br)
+            ncols = dispatch.bucket_cols(n)
+            return BlockCost(
+                flops=float(len(self._body_lines)) * brows * ncols,
+                hbm_bytes=float(brows * ncols * vec_bytes),
+                vmem_bytes=float(br * ncols * vec_bytes),
+                grid=brows // br,
+            )
         first = args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
         bucket = dispatch.bucket_rows(n, br)
-        vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
         return BlockCost(
             flops=float(len(self._body_lines)) * bucket * LANES,
             hbm_bytes=float(bucket * LANES * vec_bytes),
@@ -292,18 +452,29 @@ class ElementwiseKernel:
                  warmup: int = 1, prune_keep: int | None = None):
         """Tune ``block_rows`` for the *bucket* of these arguments.
 
-        The winner is recorded per `dispatch.n_bucket`, so it applies to
+        The winner is recorded per `dispatch.n_bucket` (flat layout) or
+        per `dispatch.rc_bucket` pair (row layout), so it applies to
         every later call whose size lands in the same bucket, and the
-        tuning-cache key uses `dispatch.bucketed_signature` so results
-        persist across exact-n churn too.
+        tuning-cache key uses the matching bucketed signature so results
+        persist across exact-shape churn too.
         """
-        from repro.core.autotune import tune_per_bucket
+        from repro.core.autotune import batch_block_candidates, tune_per_bucket
 
+        builder = lambda block_rows: (lambda *a: self(*a, block_rows=block_rows))
+        if self.layout == "rows":
+            b, n = self._rows_geometry(call_args)
+            return tune_per_bucket(
+                f"eltwise.{self.name}", builder=builder, cost_fn=self.block_cost,
+                candidates=candidates or batch_block_candidates(b),
+                args=call_args, n=n, tuned=self._tuned, param="block_rows",
+                measure=measure, cache=cache, repeats=repeats, warmup=warmup,
+                prune_keep=prune_keep, bucket_key=dispatch.rc_bucket(b, n),
+                signature_fn=dispatch.bucketed_signature_2d)
         first = call_args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
         return tune_per_bucket(
             f"eltwise.{self.name}",
-            builder=lambda block_rows: (lambda *a: self(*a, block_rows=block_rows)),
+            builder=builder,
             cost_fn=self.block_cost,
             candidates=candidates or self.candidate_configs(n),
             args=call_args, n=n, tuned=self._tuned, param="block_rows",

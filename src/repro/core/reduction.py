@@ -31,6 +31,19 @@ Per-bucket autotuning: ``autotune()`` wires the shared `Autotuner`
 (``signature_fn=dispatch.bucketed_signature``) to ``block_rows``, and
 the winner is recorded per `dispatch.n_bucket` so every later call in
 the same shape bucket uses it automatically.
+
+Row-segmented form (axis-aware fusion, PR 3): ``axis=-1`` reduces each
+row of a ``(B, N)`` operand to its own accumulator in ONE launch — the
+grid runs over *row blocks*, every row lives entirely inside its block,
+and the runtime row length ``n`` masks padding columns with the neutral
+element.  Outputs are length-B vectors.  Because a row is complete
+within the block, a later accumulator's map expression may reference an
+earlier one as ``_acc<k>`` (a ``(block, 1)`` per-row value) — that is
+how stable softmax computes the row max *and* the shifted-exp sum in a
+single launch.  Arguments may include `BroadcastArg`s: per-row values
+from earlier launches bind as ``(B, 1)``, per-col weights as ``(1, N)``.
+``prelude`` lists extra C-dialect assignment statements (hoisted common
+subexpressions) evaluated once per block before the map expressions.
 """
 
 from __future__ import annotations
@@ -42,8 +55,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import dispatch, snippets
-from repro.core.elementwise import (LANES, ScalarArg, VectorArg, _canonical,
-                                    _parse_arguments, on_tpu)
+from repro.core.elementwise import (LANES, BroadcastArg, ScalarArg, VectorArg,
+                                    _arg_kind, _canonical, _parse_arguments,
+                                    on_tpu, pad_row_operand, row_block_specs,
+                                    rows_geometry)
 from repro.core.templates import KernelTemplate
 
 # Recognized whole-block reducers (fast path); anything else raises.
@@ -71,6 +86,9 @@ def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{%
 {% for v in loaded_vectors %}
     {{ v }} = {{ v }}_ref[...]
 {% endfor %}
+{% for line in prelude_lines %}
+    {{ line }}
+{% endfor %}
 {% for o in outs %}
     _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
     _mapped{{ loop.index0 }} = jnp.where(i < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
@@ -83,11 +101,40 @@ def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{%
 ''',
 )
 
+# Row-segmented form: the grid runs over blocks of *rows* of a (B, N)
+# operand; each row reduces inside its block (no cross-step combine), the
+# runtime row length masks padding columns, and later accumulators may
+# reference earlier ones (`_acc<k>`, a per-row (block, 1) value).
+_ROW_TMPL = KernelTemplate(
+    "row_reduction",
+    '''
+def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
+    _n = _n_ref[0, 0]
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}_ref[0, 0]
+{% endfor %}
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ ncols }}), 1)
+{% for v in loaded_vectors %}
+    {{ v }} = {{ v }}_ref[...]
+{% endfor %}
+{% for line in prelude_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in outs %}
+    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
+    _mapped{{ loop.index0 }} = jnp.where(_col < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
+    _acc{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }}, axis=1, keepdims=True)
+    o{{ loop.index0 }}_ref[...] = _acc{{ loop.index0 }}
+{% endfor %}
+''',
+)
+
 
 class ReductionKernel:
     def __init__(self, dtype_out, neutral, reduce_expr, map_expr,
                  arguments, name: str = "reduce", preamble: str = "",
-                 block_rows: int | None = None, interpret: bool | None = None):
+                 block_rows: int | None = None, interpret: bool | None = None,
+                 axis: int | None = None, prelude=None):
         # Normalize the single-output and multi-accumulator forms to lists;
         # `self.multi` records which way results are handed back.
         self.multi = isinstance(map_expr, (list, tuple))
@@ -115,6 +162,11 @@ class ReductionKernel:
         self.preamble = preamble
         self.block_rows = block_rows
         self.interpret = (not on_tpu()) if interpret is None else interpret
+        if axis not in (None, -1):
+            raise NotImplementedError("only axis=None (full) or axis=-1 "
+                                      "(row-segmented) reductions")
+        self.axis = axis
+        self.prelude = list(prelude or [])
 
         self._reducers = []
         for rexpr in reduce_exprs:
@@ -126,14 +178,21 @@ class ReductionKernel:
         self.block_reduce, self._combine_op = self._reducers[0]
         self.scalar_args = [a for a in self.args if isinstance(a, ScalarArg)]
         self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
+        self.bcast_args = [a for a in self.args if isinstance(a, BroadcastArg)]
+        if self.bcast_args and self.axis is None:
+            raise ValueError("BroadcastArg requires the row-segmented form "
+                             "(axis=-1); a flat reduction cannot bind per-row "
+                             "values")
         if not self.vector_args:
             raise ValueError("reduction needs at least one vector argument")
         names = [a.name for a in self.args]
         self._first_vec_pos = names.index(self.vector_args[0].name)
-        self._arg_meta = tuple((a.name, a.jnp_dtype, isinstance(a, ScalarArg))
+        self._arg_meta = tuple((a.name, a.jnp_dtype, _arg_kind(a))
                                for a in self.args)
-        self._src_keys: dict[int, str] = {}
-        self._tuned: dict[int, int] = {}      # n_bucket -> tuned block_rows
+        self._prelude_lines = [snippets.translate_assignment(s)
+                               for s in self.prelude]
+        self._src_keys: dict = {}
+        self._tuned: dict = {}                # bucket (key) -> tuned block_rows
 
     def _outs(self) -> list[dict]:
         outs = []
@@ -150,31 +209,37 @@ class ReductionKernel:
             })
         return outs
 
-    def render(self, block_rows: int) -> str:
+    def render(self, block_rows: int, ncols: int | None = None) -> str:
         outs = self._outs()
-        read = sorted({v.name for v in self.vector_args
-                       if any(re.search(rf"\b{re.escape(v.name)}\b", o["map_expr"])
-                              for o in outs)})
-        src = _KERNEL_TMPL.render(
+        exprs = [o["map_expr"] for o in outs] + self._prelude_lines
+        read = sorted({v.name for v in (self.vector_args + self.bcast_args)
+                       if any(re.search(rf"\b{re.escape(v.name)}\b", e)
+                              for e in exprs)})
+        tmpl_kwargs = dict(
             name=self.name,
             in_names=[a.name for a in self.args],
             scalar_names=[s.name for s in self.scalar_args],
             loaded_vectors=read,
+            prelude_lines=self._prelude_lines,
             outs=outs,
             block_rows=block_rows,
-            lanes=LANES,
         )
+        if self.axis is None:
+            src = _KERNEL_TMPL.render(lanes=LANES, **tmpl_kwargs)
+        else:
+            src = _ROW_TMPL.render(ncols=ncols, **tmpl_kwargs)
         return (self.preamble + "\n" + src) if self.preamble else src
 
-    def _src_key(self, block_rows: int) -> str:
-        key = self._src_keys.get(block_rows)
+    def _src_key(self, block_rows: int, ncols: int | None = None) -> str:
+        cache_key = (block_rows, ncols)
+        key = self._src_keys.get(cache_key)
         if key is None:
             from repro.core.cache import stable_hash
 
-            key = stable_hash((self.render(block_rows),
-                               [str(m[1]) for m in self._arg_meta],
+            key = stable_hash((self.render(block_rows, ncols),
+                               [(m[0], str(m[1]), m[2]) for m in self._arg_meta],
                                [str(d) for d in self.dtypes_out], self.interpret))
-            self._src_keys[block_rows] = key
+            self._src_keys[cache_key] = key
         return key
 
     def _build_driver(self, bucket: int, block_rows: int):
@@ -189,7 +254,8 @@ class ReductionKernel:
 
         blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
         scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
-        in_specs = [scl] + [scl if is_s else blk for _, _, is_s in self._arg_meta]
+        in_specs = [scl] + [scl if kind == "scalar" else blk
+                            for _, _, kind in self._arg_meta]
         call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
@@ -204,8 +270,8 @@ class ReductionKernel:
 
         def driver(n, flat_args):
             padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            for (name, dt, is_scalar), arg in zip(arg_meta, flat_args):
-                if is_scalar:
+            for (name, dt, kind), arg in zip(arg_meta, flat_args):
+                if kind == "scalar":
                     padded.append(jnp.full((1, 1), arg, dtype=dt))
                 else:
                     v = jnp.ravel(jnp.asarray(arg))
@@ -223,13 +289,66 @@ class ReductionKernel:
 
         return driver
 
+    def _build_row_driver(self, brows: int, ncols: int, block_rows: int):
+        """Row-segmented driver: one accumulator per row, single launch.
+        The runtime row length ``n`` masks padding columns; padded *rows*
+        compute on zeros and are sliced off the (B,)-shaped outputs."""
+        from repro.core.rtcg import SourceModule
+
+        grid = brows // block_rows
+        mod = SourceModule.load(self.render(block_rows, ncols), name=self.name)
+        kernel = mod.get_function(f"{self.name}_kernel")
+
+        spec = row_block_specs(block_rows, ncols)
+        in_specs = [spec["scalar"]] + [spec[kind] for _, _, kind in self._arg_meta]
+        call = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[spec["row"]] * len(self.dtypes_out),
+            out_shape=[jax.ShapeDtypeStruct((brows, 1), d)
+                       for d in self.dtypes_out],
+            interpret=self.interpret,
+        ))
+        arg_meta = self._arg_meta
+        multi = self.multi
+
+        def driver(b, n, flat_args):
+            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+            padded += [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            if multi:
+                return tuple(o[:b, 0] for o in outs)
+            return outs[0][:b, 0]
+
+        return driver
+
     def _pick_block_rows(self, n: int, block_rows: int | None) -> int:
         if block_rows:
             return block_rows
         tuned = self._tuned.get(dispatch.n_bucket(n))
         return tuned or self.block_rows or dispatch.default_block_rows(n)
 
+    def _rows_geometry(self, call_args) -> tuple[int, int]:
+        return rows_geometry(call_args[self._first_vec_pos])
+
+    def _call_rows(self, call_args, block_rows: int | None):
+        b, n = self._rows_geometry(call_args)
+        br = (block_rows or self._tuned.get(dispatch.rc_bucket(b, n))
+              or self.block_rows or dispatch.default_batch_block(b))
+        brows = dispatch.bucket_batch(b, br)
+        ncols = dispatch.bucket_cols(n)
+        key = ("reduce_rows", self._src_key(br, ncols), brows, ncols, br)
+        drv = dispatch.get_or_build(
+            key, lambda: self._build_row_driver(brows, ncols, br))
+        out = drv(b, n, call_args)
+        dispatch.record_launch()
+        return out
+
     def __call__(self, *call_args, block_rows: int | None = None):
+        if self.axis is not None:
+            return self._call_rows(call_args, block_rows)
         first_vec = call_args[self._first_vec_pos]
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(first_vec.shape))
         br = self._pick_block_rows(n, block_rows)
@@ -246,10 +365,20 @@ class ReductionKernel:
         from repro.core.autotune import BlockCost
 
         br = params["block_rows"]
+        vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
+        if self.axis is not None:
+            b, n = self._rows_geometry(args)
+            brows = dispatch.bucket_batch(b, br)
+            ncols = dispatch.bucket_cols(n)
+            return BlockCost(
+                flops=float(2 * len(self.map_exprs)) * brows * ncols,
+                hbm_bytes=float(brows * ncols * vec_bytes),
+                vmem_bytes=float(br * ncols * vec_bytes),
+                grid=brows // br,
+            )
         first = args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
         bucket = dispatch.bucket_rows(n, br)
-        vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
         return BlockCost(
             flops=float(2 * len(self.map_exprs)) * bucket * LANES,
             hbm_bytes=float(bucket * LANES * vec_bytes),
@@ -263,17 +392,28 @@ class ReductionKernel:
         """Tune ``block_rows`` for the *bucket* of these arguments.
 
         Same contract as `ElementwiseKernel.autotune`: the winner is
-        recorded per `dispatch.n_bucket` and the tuning-cache key uses
-        `dispatch.bucketed_signature`, so one tuning run covers every
-        ``n`` in the bucket.
+        recorded per `dispatch.n_bucket` (flat) or per
+        `dispatch.rc_bucket` pair (row-segmented), so one tuning run
+        covers every shape in the bucket.
         """
-        from repro.core.autotune import block_rows_candidates, tune_per_bucket
+        from repro.core.autotune import (batch_block_candidates,
+                                         block_rows_candidates, tune_per_bucket)
 
+        builder = lambda block_rows: (lambda *a: self(*a, block_rows=block_rows))
+        if self.axis is not None:
+            b, n = self._rows_geometry(call_args)
+            return tune_per_bucket(
+                f"reduce.{self.name}", builder=builder, cost_fn=self.block_cost,
+                candidates=candidates or batch_block_candidates(b),
+                args=call_args, n=n, tuned=self._tuned, param="block_rows",
+                measure=measure, cache=cache, repeats=repeats, warmup=warmup,
+                prune_keep=prune_keep, bucket_key=dispatch.rc_bucket(b, n),
+                signature_fn=dispatch.bucketed_signature_2d)
         first = call_args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
         return tune_per_bucket(
             f"reduce.{self.name}",
-            builder=lambda block_rows: (lambda *a: self(*a, block_rows=block_rows)),
+            builder=builder,
             cost_fn=self.block_cost,
             candidates=candidates or block_rows_candidates(n),
             args=call_args, n=n, tuned=self._tuned, param="block_rows",

@@ -146,6 +146,18 @@ def translate_statement(stmt: str) -> tuple[str | None, str]:
     return None, translate_expression(stmt)
 
 
+def translate_assignment(stmt: str) -> str:
+    """Translate one C-dialect *assignment* (``_t0 = expf(v0[i])``) to a
+    jnp statement line.  Used for hoisted common-subexpression preludes
+    in generated kernels: the fusion planner names repeated subtrees
+    ``_t<k>`` and the kernel computes each once per block, before the
+    map/output expressions that reference it."""
+    tgt, expr = translate_statement(stmt)
+    if tgt is None:
+        raise ValueError(f"prelude statement is not an assignment: {stmt!r}")
+    return f"{tgt} = {expr}"
+
+
 def written_names(operation: str) -> list[str]:
     """Vector names assigned via ``name[i] = ...`` in declaration order."""
     seen: list[str] = []

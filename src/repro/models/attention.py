@@ -1,6 +1,12 @@
 """Attention: chunked flash-style jnp path (dry-run/XLA), naive path
 (smoke oracle), Pallas path (TPU), and the KV-cache decode path.
 
+The naive and decode paths normalize scores through
+`layers.fused_softmax`: concrete (outside-jit) score matrices of any
+batch shape ride the axis-aware fusion planner — ONE row-segmented
+reduction wave + ONE fused 2-D epilogue for the whole ``(B·H·S, Skv)``
+batch — while traced values fall back to ``jax.nn.softmax``.
+
 The jnp flash path is the FLOP-equivalent stand-in the dry-run compiles
 (Pallas does not lower on the CPU host backend — DESIGN.md §6).  Causal
 scheduling is selectable:

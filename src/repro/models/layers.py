@@ -12,7 +12,8 @@ from jax import lax
 from repro.configs.base import ModelConfig
 
 
-def norm(cfg: ModelConfig, p: dict, name: str, x, *, use_pallas: bool = False):
+def norm(cfg: ModelConfig, p: dict, name: str, x, *, use_pallas: bool = False,
+         use_rtcg: bool = False):
     w = p[name]
     if cfg.norm_type == "layernorm":
         xf = x.astype(jnp.float32)
@@ -20,6 +21,8 @@ def norm(cfg: ModelConfig, p: dict, name: str, x, *, use_pallas: bool = False):
         var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
         y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
         return (y * w + p[name + "_b"]).astype(x.dtype)
+    if use_rtcg and not isinstance(x, jax.core.Tracer):
+        return rtcg_rmsnorm(x, w, eps=cfg.norm_eps)
     if use_pallas:
         from repro.kernels.rmsnorm.ops import rmsnorm as pallas_rms
         return pallas_rms(x, w.astype(x.dtype), eps=cfg.norm_eps)
@@ -78,24 +81,43 @@ def position_encode(cfg: ModelConfig, x, positions):
 
 # ------------------------------------------------------------- softmax
 def fused_softmax(x, *, stable: bool = True):
-    """Softmax dispatch with an RTCG fused host path.
+    """Softmax dispatch with an RTCG fused host path — axis-aware.
 
-    Concrete vectors (a logits row outside jit, the shapes the serving
-    sampler sees) route through the fusion planner — one generated
-    reduction plus one fused epilogue kernel instead of three separate
-    launches.  Traced values and multi-dim batches fall back to
-    ``jax.nn.softmax``; axis is always the last one.
+    Concrete inputs of ANY batch shape (a logits row outside jit, the
+    full ``(B, N)`` attention-score matrices of the naive and decode
+    paths) route through the fusion planner's row-segmented schedule:
+    ONE generated per-row reduction wave plus ONE fused 2-D epilogue —
+    2 launches for the whole batch instead of ``3·B`` per-row launches
+    or a jax fallback.  ``stable=True`` stays at 2 launches too: the row
+    max and the shifted-exp sum share one wave (each row is complete
+    inside its block, so the dependency resolves in-kernel).  Traced
+    values fall back to ``jax.nn.softmax``; axis is always the last one.
     """
     if isinstance(x, jax.core.Tracer):
         return jax.nn.softmax(x, axis=-1)
-    lead = int(np.prod(x.shape[:-1])) if getattr(x, "ndim", 0) > 1 else 1
-    if getattr(x, "ndim", 0) == 0 or lead != 1:
+    if getattr(x, "ndim", 0) == 0:
         return jax.nn.softmax(x, axis=-1)
     from repro.core import array as ga
 
-    flat = jnp.reshape(x, (-1,))
-    out = ga.softmax(ga.RTCGArray(flat), stable=stable).value
-    return jnp.reshape(out, x.shape)
+    rows = jnp.reshape(x, (-1, x.shape[-1]))
+    out = ga.softmax(ga.RTCGArray(rows), stable=stable).value
+    return jnp.reshape(out, x.shape).astype(x.dtype)
+
+
+def rtcg_rmsnorm(x, w, *, eps: float = 1e-6):
+    """Planner-backed RMSNorm: ``x / sqrt(mean(x^2, -1) + eps) * w``
+    scheduled as ONE row-segmented reduction wave plus ONE fused 2-D
+    epilogue (2 launches), with the ``(N,)`` weight broadcast per-col
+    and the per-row ``mean`` re-entering the epilogue as a ``(B, 1)``
+    broadcast arg — the axis-aware-fusion counterpart of the
+    hand-written `repro.kernels.rmsnorm` Pallas kernel."""
+    from repro.core import array as ga
+
+    orig = x.shape
+    X = ga.RTCGArray(jnp.reshape(x, (-1, orig[-1])).astype(jnp.float32))
+    W = ga.RTCGArray(jnp.asarray(w).astype(jnp.float32))
+    out = (X / (((X * X).mean(axis=-1) + eps).sqrt()) * W).value
+    return jnp.reshape(out, orig).astype(x.dtype)
 
 
 # ---------------------------------------------------------------- MLPs

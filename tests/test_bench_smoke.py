@@ -42,13 +42,16 @@ def test_fusion_suite_emits_json(tmp_path):
 
 @pytest.mark.slow
 def test_softmax_suite_emits_json(tmp_path):
-    """Planner v2 smoke: the softmax suite writes BENCH_softmax.json and
-    the fused schedule really is reduce + ONE epilogue (2 launches) vs 3."""
+    """Planner smoke: the softmax suite writes BENCH_softmax.json; the
+    flat fused schedule is reduce + ONE epilogue (2 launches) vs 3, and
+    the *batched* (B, N) schedule — stable included — is 2 launches for
+    the whole batch vs 3·B per-row launches."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.run", "--only", "softmax",
-         "--repeats", "1", "--sizes", "20000", "--json-dir", str(tmp_path)],
+         "--repeats", "1", "--sizes", "20000", "--batches", "8x512",
+         "--json-dir", str(tmp_path)],
         cwd=str(REPO), env=env, capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-4000:]
 
@@ -59,3 +62,70 @@ def test_softmax_suite_emits_json(tmp_path):
     assert fused["kernels_launched"] == 2
     assert unfused["kernels_launched"] == 3
     assert fused["us_per_call"] > 0 and "speedup" in fused
+    batched = rows["softmax.b8x512.fused"]
+    stable = rows["softmax.b8x512.fused_stable"]
+    per_row = rows["softmax.b8x512.unfused"]
+    assert batched["kernels_launched"] == 2
+    assert stable["kernels_launched"] == 2
+    assert per_row["kernels_launched"] == 3 * 8
+
+
+@pytest.mark.slow
+def test_rmsnorm_suite_emits_json(tmp_path):
+    """Axis-aware smoke: BENCH_rmsnorm.json carries fused (2-launch
+    planner) vs pallas (hand-written kernel) vs unfused rows."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "rmsnorm",
+         "--repeats", "1", "--batches", "8x512", "--json-dir", str(tmp_path)],
+        cwd=str(REPO), env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+
+    payload = json.loads((tmp_path / "BENCH_rmsnorm.json").read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    assert rows["rmsnorm.b8x512.fused"]["kernels_launched"] == 2
+    assert rows["rmsnorm.b8x512.unfused"]["kernels_launched"] == 3
+    assert "speedup" in rows["rmsnorm.b8x512.fused"]
+    assert rows["rmsnorm.b8x512.pallas"]["us_per_call"] > 0
+
+
+def test_compare_rows_gate():
+    """`benchmarks.run --compare` contract: fused rows regressing >tol
+    fail, baselines and one-sided rows don't."""
+    from benchmarks.run import compare_rows
+
+    committed = {"rows": [
+        {"name": "softmax.b64x4096.fused", "us_per_call": 100.0, "speedup": 10.0},
+        {"name": "softmax.b64x4096.unfused", "us_per_call": 1000.0},
+    ]}
+    same = compare_rows(committed, committed)
+    assert same == []
+    regressed = {"rows": [
+        {"name": "softmax.b64x4096.fused", "us_per_call": 100.0, "speedup": 7.0},
+        {"name": "softmax.b64x4096.unfused", "us_per_call": 5000.0},
+    ]}
+    probs = compare_rows(regressed, committed, tol=0.20)
+    assert len(probs) == 1 and "softmax.b64x4096.fused" in probs[0]
+    # within tolerance -> clean; unfused rows never gate
+    ok = {"rows": [
+        {"name": "softmax.b64x4096.fused", "us_per_call": 100.0, "speedup": 8.5},
+        {"name": "softmax.b64x4096.unfused", "us_per_call": 9000.0},
+    ]}
+    assert compare_rows(ok, committed, tol=0.20) == []
+    # rows present on one side only are skipped, not regressions
+    extra = {"rows": [{"name": "softmax.b1x64.fused", "us_per_call": 1.0,
+                       "speedup": 2.0}]}
+    assert compare_rows(extra, committed) == []
+    # us_per_call fallback when speedup is absent on either side
+    old_abs = {"rows": [{"name": "x.fused", "us_per_call": 100.0}]}
+    new_abs = {"rows": [{"name": "x.fused", "us_per_call": 130.0}]}
+    assert len(compare_rows(new_abs, old_abs, tol=0.20)) == 1
+    # a fused row needing MORE launches fails at ANY tolerance: the
+    # launch schedule is the fusion contract and is noise-free
+    old_l = {"rows": [{"name": "y.fused", "us_per_call": 10.0,
+                       "speedup": 5.0, "kernels_launched": 2}]}
+    new_l = {"rows": [{"name": "y.fused", "us_per_call": 10.0,
+                       "speedup": 5.0, "kernels_launched": 4}]}
+    probs = compare_rows(new_l, old_l, tol=10.0)
+    assert len(probs) == 1 and "schedule regressed" in probs[0]
