@@ -1,12 +1,16 @@
 """Axis-aware fusion on the serving norm path: RMSNorm over ``(rows, d)``
-activations three ways —
+activations, measured per backend —
 
-  * ``fused``   — the planner schedule: ONE row-segmented reduction wave
-    (per-row ``mean(x^2)``) + ONE fused 2-D epilogue with the ``(d,)``
-    weight broadcast per-col (2 launches, no temporaries);
-  * ``pallas``  — the hand-written `repro.kernels.rmsnorm` row-blocked
+  * ``fused``      — the planner schedule on the pallas backend: ONE
+    row-segmented reduction wave (per-row ``mean(x^2)``) + ONE fused 2-D
+    epilogue with the ``(d,)`` weight broadcast per-col (2 launches, no
+    temporaries);
+  * ``fused.xla``  — the SAME schedule lowered by the xla backend
+    (plain jnp under jax.jit, no Pallas) — the PR 4 pallas-vs-xla
+    comparison row;
+  * ``pallas``     — the hand-written `repro.kernels.rmsnorm` row-blocked
     kernel (1 launch; the specialization ceiling the planner chases);
-  * ``unfused`` — the eager RTCG baseline: materialize ``x*x``, row-
+  * ``unfused``    — the eager RTCG baseline: materialize ``x*x``, row-
     reduce the temporary, then normalize (3 launches + an HBM round
     trip for the temporary).
 """
@@ -23,6 +27,7 @@ from repro.kernels.rmsnorm.ops import rmsnorm_jit as pallas_rmsnorm
 from repro.models.layers import rtcg_rmsnorm
 
 EPS = 1e-6
+BACKENDS = ("pallas", "xla")
 
 
 def run(repeats: int = 5, shapes=((64, 1024), (256, 4096))):
@@ -33,43 +38,51 @@ def run(repeats: int = 5, shapes=((64, 1024), (256, 4096))):
         xj, wj = jnp.asarray(x), jnp.asarray(w)
         X, W = ga.to_gpu(x), ga.to_gpu(w)
 
-        def fused():
-            return rtcg_rmsnorm(xj, wj, eps=EPS)
+        def fused(be):
+            return rtcg_rmsnorm(xj, wj, eps=EPS, backend=be)
 
         def pallas():
             return pallas_rmsnorm(xj, wj, eps=EPS)
 
         def unfused():
-            sq = (X * X).evaluate()                      # launch 1: temporary
-            ms = sq.mean(axis=-1, fuse=False)            # launch 2: row reduce
-            return (X / ((ms + EPS).sqrt()) * W).value   # launch 3: normalize
+            sq = (X * X).evaluate(backend="pallas")       # launch 1: temporary
+            ms = sq.mean(axis=-1, fuse=False)             # launch 2: row reduce
+            return (X / ((ms + EPS).sqrt()) * W).evaluate(
+                backend="pallas").value                   # launch 3: normalize
 
         ref = x / np.sqrt((x * x).mean(-1, keepdims=True) + EPS) * w
-        np.testing.assert_allclose(np.asarray(fused()), ref, atol=1e-4)
+        for be in BACKENDS:
+            np.testing.assert_allclose(np.asarray(fused(be)), ref, atol=1e-4)
         np.testing.assert_allclose(np.asarray(pallas()), ref, atol=1e-4)
         np.testing.assert_allclose(np.asarray(unfused()), ref, atol=1e-4)
 
-        # per-bucket tune the planner kernels on both paths (repeats=3:
+        # per-bucket tune the planner kernels on each backend (repeats=3:
         # a 1-shot winner is noise on the interpreter and sticks)
-        ga.autotune(X / (((X * X).mean(axis=-1) + EPS).sqrt()) * W,
-                    repeats=3, warmup=1)
-        SQ = (X * X).evaluate()
-        ga.autotune(SQ.mean(axis=-1), repeats=3, warmup=1)
+        for be in BACKENDS:
+            ga.autotune(X / (((X * X).mean(axis=-1) + EPS).sqrt()) * W,
+                        backend=be, repeats=3, warmup=1)
+        SQ = (X * X).evaluate(backend="pallas")
+        ga.autotune(SQ.mean(axis=-1), backend="pallas", repeats=3, warmup=1)
 
-        fused(); pallas(); unfused()  # warm the driver cache
-        with dispatch.count_launches() as cf:
-            fused()
+        for be in BACKENDS:
+            fused(be)
+        pallas(); unfused()  # warm the driver cache
+        t_unfused = timeit(unfused, repeats=repeats)
+        t_pallas = timeit(pallas, repeats=repeats)
         with dispatch.count_launches() as cu:
             unfused()
-        t_fused = timeit(fused, repeats=repeats)
-        t_pallas = timeit(pallas, repeats=repeats)
-        t_unfused = timeit(unfused, repeats=repeats)
         tag = f"rmsnorm.b{B}x{D}"
-        emit(f"{tag}.fused", t_fused,
-             f"{cf.delta} launches (row wave + fused 2-D epilogue)",
-             kernels_launched=cf.delta, speedup=t_unfused / t_fused)
+        for be in BACKENDS:
+            with dispatch.count_launches() as cf:
+                fused(be)
+            t_fused = timeit(lambda: fused(be), repeats=repeats)
+            suffix = "" if be == "pallas" else f".{be}"
+            emit(f"{tag}.fused{suffix}", t_fused,
+                 f"{cf.delta} launches on {be} (row wave + fused 2-D epilogue)",
+                 kernels_launched=cf.delta, speedup=t_unfused / t_fused,
+                 backend=be)
         emit(f"{tag}.pallas", t_pallas, "hand-written row-blocked kernel",
-             speedup=t_unfused / t_pallas)
+             speedup=t_unfused / t_pallas, backend="pallas")
         emit(f"{tag}.unfused", t_unfused,
              f"{cu.delta} launches (square temp; row reduce; normalize)",
-             kernels_launched=cu.delta)
+             kernels_launched=cu.delta, backend="pallas")

@@ -1,4 +1,4 @@
-"""Fusion planner claims, flat and axis-aware.
+"""Fusion planner claims, flat and axis-aware — measured per backend.
 
 Flat (planner v2): a reduction feeding further elementwise work
 (softmax-style normalize-by-sum) schedules as ONE generated reduction
@@ -11,7 +11,18 @@ schedules as ONE row-segmented reduction wave (one accumulator per row)
 plus ONE fused 2-D epilogue — 2 launches for the whole batch.  The
 unfused baseline is what the serving path did before axis-aware fusion:
 one 3-launch flat schedule per row, ``3·B`` launches total.  The stable
-variant stays at 2 launches (max + shifted-exp sum share one wave)."""
+variant stays at 2 launches (max + shifted-exp sum share one wave).
+
+Backends (PR 4): every fused row runs on BOTH execution backends — the
+default ``pallas`` target keeps its historical row names
+(``<tag>.fused``), the ``xla`` target adds ``<tag>.fused.xla`` rows —
+so ``BENCH_softmax.json`` carries a pallas-vs-xla comparison in the
+spirit of the paper's CUDA-vs-OpenCL measurements.  Speedups are
+against the same unfused pallas baseline within one run, and each row
+records its ``backend`` tag plus the launch count observed under
+`dispatch.count_launches` (which would expose any backend mix-up:
+``by_backend`` must contain only the pinned backend).
+"""
 
 from __future__ import annotations
 
@@ -23,49 +34,62 @@ from benchmarks.common import emit, timeit
 import repro.core.array as ga
 from repro.core import dispatch
 
+BACKENDS = ("pallas", "xla")
+
+
+def _row_suffix(be: str) -> str:
+    # pallas keeps the pre-PR4 row names so the perf trajectory stays
+    # comparable across PRs; other backends are suffixed
+    return "" if be == "pallas" else f".{be}"
+
 
 def _flat(n: int, repeats: int, rng) -> None:
     x = rng.standard_normal(n).astype(np.float32)
     X = ga.to_gpu(x)
 
-    def fused():
+    def fused(be):
         # reduce(sum of exp) + epilogue(exp/s0): 2 launches
-        return ga.softmax(X).value
+        return ga.softmax(X).evaluate(backend=be).value
 
     def unfused():
         # eager 3-launch baseline: map, reduce the temp, divide
-        e = ga.exp(X).evaluate()
-        s = float(e.sum())
-        return (e / s).value
+        e = ga.exp(X).evaluate(backend="pallas")
+        s = float(e.sum(fuse=False).evaluate(backend="pallas"))
+        return (e / s).evaluate(backend="pallas").value
 
     # correctness guard before timing anything
-    np.testing.assert_allclose(np.asarray(fused()),
-                               np.asarray(jax.nn.softmax(jnp.asarray(x))),
-                               atol=1e-5)
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(x)))
+    for be in BACKENDS:
+        np.testing.assert_allclose(np.asarray(fused(be)), ref, atol=1e-5)
 
-    # per-bucket tune BOTH paths' generated kernels (block_rows), so
-    # the comparison is launch-schedule vs launch-schedule, not
-    # tuned-vs-untuned
-    ga.autotune(ga.softmax(X), repeats=3, warmup=1)
+    # per-bucket tune BOTH paths' generated kernels (block_rows) on each
+    # backend, so every comparison is launch-schedule vs launch-schedule
+    # under that backend's tuned config, not tuned-vs-untuned
+    for be in BACKENDS:
+        ga.autotune(ga.softmax(X), backend=be, repeats=3, warmup=1)
     E = ga.exp(X)
-    ga.plan(E._expr).autotune(repeats=1, warmup=1)
-    EV = ga.to_gpu(E.value)
-    ga.autotune(EV.sum(), repeats=3, warmup=1)
-    ga.plan((EV / 2.0)._expr).autotune(repeats=1, warmup=1)
+    ga.plan(E._expr, backend="pallas").autotune(repeats=1, warmup=1)
+    EV = ga.to_gpu(E.evaluate(backend="pallas").value)
+    ga.autotune(EV.sum(), backend="pallas", repeats=3, warmup=1)
+    ga.plan((EV / 2.0)._expr, backend="pallas").autotune(repeats=1, warmup=1)
 
-    fused(); unfused()  # warm the driver cache
-    with dispatch.count_launches() as cf:
-        fused()
+    for be in BACKENDS:
+        fused(be)
+    unfused()  # warm the driver cache
+    t_unfused = timeit(unfused, repeats=repeats)
     with dispatch.count_launches() as cu:
         unfused()
-    t_fused = timeit(fused, repeats=repeats)
-    t_unfused = timeit(unfused, repeats=repeats)
-    emit(f"softmax.n{n}.fused", t_fused,
-         f"{cf.delta} launches (reduce + fused epilogue)",
-         kernels_launched=cf.delta, speedup=t_unfused / t_fused)
     emit(f"softmax.n{n}.unfused", t_unfused,
          f"{cu.delta} launches (map; reduce temp; divide)",
-         kernels_launched=cu.delta)
+         kernels_launched=cu.delta, backend="pallas")
+    for be in BACKENDS:
+        with dispatch.count_launches() as cf:
+            fused(be)
+        t_fused = timeit(lambda: fused(be), repeats=repeats)
+        emit(f"softmax.n{n}.fused{_row_suffix(be)}", t_fused,
+             f"{cf.delta} launches on {be} (reduce + fused epilogue)",
+             kernels_launched=cf.delta, speedup=t_unfused / t_fused,
+             backend=be)
 
 
 def _batched(B: int, N: int, repeats: int, rng) -> None:
@@ -73,58 +97,65 @@ def _batched(B: int, N: int, repeats: int, rng) -> None:
     X = ga.to_gpu(x)
     row_arrays = [ga.to_gpu(x[i]) for i in range(B)]
 
-    def fused():
+    def fused(be):
         # ONE row-segmented reduce wave + ONE fused 2-D epilogue
-        return ga.softmax(X).value
+        return ga.softmax(X).evaluate(backend=be).value
 
-    def fused_stable():
+    def fused_stable(be):
         # max + shifted-exp sum share the wave: still 2 launches
-        return ga.softmax(X, stable=True).value
+        return ga.softmax(X, stable=True).evaluate(backend=be).value
 
     def unfused():
         # pre-axis-aware serving path: a 3-launch flat schedule per row
         outs = []
         for R in row_arrays:
-            e = ga.exp(R).evaluate()
-            s = float(e.sum())
-            outs.append((e / s).value)
+            e = ga.exp(R).evaluate(backend="pallas")
+            s = float(e.sum(fuse=False).evaluate(backend="pallas"))
+            outs.append((e / s).evaluate(backend="pallas").value)
         return jnp.stack(outs)
 
     ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=-1))
-    np.testing.assert_allclose(np.asarray(fused()), ref, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(fused_stable()), ref, atol=1e-5)
+    for be in BACKENDS:
+        np.testing.assert_allclose(np.asarray(fused(be)), ref, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(fused_stable(be)), ref, atol=1e-5)
 
-    # per-bucket tune the fused row kernels (the stable plan's wave and
-    # epilogue are structurally different kernels — tune them too) and
-    # the per-row baseline
-    ga.autotune(ga.softmax(X), repeats=3, warmup=1)
-    ga.autotune(ga.softmax(X, stable=True), repeats=3, warmup=1)
+    # per-bucket tune the fused row kernels per backend (the stable
+    # plan's wave and epilogue are structurally different kernels — tune
+    # them too) and the per-row pallas baseline
+    for be in BACKENDS:
+        ga.autotune(ga.softmax(X), backend=be, repeats=3, warmup=1)
+        ga.autotune(ga.softmax(X, stable=True), backend=be, repeats=3, warmup=1)
     R0 = row_arrays[0]
-    ga.plan(ga.exp(R0)._expr).autotune(repeats=1, warmup=1)
-    EV = ga.to_gpu(ga.exp(R0).value)
-    ga.autotune(EV.sum(), repeats=3, warmup=1)
-    ga.plan((EV / 2.0)._expr).autotune(repeats=1, warmup=1)
+    ga.plan(ga.exp(R0)._expr, backend="pallas").autotune(repeats=1, warmup=1)
+    EV = ga.to_gpu(ga.exp(R0).evaluate(backend="pallas").value)
+    ga.autotune(EV.sum(), backend="pallas", repeats=3, warmup=1)
+    ga.plan((EV / 2.0)._expr, backend="pallas").autotune(repeats=1, warmup=1)
 
-    fused(); fused_stable(); unfused()  # warm the driver cache
-    with dispatch.count_launches() as cf:
-        fused()
-    with dispatch.count_launches() as cs:
-        fused_stable()
+    for be in BACKENDS:
+        fused(be); fused_stable(be)
+    unfused()  # warm the driver cache
+    t_unfused = timeit(unfused, repeats=repeats)
     with dispatch.count_launches() as cu:
         unfused()
-    t_fused = timeit(fused, repeats=repeats)
-    t_stable = timeit(fused_stable, repeats=repeats)
-    t_unfused = timeit(unfused, repeats=repeats)
     tag = f"softmax.b{B}x{N}"
-    emit(f"{tag}.fused", t_fused,
-         f"{cf.delta} launches (row wave + fused 2-D epilogue)",
-         kernels_launched=cf.delta, speedup=t_unfused / t_fused)
-    emit(f"{tag}.fused_stable", t_stable,
-         f"{cs.delta} launches (max+shifted-sum wave + epilogue)",
-         kernels_launched=cs.delta, speedup=t_unfused / t_stable)
     emit(f"{tag}.unfused", t_unfused,
          f"{cu.delta} launches (3 per row, B={B})",
-         kernels_launched=cu.delta)
+         kernels_launched=cu.delta, backend="pallas")
+    for be in BACKENDS:
+        with dispatch.count_launches() as cf:
+            fused(be)
+        with dispatch.count_launches() as cs:
+            fused_stable(be)
+        t_fused = timeit(lambda: fused(be), repeats=repeats)
+        t_stable = timeit(lambda: fused_stable(be), repeats=repeats)
+        emit(f"{tag}.fused{_row_suffix(be)}", t_fused,
+             f"{cf.delta} launches on {be} (row wave + fused 2-D epilogue)",
+             kernels_launched=cf.delta, speedup=t_unfused / t_fused,
+             backend=be)
+        emit(f"{tag}.fused_stable{_row_suffix(be)}", t_stable,
+             f"{cs.delta} launches on {be} (max+shifted-sum wave + epilogue)",
+             kernels_launched=cs.delta, speedup=t_unfused / t_stable,
+             backend=be)
 
 
 def run(repeats: int = 5, sizes=(100_000,),

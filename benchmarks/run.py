@@ -126,7 +126,7 @@ def main() -> None:
     regressions: list[str] = []
     for name in chosen:
         row_start = len(common.ROWS)
-        compiles0, launches0 = dispatch.compile_count(), dispatch.launch_count()
+        compiles0, launches0 = dispatch.compile_counts(), dispatch.launch_counts()
         try:
             suites[name](repeats=args.repeats)
         except Exception:
@@ -134,14 +134,23 @@ def main() -> None:
             failed.append(name)
             continue
         cache = dispatch.driver_cache()
+        compiles1, launches1 = dispatch.compile_counts(), dispatch.launch_counts()
         payload = {
             "suite": name,
             "env": environment_fingerprint(),
             # per-suite deltas; driver_cache is end-of-suite *state* only
             # (its hit/miss counters are process-cumulative, so they would
             # read skewed next to the deltas)
-            "compile_count": dispatch.compile_count() - compiles0,
-            "launch_count": dispatch.launch_count() - launches0,
+            "compile_count": sum(compiles1.values()) - sum(compiles0.values()),
+            "launch_count": sum(launches1.values()) - sum(launches0.values()),
+            # the same deltas broken down by execution backend (PR 4):
+            # the pallas-vs-xla split a suite exercised
+            "compile_counts": {
+                k: d for k in compiles1
+                if (d := compiles1[k] - compiles0.get(k, 0)) > 0},
+            "launch_counts": {
+                k: d for k in launches1
+                if (d := launches1[k] - launches0.get(k, 0)) > 0},
             "driver_cache": {"size": len(cache), "maxsize": cache.maxsize},
             "rows": common.ROWS[row_start:],
         }

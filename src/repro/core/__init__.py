@@ -3,7 +3,7 @@
 # building + elementwise/reduction generators + autotuning + lazy fused
 # arrays + a Copperhead-style DSL.  See DESIGN.md §2 for the GPU->TPU
 # mapping of each piece.
-from repro.core import dispatch
+from repro.core import backends, dispatch
 from repro.core.autotune import Autotuner, BlockCost, TuneReport, measure_wallclock
 from repro.core.cache import DiskCache, LRUCache, environment_fingerprint, stable_hash
 from repro.core.codebuilder import (Assign, Block, Comment, For, FunctionBody,
@@ -17,7 +17,7 @@ from repro.core.scan import ExclusiveScanKernel, InclusiveScanKernel, ScanKernel
 from repro.core.templates import KernelTemplate, render_string
 
 __all__ = [
-    "dispatch",
+    "backends", "dispatch",
     "Autotuner", "BlockCost", "TuneReport", "measure_wallclock",
     "DiskCache", "LRUCache", "environment_fingerprint", "stable_hash",
     "Assign", "Block", "Comment", "For", "FunctionBody",

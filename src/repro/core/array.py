@@ -80,8 +80,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import LRUCache, stable_hash
-from repro.core.elementwise import (BroadcastArg, ElementwiseKernel, ScalarArg,
-                                    VectorArg, _canonical)
+from repro.core.elementwise import ElementwiseKernel
+from repro.core.platform import (BroadcastArg, ScalarArg, VectorArg,
+                                 canonical_dtype as _canonical)
 from repro.core.reduction import ReductionKernel
 
 EAGER = False
@@ -449,6 +450,7 @@ class FusionPlan:
     axis: int | None = None                     # None: flat | -1: row layout
     geometry: tuple = ()                        # (n,) flat | (B, N) rows
     out_shapes: list = field(default_factory=list)  # epilogue template shapes
+    backend: Any = None                         # None: REPRO_BACKEND per call
 
     @property
     def kernel_launches(self) -> int:
@@ -478,9 +480,19 @@ class FusionPlan:
         return args
 
     def kernel(self):
-        """Build-or-fetch the one generated kernel realizing this plan."""
+        """Build-or-fetch the one generated kernel realizing this plan.
+
+        The cache key pairs the plan structure with the *resolved*
+        backend name — a plan pinned to ``backend="xla"`` and a
+        ``backend=None`` plan evaluated under ``REPRO_BACKEND=xla``
+        resolve the SAME kernel instance, so per-(backend, bucket)
+        tuning winners recorded through either route apply to both."""
+        from repro.core import backends as _backends
+
+        bname = _backends.get_backend(self.backend).name
+        ckey = (bname, self.key)
         if self.reduce_expr is None:
-            kern = _kernel_cache.get(self.key)
+            kern = _kernel_cache.get(ckey)
             if kern is None:
                 snips = [self.snippet] if not self._multi else list(self.snippet)
                 odts = self._out_dtypes()
@@ -492,16 +504,18 @@ class FusionPlan:
                     f"{nm}[i] = {sn}" for nm, sn in zip(out_names, snips)]
                 kern = ElementwiseKernel(
                     args, "; ".join(stmts), name=f"fused_{self.key[:8]}",
-                    layout="rows" if self.axis is not None else "flat")
-                _kernel_cache.put(self.key, kern)
+                    layout="rows" if self.axis is not None else "flat",
+                    backend=bname)
+                _kernel_cache.put(ckey, kern)
             return kern
-        kern = _reduce_cache.get(self.key)
+        kern = _reduce_cache.get(ckey)
         if kern is None:
             kern = ReductionKernel(self.out_dtype, self.neutral, self.reduce_expr,
                                    self.snippet, self._arg_list(),
                                    name=f"fusedred_{self.key[:8]}",
-                                   axis=self.axis, prelude=self.prelude)
-            _reduce_cache.put(self.key, kern)
+                                   axis=self.axis, prelude=self.prelude,
+                                   backend=bname)
+            _reduce_cache.put(ckey, kern)
         return kern
 
     def resolve_scalars(self, values: dict | None = None) -> list:
@@ -631,7 +645,7 @@ class FusionSchedule:
 
 
 def plan(expr: _Expr, reduce_expr: str | None = None,
-         neutral: str | None = None) -> FusionPlan:
+         neutral: str | None = None, backend=None) -> FusionPlan:
     """Fusion planner (v1 surface): serialize a reduce-free expression DAG
     into one kernel plan.
 
@@ -673,10 +687,12 @@ def plan(expr: _Expr, reduce_expr: str | None = None,
                       reduce_expr=reduce_expr, neutral=neutral, key=key,
                       scalar_dtypes=list(ser.scalar_dtypes), leaf_kinds=kinds,
                       prelude=list(ser.prelude), axis=axis, geometry=geometry,
-                      out_shapes=[tuple(bs)] if reduce_expr is None else [])
+                      out_shapes=[tuple(bs)] if reduce_expr is None else [],
+                      backend=backend)
 
 
-def _plan_reduce_wave(ready: list, axis: int | None = None) -> FusionPlan:
+def _plan_reduce_wave(ready: list, axis: int | None = None,
+                      backend=None) -> FusionPlan:
     """ONE multi-accumulator ReductionKernel plan for a wave of reduce
     nodes: their mapped chains share leaves/scalars positionally (CSE
     hoists the repeated chain into one temporary), so sibling reductions
@@ -723,10 +739,10 @@ def _plan_reduce_wave(ready: list, axis: int | None = None) -> FusionPlan:
                       scalar_dtypes=list(ser.scalar_dtypes), nodes=list(ready),
                       bvecs=list(ser.bvecs), bvec_dtypes=list(ser.bvec_dtypes),
                       leaf_kinds=kinds, prelude=list(ser.prelude), axis=axis,
-                      geometry=geometry)
+                      geometry=geometry, backend=backend)
 
 
-def _schedule_waves(reduces: list) -> list:
+def _schedule_waves(reduces: list, backend=None) -> list:
     """Partition reduce nodes into dependency waves.  Flat reductions
     whose interior reductions are computed go together (one flat
     multi-accumulator launch); row reductions group per (B, N) geometry
@@ -745,7 +761,7 @@ def _schedule_waves(reduces: list) -> list:
         placed: list = []
         flat_ready = [r for r in ready if r.axis is None]
         if flat_ready:
-            steps.append(_plan_reduce_wave(flat_ready))
+            steps.append(_plan_reduce_wave(flat_ready, backend=backend))
             placed += flat_ready
         row_ready = [r for r in ready if r.axis is not None]
         groups: dict = {}
@@ -769,7 +785,7 @@ def _schedule_waves(reduces: list) -> list:
                         nodes.append(r)
                         wave_ids.add(id(r))
                         changed = True
-            steps.append(_plan_reduce_wave(nodes, axis=-1))
+            steps.append(_plan_reduce_wave(nodes, axis=-1, backend=backend))
             placed += nodes
             placed_ids |= wave_ids
         done |= {id(r) for r in placed}
@@ -777,7 +793,7 @@ def _schedule_waves(reduces: list) -> list:
     return steps
 
 
-def plan_many(exprs: list) -> FusionSchedule:
+def plan_many(exprs: list, backend=None) -> FusionSchedule:
     """Fusion planner v2/v3: schedule one or more expression DAGs — with
     scalar *and* row-wise reductions as interior nodes — into a minimal
     launch sequence.
@@ -810,7 +826,7 @@ def plan_many(exprs: list) -> FusionSchedule:
     for r in roots:
         visit(r)
 
-    steps = _schedule_waves(reduces)
+    steps = _schedule_waves(reduces, backend=backend)
 
     # -- roots: computed reductions / fused epilogues / host-folded scalars
     outputs: list = []
@@ -873,17 +889,18 @@ def plan_many(exprs: list) -> FusionSchedule:
             scalar_dtypes=list(ser.scalar_dtypes), bvecs=list(ser.bvecs),
             bvec_dtypes=list(ser.bvec_dtypes), leaf_kinds=kinds,
             prelude=list(ser.prelude), axis=axis, geometry=geometry,
-            out_shapes=oshapes))
+            out_shapes=oshapes, backend=backend))
     return FusionSchedule(steps=steps, epilogues=epilogues, outputs=outputs)
 
 
-def autotune(*exprs, **tune_kwargs) -> list:
+def autotune(*exprs, backend=None, **tune_kwargs) -> list:
     """Per-bucket tune every generated kernel behind these lazy
     expressions (`FusionSchedule.autotune`): winners are recorded per
-    `dispatch.n_bucket` (or `dispatch.rc_bucket` pair for row-segmented
-    kernels) on the content-cached kernel instances, so all later
-    isomorphic plans in the bucket launch tuned."""
-    return plan_many(list(exprs)).autotune(**tune_kwargs)
+    ``(backend, dispatch.n_bucket)`` (or `dispatch.rc_bucket` pair for
+    row-segmented kernels) on the content-cached kernel instances, so
+    all later isomorphic plans in the bucket launch tuned on that
+    backend."""
+    return plan_many(list(exprs), backend=backend).autotune(**tune_kwargs)
 
 
 def _as_expr(x) -> _Expr:
@@ -962,18 +979,21 @@ class RTCGArray:
     __abs__ = abs
 
     # -- evaluation -------------------------------------------------------
-    def _evaluate_expr(self) -> jax.Array:
+    def _evaluate_expr(self, backend=None) -> jax.Array:
         expr = self._expr
         if expr.op == "leaf":
             return expr.value
         if _has_reduce(expr):
-            return plan_many([expr]).launch()[0]
-        return plan(expr).launch()
+            return plan_many([expr], backend=backend).launch()[0]
+        return plan(expr, backend=backend).launch()
 
-    def evaluate(self) -> "RTCGArray":
+    def evaluate(self, backend=None) -> "RTCGArray":
+        """Force the DAG through the planner; ``backend`` pins an
+        execution backend for every generated kernel in the schedule
+        (default: the process-wide ``REPRO_BACKEND`` selection)."""
         if self._expr.op == "leaf":
             return self
-        return RTCGArray(self._evaluate_expr())
+        return RTCGArray(self._evaluate_expr(backend))
 
     def get(self) -> np.ndarray:
         return np.asarray(self.evaluate()._expr.value)

@@ -83,19 +83,27 @@ def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
                     cache: "DiskCache | None" = None, repeats: int = 3,
                     warmup: int = 1, prune_keep: int | None = None,
                     bucket_key: Any = None,
-                    signature_fn: Callable | None = None) -> "TuneReport":
+                    signature_fn: Callable | None = None,
+                    backend: str | None = None) -> "TuneReport":
     """Shared per-bucket tuning path for the kernel families.
 
     Wires `Autotuner(signature_fn=dispatch.bucketed_signature)` (so the
     tuning-cache key collapses exact sizes to their shape bucket) and
-    records the winner's ``param`` in ``tuned[dispatch.n_bucket(n)]``,
-    where the family's ``_pick_*`` lookup finds it on later plain calls.
-    Elementwise/Reduction tune ``block_rows``; Scan tunes ``block_n``.
+    records the winner's ``param`` in ``tuned``, where the family's
+    ``_pick_*`` lookup finds it on later plain calls.  Elementwise/
+    Reduction tune ``block_rows``; Scan tunes ``block_n``.
 
     Row-segmented (axis-aware) kernels pass ``bucket_key=rc_bucket(b, n)``
     and ``signature_fn=dispatch.bucketed_signature_2d`` so the winner is
     recorded per (batch, row-length) bucket *pair* instead of per flat
     element-count bucket.
+
+    The signature carries the *execution backend* (PR 4): with
+    ``backend`` set, winners live in ``tuned[(backend, bucket)]`` and
+    the persistent tuning-cache key includes the backend name, so a
+    block size tuned on the pallas interpreter can never be served to
+    the xla lowering (or vice versa) — the backend is a measured
+    variable, like the CUDA-vs-OpenCL comparisons treat it.
     """
     from repro.core import dispatch
 
@@ -104,9 +112,15 @@ def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
                       cache=cache, repeats=repeats, warmup=warmup,
                       signature_fn=signature_fn or dispatch.bucketed_signature,
                       prune_keep=prune_keep)
-    report = tuner.tune(candidates, args, key_extra=("n_bucket", list(nb) if
-                                                     isinstance(nb, tuple) else nb))
-    tuned[nb] = report.best[param]
+    report = tuner.tune(candidates, args,
+                        key_extra=("n_bucket",
+                                   list(nb) if isinstance(nb, tuple) else nb,
+                                   "backend", backend or ""))
+    # winner key is ALWAYS the (backend, bucket) pair — the families'
+    # _pick_* lookups read exactly this shape, so a caller omitting
+    # ``backend`` still stores a readable (None, bucket) entry rather
+    # than a bare-bucket key nothing ever consults
+    tuned[(backend, nb)] = report.best[param]
     return report
 
 

@@ -1,0 +1,77 @@
+"""Execution-backend registry — select a target per call or process-wide.
+
+The reproduction mirrors the paper's PyCUDA/PyOpenCL pairing with two
+backends over one RTCG pipeline:
+
+  * ``pallas`` (default) — pallas_call assembly; Pallas interpreter off
+    TPU, Mosaic on TPU;
+  * ``xla``              — plain ``jax.jit``-compiled jnp lowering of
+    the same snippets, no Pallas dependency.
+
+Selection: pass ``backend="xla"`` (a name or a `Backend` instance) to a
+kernel family / planner call, or set ``REPRO_BACKEND=xla`` for the whole
+process (resolved *per call*, so one kernel object can serve both).
+Everything keyed by a backend — compiled drivers, tuning winners,
+persistent cache fingerprints, dispatch counters, benchmark rows —
+carries `Backend.name`, so the two targets never collide in a cache.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+from repro.core.backends.base import (Backend, ElementwiseSpec,
+                                      ReductionSpec, ScanSpec)
+from repro.core.backends.pallas import PallasBackend
+from repro.core.backends.xla import XlaBackend
+
+DEFAULT_BACKEND = "pallas"
+
+_FACTORIES: dict[str, Callable[[], Backend]] = {
+    "pallas": PallasBackend,
+    "xla": XlaBackend,
+}
+_INSTANCES: dict[str, Backend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], Backend]) -> None:
+    """Register a third execution target (tests register probes here)."""
+    _FACTORIES[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> list[str]:
+    return sorted(_FACTORIES)
+
+
+def active_backend_name() -> str:
+    """The process-wide default backend name (``REPRO_BACKEND``),
+    normalized the same way `get_backend` resolves it."""
+    return os.environ.get("REPRO_BACKEND", DEFAULT_BACKEND).lower()
+
+
+def get_backend(name: "str | Backend | None" = None) -> Backend:
+    """Resolve a backend: an instance passes through, a name looks up the
+    registry, ``None`` reads ``REPRO_BACKEND`` (default: pallas)."""
+    if isinstance(name, Backend):
+        return name
+    key = (name or active_backend_name()).lower()
+    be = _INSTANCES.get(key)
+    if be is None:
+        try:
+            factory = _FACTORIES[key]
+        except KeyError:
+            raise ValueError(
+                f"unknown RTCG backend {key!r}; available: "
+                f"{available_backends()}") from None
+        be = _INSTANCES[key] = factory()
+    return be
+
+
+__all__ = [
+    "Backend", "ElementwiseSpec", "ReductionSpec", "ScanSpec",
+    "PallasBackend", "XlaBackend", "DEFAULT_BACKEND",
+    "register_backend", "available_backends", "active_backend_name",
+    "get_backend",
+]

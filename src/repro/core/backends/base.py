@@ -1,0 +1,179 @@
+"""The Backend contract — one RTCG pipeline, pluggable execution targets.
+
+The source paper's central architectural claim is that a run-time
+code-generation pipeline splits cleanly into a *target-independent*
+front half (snippet translation, caching, autotuning, fusion planning)
+and a *target-specific* back half (compile-and-launch) — PyCUDA and
+PyOpenCL share everything but the last step.  This module pins that
+split down for the reproduction:
+
+  * the kernel families (`elementwise`/`reduction`/`scan`) produce
+    **specs** — frozen descriptions of translated snippets plus argument
+    metadata, with no compilation machinery attached;
+  * a `Backend` turns a (spec, geometry) pair into a compiled *driver*:
+    ``render`` (spec -> source text) → ``compile`` (source -> jitted
+    callable) → ``launch`` (the driver: pad operands, call, slice).
+
+Drivers keep the dispatch-engine calling conventions:
+
+  * flat elementwise/reduction: ``driver(n, flat_args)``
+  * row-segmented (axis=-1):    ``driver(b, n, flat_args)``
+  * scan:                       ``driver(n, x)``
+
+Backends also carry a capability/fingerprint record (`fingerprint()`)
+so caches, tuning winners and benchmark rows can be keyed per backend —
+the paper's environment fingerprint gains a "which toolkit" dimension,
+exactly like the CUDA-vs-OpenCL comparisons treat the backend itself as
+a measured variable.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass(frozen=True)
+class ElementwiseSpec:
+    """Snippet + argument description of one elementwise kernel.
+
+    ``body_lines`` are the translated jnp statements (they reference
+    operands by bare name, scalar args as plain python scalars, the
+    block shape as ``_BLK`` and — flat layout only — the global element
+    index ``i``).  ``arg_meta`` is ``(name, jnp dtype, kind)`` per
+    positional argument with kind in scalar|full|row|col.
+    """
+
+    name: str
+    arg_meta: tuple            # ((name, dtype, kind), ...)
+    scalar_names: tuple
+    loaded_vectors: tuple      # vector/broadcast names read by the body
+    body_lines: tuple
+    out_names: tuple
+    out_dtypes: tuple
+    needs_i: bool
+    preamble: str = ""
+    interpret: bool = True     # pallas-only hint; other backends ignore
+
+    def token(self) -> list:
+        """JSON-able identity for content-addressed caching."""
+        return ["eltwise", self.name,
+                [(m[0], str(m[1]), m[2]) for m in self.arg_meta],
+                list(self.body_lines), list(self.out_names),
+                [str(d) for d in self.out_dtypes], self.needs_i,
+                self.preamble, self.interpret]
+
+
+@dataclass(frozen=True)
+class ReductionSpec:
+    """Snippet + argument description of one (multi-accumulator) map+reduce.
+
+    ``outs`` holds one dict per accumulator: ``map_expr`` (translated),
+    ``neutral`` (literal), ``block_reduce`` (e.g. ``jnp.sum``),
+    ``combine`` (cross-grid-step fold — only sequential-grid backends
+    use it) and ``dtype``.  ``axis`` is None (flat) or -1 (row-segmented,
+    one accumulator per row; later map_exprs may reference earlier
+    accumulators as ``_acc<k>``).
+    """
+
+    name: str
+    arg_meta: tuple
+    scalar_names: tuple
+    loaded_vectors: tuple
+    prelude_lines: tuple       # hoisted CSE assignments, pre-translated
+    outs: tuple                # (dict(map_expr, neutral, block_reduce, combine, dtype), ...)
+    multi: bool
+    axis: Any = None           # None | -1
+    preamble: str = ""
+    interpret: bool = True
+
+    def token(self) -> list:
+        return ["reduce", self.name,
+                [(m[0], str(m[1]), m[2]) for m in self.arg_meta],
+                list(self.prelude_lines),
+                [sorted(o.items()) for o in self.outs],
+                self.multi, self.axis or 0, self.preamble, self.interpret]
+
+
+@dataclass(frozen=True)
+class ScanSpec:
+    """Description of one prefix scan: combine op + neutral + dtype."""
+
+    name: str
+    dtype: str                 # jnp dtype name, e.g. "float32"
+    neutral: str               # numeric literal
+    cumop: str                 # e.g. "jnp.cumsum"
+    binop: str                 # "+", "*", "jnp.maximum", "jnp.minimum"
+    exclusive: bool
+    interpret: bool = True
+
+    def token(self) -> list:
+        return ["scan", self.name, self.dtype, self.neutral, self.cumop,
+                self.binop, self.exclusive, self.interpret]
+
+
+def binop_apply(binop: str, a: str, b: str) -> str:
+    """Apply a combine operator snippet ("+", "*", "jnp.maximum", ...)
+    to two operand strings — shared by every backend's scan renderer."""
+    if binop in ("+", "*"):
+        return f"({a} {binop} {b})"
+    return f"{binop}({a}, {b})"
+
+
+class Backend(abc.ABC):
+    """One execution target of the RTCG pipeline (render→compile→launch).
+
+    Concrete backends are stateless singletons (see the package
+    registry); every compiled driver is cached by the dispatch engine
+    under a backend-qualified key, so two backends never share or
+    clobber each other's drivers.
+    """
+
+    #: registry name; also the tag on dispatch counters and bench rows
+    name: str = "abstract"
+
+    #: whether ``block_rows``/``block_n`` changes the *generated code*
+    #: (pallas: yes — the block is the BlockSpec tile; xla: no — code
+    #: depends only on the padded operand shape).  Kernel families drop
+    #: the block size from dispatch keys of insensitive backends so
+    #: tuning candidates that share a padded shape share one driver.
+    block_sensitive: bool = True
+
+    @abc.abstractmethod
+    def fingerprint(self) -> dict:
+        """Capability/version record — cache-key material and bench
+        metadata.  Must differ between any two backends."""
+
+    # -- elementwise -----------------------------------------------------
+    @abc.abstractmethod
+    def elementwise_driver(self, spec: ElementwiseSpec, *, bucket: int,
+                           block_rows: int) -> Callable:
+        """Compile one flat-layout driver: ``driver(n, flat_args) ->
+        [flat outputs]`` serving every ``n`` whose padded rows fit
+        ``bucket``."""
+
+    @abc.abstractmethod
+    def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
+                                ncols: int, block_rows: int) -> Callable:
+        """Compile one row-layout driver: ``driver(b, n, flat_args) ->
+        [(b, n) outputs]`` serving every ``(B, N)`` in the bucket pair."""
+
+    # -- reduction -------------------------------------------------------
+    @abc.abstractmethod
+    def reduction_driver(self, spec: ReductionSpec, *, bucket: int,
+                         block_rows: int) -> Callable:
+        """Compile one flat map+reduce driver: ``driver(n, flat_args)``
+        returning a scalar (or tuple of scalars when ``spec.multi``)."""
+
+    @abc.abstractmethod
+    def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
+                              ncols: int, block_rows: int) -> Callable:
+        """Compile one row-segmented driver: ``driver(b, n, flat_args)``
+        returning (b,)-shaped outputs (tuple when ``spec.multi``)."""
+
+    # -- scan ------------------------------------------------------------
+    @abc.abstractmethod
+    def scan_driver(self, spec: ScanSpec, *, grid: int,
+                    block_n: int) -> Callable:
+        """Compile one prefix-scan driver: ``driver(n, x) -> flat out``."""

@@ -1,0 +1,439 @@
+"""PallasBackend — the TPU execution target (pallas_call assembly).
+
+This is the launch path the kernel families used to hand-assemble
+themselves: render the spec into *Pallas kernel source* (refs, block
+specs, a sequential 1-D grid), ``SourceModule.load`` it (content
+addressed — identical renders compile once), wrap in ``pl.pallas_call``
++ ``jax.jit``, and return a driver that pads operands to the bucketed
+block shape on the way in and slices/masks on the way out.
+
+TPU realization notes (see the repo's Pallas idioms):
+
+  * elementwise: ``(rows, LANES)`` lane layout, ``block_rows``-row VMEM
+    blocks, 1-D grid;
+  * flat reduction: grid steps on a TensorCore run *sequentially*, so
+    block partials accumulate into a (1, 1) output across steps;
+  * row reduction: the grid runs over row blocks; each row reduces
+    entirely inside its block (no cross-step combine), later
+    accumulators may reference earlier ones (``_acc<k>``);
+  * scan: two generated passes (per-block inclusive scan + carry add)
+    around a tiny host combine over block totals.
+
+``interpret`` (from the spec) selects Pallas interpreter mode off-TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.backends.base import (Backend, ElementwiseSpec,
+                                      ReductionSpec, ScanSpec, binop_apply)
+from repro.core.platform import LANES, pad_flat_operand, pad_row_operand
+from repro.core.templates import KernelTemplate
+
+
+def row_block_specs(block_rows: int, ncols: int) -> dict:
+    """BlockSpec per operand kind for a (brows, ncols) row layout."""
+    return {
+        "scalar": pl.BlockSpec((1, 1), lambda r: (0, 0)),
+        "full": pl.BlockSpec((block_rows, ncols), lambda r: (r, 0)),
+        "row": pl.BlockSpec((block_rows, 1), lambda r: (r, 0)),
+        "col": pl.BlockSpec((1, ncols), lambda r: (0, 0)),
+    }
+
+
+_ELTWISE_TMPL = KernelTemplate(
+    "eltwise",
+    '''
+def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in out_names %}{{ o }}_out_ref{{ ", " if not loop.last }}{% endfor %}):
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}_ref[0, 0]
+{% endfor %}
+{% if needs_i %}
+    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
+    i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
+{% endif %}
+    _BLK = ({{ block_rows }}, {{ lanes }})
+{% for v in loaded_vectors %}
+    {{ v }} = {{ v }}_ref[...]
+{% endfor %}
+{% for line in body_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in out_names %}
+    {{ o }}_out_ref[...] = {{ o }}
+{% endfor %}
+''',
+)
+
+_REDUCE_TMPL = KernelTemplate(
+    "reduction",
+    '''
+def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
+    _n = _n_ref[0, 0]
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}_ref[0, 0]
+{% endfor %}
+    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
+    i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
+{% for v in loaded_vectors %}
+    {{ v }} = {{ v }}_ref[...]
+{% endfor %}
+{% for line in prelude_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in outs %}
+    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
+    _mapped{{ loop.index0 }} = jnp.where(i < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
+    _partial{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }})
+    _prev{{ loop.index0 }} = jnp.where(pl.program_id(0) == 0,
+                                       jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}),
+                                       o{{ loop.index0 }}_ref[0, 0])
+    o{{ loop.index0 }}_ref[0, 0] = {{ o.combine }}
+{% endfor %}
+''',
+)
+
+# Row-segmented form: the grid runs over blocks of *rows* of a (B, N)
+# operand; each row reduces inside its block (no cross-step combine), the
+# runtime row length masks padding columns, and later accumulators may
+# reference earlier ones (`_acc<k>`, a per-row (block, 1) value).
+_ROW_REDUCE_TMPL = KernelTemplate(
+    "row_reduction",
+    '''
+def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
+    _n = _n_ref[0, 0]
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}_ref[0, 0]
+{% endfor %}
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ ncols }}), 1)
+{% for v in loaded_vectors %}
+    {{ v }} = {{ v }}_ref[...]
+{% endfor %}
+{% for line in prelude_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in outs %}
+    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
+    _mapped{{ loop.index0 }} = jnp.where(_col < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
+    _acc{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }}, axis=1, keepdims=True)
+    o{{ loop.index0 }}_ref[...] = _acc{{ loop.index0 }}
+{% endfor %}
+''',
+)
+
+_SCAN1_TMPL = KernelTemplate(
+    "scan1",
+    '''
+def {{ name }}(x_ref, y_ref, tot_ref):
+    # block laid out (rows, lanes) in ROW-MAJOR flat order: scan rows
+    # within each lane column is wrong — so the driver hands us a
+    # (1, block_n) row: a straight 1-axis scan.
+    x = x_ref[...].astype(jnp.{{ dtype }})
+    s = {{ cumop }}(x, axis=1)
+    y_ref[...] = s
+    tot_ref[0, 0] = s[0, -1]
+''',
+)
+
+_SCAN2_TMPL = KernelTemplate(
+    "scan2",
+    '''
+def {{ name }}(y_ref, off_ref, o_ref):
+    off = off_ref[0, 0]
+{% if exclusive %}
+    # exclusive: shift right by one within the global stream; the driver
+    # passes the per-block carry already exclusive of this block.
+    y = y_ref[...]
+    prev = jnp.concatenate([jnp.full((1, 1), off, y.dtype),
+                            ({{ binop_expr }})[:, :-1]], axis=1)
+    o_ref[...] = prev
+{% else %}
+    o_ref[...] = {{ combine }}
+{% endif %}
+''',
+)
+
+def _with_preamble(spec, src: str) -> str:
+    return (spec.preamble + "\n" + src) if spec.preamble else src
+
+
+class PallasBackend(Backend):
+    name = "pallas"
+
+    def fingerprint(self) -> dict:
+        return {
+            "backend": self.name,
+            "target": "tpu" if jax.default_backend() == "tpu" else "interpret",
+            "jax": jax.__version__,
+        }
+
+    # -- render ----------------------------------------------------------
+    def render_elementwise(self, spec: ElementwiseSpec, block_rows: int,
+                           ncols: int | None = None) -> str:
+        """Row layout renders the same template with the lane axis widened
+        to the (bucketed) row length ``ncols`` — blocks are
+        ``(block_rows, ncols)`` row groups instead of flat lane tiles."""
+        src = _ELTWISE_TMPL.render(
+            name=spec.name,
+            in_names=[m[0] for m in spec.arg_meta],
+            out_names=list(spec.out_names),
+            scalar_names=list(spec.scalar_names),
+            loaded_vectors=list(spec.loaded_vectors),
+            body_lines=list(spec.body_lines),
+            needs_i=spec.needs_i,
+            block_rows=block_rows,
+            lanes=ncols if ncols is not None else LANES,
+        )
+        return _with_preamble(spec, src)
+
+    def render_reduction(self, spec: ReductionSpec, block_rows: int,
+                         ncols: int | None = None) -> str:
+        tmpl_kwargs = dict(
+            name=spec.name,
+            in_names=[m[0] for m in spec.arg_meta],
+            scalar_names=list(spec.scalar_names),
+            loaded_vectors=list(spec.loaded_vectors),
+            prelude_lines=list(spec.prelude_lines),
+            outs=list(spec.outs),
+            block_rows=block_rows,
+        )
+        if spec.axis is None:
+            src = _REDUCE_TMPL.render(lanes=LANES, **tmpl_kwargs)
+        else:
+            src = _ROW_REDUCE_TMPL.render(ncols=ncols, **tmpl_kwargs)
+        return _with_preamble(spec, src)
+
+    def render_scan(self, spec: ScanSpec) -> tuple[str, str]:
+        src1 = _SCAN1_TMPL.render(name=f"{spec.name}_p1", dtype=spec.dtype,
+                                  cumop=spec.cumop)
+        src2 = _SCAN2_TMPL.render(
+            name=f"{spec.name}_p2", exclusive=spec.exclusive,
+            binop_expr=binop_apply(spec.binop, "y", "off"),
+            combine=binop_apply(spec.binop, "y_ref[...]", "off"))
+        return src1, src2
+
+    # -- elementwise -----------------------------------------------------
+    def elementwise_driver(self, spec: ElementwiseSpec, *, bucket: int,
+                           block_rows: int) -> Callable:
+        """The pallas_call is traced once over the static ``(bucket,
+        LANES)`` shape; the element count only appears at run time
+        (padding on the way in, slicing on the way out), so the driver
+        is reused across the whole bucket."""
+        from repro.core.rtcg import SourceModule
+
+        grid = bucket // block_rows
+        mod = SourceModule.load(self.render_elementwise(spec, block_rows),
+                                name=spec.name)
+        kernel = mod.get_function(f"{spec.name}_kernel")
+
+        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+        scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
+        in_specs = [scl if kind == "scalar" else blk
+                    for _, _, kind in spec.arg_meta]
+        out_shape = [jax.ShapeDtypeStruct((bucket, LANES), d)
+                     for d in spec.out_dtypes]
+
+        call = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[blk] * len(spec.out_names),
+            out_shape=out_shape,
+            interpret=spec.interpret,
+        ))
+        arg_meta = spec.arg_meta
+
+        def driver(n, flat_args):
+            padded = [pad_flat_operand(kind, name, arg, dt, n, bucket)
+                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            return [o.reshape(-1)[:n] for o in outs]
+
+        return driver
+
+    def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
+                                ncols: int, block_rows: int) -> Callable:
+        """One driver per (source, batch-bucket, row-length-bucket): blocks
+        are ``(block_rows, ncols)`` row groups, per-row broadcast args bind
+        as ``(block_rows, 1)``, per-col as ``(1, ncols)``.  Row padding is
+        sliced off on the way out, so any ``(B, N)`` whose buckets match
+        reuses this compile."""
+        from repro.core.rtcg import SourceModule
+
+        grid = brows // block_rows
+        mod = SourceModule.load(self.render_elementwise(spec, block_rows, ncols),
+                                name=spec.name)
+        kernel = mod.get_function(f"{spec.name}_kernel")
+
+        spec_map = row_block_specs(block_rows, ncols)
+        in_specs = [spec_map[kind] for _, _, kind in spec.arg_meta]
+        out_shape = [jax.ShapeDtypeStruct((brows, ncols), d)
+                     for d in spec.out_dtypes]
+        call = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[spec_map["full"]] * len(spec.out_names),
+            out_shape=out_shape,
+            interpret=spec.interpret,
+        ))
+        arg_meta = spec.arg_meta
+
+        def driver(b, n, flat_args):
+            padded = [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            return [o[:b, :n] for o in outs]
+
+        return driver
+
+    # -- reduction -------------------------------------------------------
+    def reduction_driver(self, spec: ReductionSpec, *, bucket: int,
+                         block_rows: int) -> Callable:
+        """One driver per (source, bucket): the element count is a runtime
+        scalar feeding the in-kernel neutral mask, so any ``n`` whose
+        padded rows fit the bucket reuses this compile."""
+        from repro.core.rtcg import SourceModule
+
+        grid = bucket // block_rows
+        mod = SourceModule.load(self.render_reduction(spec, block_rows),
+                                name=spec.name)
+        kernel = mod.get_function(f"{spec.name}_kernel")
+
+        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+        scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
+        in_specs = [scl] + [scl if kind == "scalar" else blk
+                            for _, _, kind in spec.arg_meta]
+        dtypes_out = [o["dtype"] for o in spec.outs]
+        call = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[pl.BlockSpec((1, 1), lambda r: (0, 0))] * len(spec.outs),
+            out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.dtype(d))
+                       for d in dtypes_out],
+            interpret=spec.interpret,
+        ))
+        arg_meta = spec.arg_meta
+        multi = spec.multi
+
+        def driver(n, flat_args):
+            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+            padded += [pad_flat_operand(kind, name, arg, dt, n, bucket)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            if multi:
+                return tuple(o[0, 0] for o in outs)
+            return outs[0][0, 0]
+
+        return driver
+
+    def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
+                              ncols: int, block_rows: int) -> Callable:
+        """Row-segmented driver: one accumulator per row, single launch.
+        The runtime row length ``n`` masks padding columns; padded *rows*
+        compute on zeros and are sliced off the (B,)-shaped outputs."""
+        from repro.core.rtcg import SourceModule
+
+        grid = brows // block_rows
+        mod = SourceModule.load(self.render_reduction(spec, block_rows, ncols),
+                                name=spec.name)
+        kernel = mod.get_function(f"{spec.name}_kernel")
+
+        spec_map = row_block_specs(block_rows, ncols)
+        in_specs = [spec_map["scalar"]] + [spec_map[kind]
+                                           for _, _, kind in spec.arg_meta]
+        dtypes_out = [o["dtype"] for o in spec.outs]
+        call = jax.jit(pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=[spec_map["row"]] * len(spec.outs),
+            out_shape=[jax.ShapeDtypeStruct((brows, 1), jnp.dtype(d))
+                       for d in dtypes_out],
+            interpret=spec.interpret,
+        ))
+        arg_meta = spec.arg_meta
+        multi = spec.multi
+
+        def driver(b, n, flat_args):
+            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+            padded += [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            if multi:
+                return tuple(o[:b, 0] for o in outs)
+            return outs[0][:b, 0]
+
+        return driver
+
+    # -- scan ------------------------------------------------------------
+    def scan_driver(self, spec: ScanSpec, *, grid: int,
+                    block_n: int) -> Callable:
+        """One driver per (source, grid bucket, block_n): padding with the
+        neutral element makes the tail blocks no-ops, so any ``n`` needing
+        at most ``grid`` blocks reuses this compile."""
+        from repro.core.rtcg import SourceModule
+
+        bn = block_n
+        pn = grid * bn
+        dt = jnp.dtype(spec.dtype)
+
+        src1, src2 = self.render_scan(spec)
+        k1 = SourceModule.load(src1).get_function(f"{spec.name}_p1")
+        k2 = SourceModule.load(src2).get_function(f"{spec.name}_p2")
+
+        row = pl.BlockSpec((1, bn), lambda i: (i, 0))
+        one = pl.BlockSpec((1, 1), lambda i: (i, 0))
+        p1 = pl.pallas_call(
+            k1, grid=(grid,), in_specs=[row], out_specs=[row, one],
+            out_shape=[jax.ShapeDtypeStruct((grid, bn), dt),
+                       jax.ShapeDtypeStruct((grid, 1), dt)],
+            interpret=spec.interpret)
+        p2 = pl.pallas_call(
+            k2, grid=(grid,), in_specs=[row, one], out_specs=row,
+            out_shape=jax.ShapeDtypeStruct((grid, bn), dt),
+            interpret=spec.interpret)
+
+        neutral = spec.neutral
+        binop = spec.binop
+
+        @jax.jit
+        def core(xp):
+            partial, totals = p1(xp)
+            # tiny exclusive combine over block totals
+            if binop == "+":
+                carry = jnp.cumsum(totals[:, 0]) - totals[:, 0]
+                carry = carry + jnp.asarray(neutral, dt)
+            elif binop == "*":
+                # exclusive product via shift, NOT cumprod/totals division
+                # (a zero block total would make that 0/0 = NaN)
+                shifted = jnp.concatenate(
+                    [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
+                carry = jnp.cumprod(shifted)
+            else:
+                fn = jax.lax.cummax if "max" in binop else jax.lax.cummin
+                shifted = jnp.concatenate(
+                    [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
+                carry = fn(shifted)
+            return p2(partial, carry[:, None])
+
+        def driver(n, x):
+            xf = jnp.ravel(jnp.asarray(x)).astype(dt)
+            if int(xf.size) != pn:
+                xp = jnp.pad(xf, (0, pn - int(xf.size)),
+                             constant_values=np.asarray(neutral, dt))
+            else:
+                xp = xf
+            out = core(xp.reshape(grid, bn))
+            return out.reshape(-1)[:n]
+
+        return driver

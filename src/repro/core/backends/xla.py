@@ -1,0 +1,283 @@
+"""XlaBackend — pure-XLA execution target (no Pallas dependency).
+
+The paper's "second toolkit": the same rendered snippets the Pallas
+backend tiles into VMEM blocks lower here to plain ``jnp`` operations
+over whole (bucketed) operands, compiled by ``jax.jit`` — masked
+segment reductions instead of grid-step accumulators, broadcast
+epilogues instead of BlockSpec binding, associative host-free scans
+instead of the two-pass blocked scan.  PyCUDA vs PyOpenCL in miniature:
+everything upstream of ``render`` (snippet translation, fusion
+planning, bucketing math, caching, autotuning) is shared verbatim;
+only the compile-and-launch step differs.
+
+Semantics contract with `PallasBackend` (asserted by the fusion test
+suites, which run against both):
+
+  * identical driver calling conventions and launch counting — one
+    driver call is one launch, whatever XLA fuses internally;
+  * identical bucketing: operands are padded to the same bucketed
+    shapes so a size sweep compiles the same log-many drivers and the
+    runtime ``n`` masks (reductions) or slices (elementwise) the same
+    way — padding must never hide a size bug on either backend;
+  * allclose numerics (reduction order differs: whole-array folds here
+    vs sequential block accumulation there).
+
+Generated source still goes through `SourceModule.load`, so the XLA
+target keeps the paper's workflow — source text in, cached callable
+out — and generated code stays introspectable in tracebacks.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends.base import (Backend, ElementwiseSpec,
+                                      ReductionSpec, ScanSpec, binop_apply)
+from repro.core.platform import LANES, pad_flat_operand, pad_row_operand
+from repro.core.templates import KernelTemplate
+
+# The XLA lowering of an elementwise spec: one function over the whole
+# padded (rows, lanes) operand block.  Parameters are the *bare* operand
+# names (no refs), so the same translated body lines run unchanged; the
+# global element index `i` is a full-shape iota instead of a
+# program_id-offset block iota.
+_ELTWISE_TMPL = KernelTemplate(
+    "xla_eltwise",
+    '''
+def {{ name }}_fn({% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% endfor %}):
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}[0, 0]
+{% endfor %}
+{% if needs_i %}
+    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ lanes }}), 0)
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ lanes }}), 1)
+    i = _row * {{ lanes }} + _col
+{% endif %}
+    _BLK = ({{ rows }}, {{ lanes }})
+{% for line in body_lines %}
+    {{ line }}
+{% endfor %}
+    return ({% for o in out_names %}{{ o }}, {% endfor %})
+''',
+)
+
+# Flat map+reduce: mask padding lanes with the neutral element against
+# the runtime `_n`, then fold the whole array — no cross-step combine
+# because there are no grid steps.
+_REDUCE_TMPL = KernelTemplate(
+    "xla_reduction",
+    '''
+def {{ name }}_fn(_n_ref, {% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% endfor %}):
+    _n = _n_ref[0, 0]
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}[0, 0]
+{% endfor %}
+    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ lanes }}), 0)
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ lanes }}), 1)
+    i = _row * {{ lanes }} + _col
+{% for line in prelude_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in outs %}
+    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
+    _mapped{{ loop.index0 }} = jnp.where(i < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
+    _out{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }}).reshape(1, 1)
+{% endfor %}
+    return ({% for o in outs %}_out{{ loop.index0 }}, {% endfor %})
+''',
+)
+
+# Row-segmented map+reduce: mask padding columns, fold axis=1 — the
+# whole batch is one "block", so the `_acc<k>` chaining contract (a
+# later accumulator referencing an earlier one per row) holds verbatim.
+_ROW_REDUCE_TMPL = KernelTemplate(
+    "xla_row_reduction",
+    '''
+def {{ name }}_fn(_n_ref, {% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% endfor %}):
+    _n = _n_ref[0, 0]
+{% for s in scalar_names %}
+    {{ s }} = {{ s }}[0, 0]
+{% endfor %}
+    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ ncols }}), 1)
+{% for line in prelude_lines %}
+    {{ line }}
+{% endfor %}
+{% for o in outs %}
+    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
+    _mapped{{ loop.index0 }} = jnp.where(_col < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
+    _acc{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }}, axis=1, keepdims=True)
+{% endfor %}
+    return ({% for o in outs %}_acc{{ loop.index0 }}, {% endfor %})
+''',
+)
+
+# Associative scan over the whole stream: the two blocked passes and the
+# host carry combine collapse into one cumulative op (+ the neutral
+# fold that PallasBackend applies through the carries).
+_SCAN_TMPL = KernelTemplate(
+    "xla_scan",
+    '''
+def {{ name }}_fn(x):
+    x = x.astype(jnp.{{ dtype }})
+    _nv = jnp.asarray({{ neutral }}, jnp.{{ dtype }})
+    _s = {{ inclusive_expr }}
+{% if exclusive %}
+    return jnp.concatenate([_nv.reshape(1), _s[:-1]])
+{% else %}
+    return _s
+{% endif %}
+''',
+)
+
+
+class XlaBackend(Backend):
+    name = "xla"
+    block_sensitive = False  # code depends on padded shape, never block size
+
+    def fingerprint(self) -> dict:
+        return {
+            "backend": self.name,
+            "target": jax.default_backend(),
+            "jax": jax.__version__,
+        }
+
+    # -- render ----------------------------------------------------------
+    def render_elementwise(self, spec: ElementwiseSpec, rows: int,
+                           ncols: int | None = None) -> str:
+        src = _ELTWISE_TMPL.render(
+            name=spec.name,
+            in_names=[m[0] for m in spec.arg_meta],
+            out_names=list(spec.out_names),
+            scalar_names=list(spec.scalar_names),
+            body_lines=list(spec.body_lines),
+            needs_i=spec.needs_i,
+            rows=rows,
+            lanes=ncols if ncols is not None else LANES,
+        )
+        return (spec.preamble + "\n" + src) if spec.preamble else src
+
+    def render_reduction(self, spec: ReductionSpec, rows: int,
+                         ncols: int | None = None) -> str:
+        tmpl_kwargs = dict(
+            name=spec.name,
+            in_names=[m[0] for m in spec.arg_meta],
+            scalar_names=list(spec.scalar_names),
+            prelude_lines=list(spec.prelude_lines),
+            outs=list(spec.outs),
+            rows=rows,
+        )
+        if spec.axis is None:
+            src = _REDUCE_TMPL.render(lanes=LANES, **tmpl_kwargs)
+        else:
+            src = _ROW_REDUCE_TMPL.render(ncols=ncols, **tmpl_kwargs)
+        return (spec.preamble + "\n" + src) if spec.preamble else src
+
+    def render_scan(self, spec: ScanSpec) -> str:
+        # inclusive-with-neutral: PallasBackend's carries fold the
+        # neutral into every element (identity neutrals are no-ops)
+        return _SCAN_TMPL.render(
+            name=spec.name, dtype=spec.dtype, neutral=spec.neutral,
+            exclusive=spec.exclusive,
+            inclusive_expr=binop_apply(spec.binop, f"{spec.cumop}(x)", "_nv"))
+
+    def _compile(self, src: str, fn_name: str, name: str) -> Callable:
+        from repro.core.rtcg import SourceModule
+
+        return jax.jit(SourceModule.load(src, name=name).get_function(fn_name))
+
+    # -- elementwise -----------------------------------------------------
+    def elementwise_driver(self, spec: ElementwiseSpec, *, bucket: int,
+                           block_rows: int) -> Callable:
+        """Same bucket economics as the Pallas driver: the jitted function
+        is traced once over the static ``(bucket, LANES)`` shape and the
+        runtime ``n`` only pads and slices.  ``block_rows`` does not
+        change the generated code (there are no blocks), so every tuning
+        candidate shares one compile."""
+        call = self._compile(self.render_elementwise(spec, bucket),
+                             f"{spec.name}_fn", spec.name)
+        arg_meta = spec.arg_meta
+
+        def driver(n, flat_args):
+            padded = [pad_flat_operand(kind, name, arg, dt, n, bucket)
+                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            return [o.reshape(-1)[:n] for o in outs]
+
+        return driver
+
+    def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
+                                ncols: int, block_rows: int) -> Callable:
+        call = self._compile(self.render_elementwise(spec, brows, ncols),
+                             f"{spec.name}_fn", spec.name)
+        arg_meta = spec.arg_meta
+
+        def driver(b, n, flat_args):
+            padded = [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            return [o[:b, :n] for o in outs]
+
+        return driver
+
+    # -- reduction -------------------------------------------------------
+    def reduction_driver(self, spec: ReductionSpec, *, bucket: int,
+                         block_rows: int) -> Callable:
+        call = self._compile(self.render_reduction(spec, bucket),
+                             f"{spec.name}_fn", spec.name)
+        arg_meta = spec.arg_meta
+        multi = spec.multi
+
+        def driver(n, flat_args):
+            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+            padded += [pad_flat_operand(kind, name, arg, dt, n, bucket)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            if multi:
+                return tuple(o[0, 0] for o in outs)
+            return outs[0][0, 0]
+
+        return driver
+
+    def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
+                              ncols: int, block_rows: int) -> Callable:
+        call = self._compile(self.render_reduction(spec, brows, ncols),
+                             f"{spec.name}_fn", spec.name)
+        arg_meta = spec.arg_meta
+        multi = spec.multi
+
+        def driver(b, n, flat_args):
+            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+            padded += [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+            outs = call(*padded)
+            if multi:
+                return tuple(o[:b, 0] for o in outs)
+            return outs[0][:b, 0]
+
+        return driver
+
+    # -- scan ------------------------------------------------------------
+    def scan_driver(self, spec: ScanSpec, *, grid: int,
+                    block_n: int) -> Callable:
+        """Padded to the same ``grid * block_n`` stream as the blocked
+        Pallas scan (one traced shape per bucket; neutral padding keeps
+        the tail inert), then one associative cumulative op."""
+        import numpy as np
+
+        pn = grid * block_n
+        dt = jnp.dtype(spec.dtype)
+        call = self._compile(self.render_scan(spec), f"{spec.name}_fn",
+                             spec.name)
+        neutral = spec.neutral
+
+        def driver(n, x):
+            xf = jnp.ravel(jnp.asarray(x)).astype(dt)
+            if int(xf.size) != pn:
+                xf = jnp.pad(xf, (0, pn - int(xf.size)),
+                             constant_values=np.asarray(neutral, dt))
+            return call(xf)[:n]
+
+        return driver

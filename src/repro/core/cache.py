@@ -28,10 +28,19 @@ def _default_cache_dir() -> Path:
     return Path(os.environ.get("XDG_CACHE_HOME", str(Path.home() / ".cache"))) / "repro-rtcg"
 
 
-def environment_fingerprint() -> dict:
+def environment_fingerprint(backend: str | None = None) -> dict:
     """Identifying information about hardware + software (paper section 5:
     'means for the easy gathering of identifying information regarding
-    hardware, software and their corresponding versions')."""
+    hardware, software and their corresponding versions').
+
+    The record includes the *RTCG execution backend* (PR 4): PyCUDA and
+    PyOpenCL artifacts were never interchangeable, and neither are
+    pallas- and xla-compiled ones — so persisted entries (tuning
+    winners, rendered source) keyed through `fingerprint_token` can
+    never leak across backends.  ``backend`` pins the dimension
+    explicitly; by default it reads the process-wide ``REPRO_BACKEND``
+    selection.
+    """
     import platform
 
     import jax
@@ -42,16 +51,22 @@ def environment_fingerprint() -> dict:
         platform_name = dev.platform
     except Exception:  # pragma: no cover - no backend at all
         device_kind, platform_name = "none", "none"
+    if backend is None:
+        # lazy import: backends -> pallas -> templates -> rtcg -> cache
+        from repro.core.backends import active_backend_name
+
+        backend = active_backend_name()
     return {
         "jax": jax.__version__,
         "python": platform.python_version(),
         "backend": platform_name,
         "device_kind": device_kind,
+        "rtcg_backend": backend.lower(),
     }
 
 
-def fingerprint_token() -> str:
-    return stable_hash(environment_fingerprint())[:16]
+def fingerprint_token(backend: str | None = None) -> str:
+    return stable_hash(environment_fingerprint(backend))[:16]
 
 
 def stable_hash(obj: Any) -> str:

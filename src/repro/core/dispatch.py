@@ -37,8 +37,14 @@ identical source share one driver).  Eviction merely costs a rebuild.
 Counters
 --------
 ``compile_count()`` / ``launch_count()`` count driver builds and driver
-invocations process-wide; tests assert the bucketing bound through
-them and ``benchmarks/run.py`` records them per suite.
+invocations process-wide, *tagged per backend* (PR 4): drivers compiled
+by different execution backends never share a cache entry (keys carry
+the backend name), and the counters keep the same separation so a
+launch-count assertion can never silently mix backends.  The no-arg
+forms return process totals; pass a backend name for one backend's
+count, or read the full tag -> count maps via ``compile_counts()`` /
+``launch_counts()``.  ``benchmarks/run.py`` records the per-backend
+deltas per suite.
 """
 
 from __future__ import annotations
@@ -48,16 +54,16 @@ import threading
 from typing import Any, Callable, Sequence
 
 from repro.core.cache import LRUCache
-
-LANES = 128  # VPU lane count — single source of truth (elementwise re-exports)
+from repro.core.platform import LANES  # re-export: the bucketing lane width
 
 _DEFAULT_CACHE_SIZE = int(os.environ.get("REPRO_DRIVER_CACHE_SIZE", "256"))
 
 _driver_cache = LRUCache(maxsize=_DEFAULT_CACHE_SIZE)
 
 _counter_lock = threading.Lock()
-_compile_count = 0
-_launch_count = 0
+_UNTAGGED = "untagged"  # counter tag when a caller does not name a backend
+_compile_counts: dict[str, int] = {}
+_launch_counts: dict[str, int] = {}
 
 
 # ----------------------------------------------------------------- buckets
@@ -192,60 +198,89 @@ def driver_cache() -> LRUCache:
     return _driver_cache
 
 
-def get_or_build(key: Any, builder: Callable[[], Callable]) -> Callable:
-    """Shared-LRU lookup; on miss, build + count one driver compile."""
-    return _driver_cache.get_or_create(key, builder, on_create=_record_compile)
+def get_or_build(key: Any, builder: Callable[[], Callable],
+                 backend: str | None = None) -> Callable:
+    """Shared-LRU lookup; on miss, build + count one driver compile
+    against ``backend``'s tag.  Callers must put the backend name in
+    ``key`` too — the tag only labels the counter."""
+    tag = backend or _UNTAGGED
+    return _driver_cache.get_or_create(
+        key, builder, on_create=lambda: _record_compile(tag))
 
 
-def _record_compile() -> None:
-    global _compile_count
+def _record_compile(backend: str) -> None:
     with _counter_lock:
-        _compile_count += 1
+        _compile_counts[backend] = _compile_counts.get(backend, 0) + 1
 
 
-def record_launch() -> None:
-    global _launch_count
+def record_launch(backend: str | None = None) -> None:
+    tag = backend or _UNTAGGED
     with _counter_lock:
-        _launch_count += 1
+        _launch_counts[tag] = _launch_counts.get(tag, 0) + 1
 
 
-def compile_count() -> int:
+def compile_count(backend: str | None = None) -> int:
+    """Driver compiles: process total, or one backend's when named."""
     with _counter_lock:
-        return _compile_count
+        if backend is not None:
+            return _compile_counts.get(backend, 0)
+        return sum(_compile_counts.values())
 
 
-def launch_count() -> int:
+def launch_count(backend: str | None = None) -> int:
+    """Driver launches: process total, or one backend's when named."""
     with _counter_lock:
-        return _launch_count
+        if backend is not None:
+            return _launch_counts.get(backend, 0)
+        return sum(_launch_counts.values())
+
+
+def compile_counts() -> dict[str, int]:
+    """Snapshot of the backend tag -> compile count map."""
+    with _counter_lock:
+        return dict(_compile_counts)
+
+
+def launch_counts() -> dict[str, int]:
+    """Snapshot of the backend tag -> launch count map."""
+    with _counter_lock:
+        return dict(_launch_counts)
 
 
 class _LaunchCounter:
     """Context manager over the launch counter: ``delta`` after exit is
-    the number of generated-kernel launches inside the block."""
+    the number of generated-kernel launches inside the block, and
+    ``by_backend`` the nonzero per-backend deltas — so a test can assert
+    both the schedule length and *which* backend executed it."""
 
     def __enter__(self):
-        self._start = launch_count()
+        self._start = launch_counts()
         self.delta = 0
+        self.by_backend: dict[str, int] = {}
         return self
 
     def __exit__(self, *exc):
-        self.delta = launch_count() - self._start
+        end = launch_counts()
+        self.by_backend = {
+            k: d for k in end
+            if (d := end[k] - self._start.get(k, 0)) > 0}
+        self.delta = sum(self.by_backend.values())
         return False
 
 
 def count_launches() -> _LaunchCounter:
     """``with dispatch.count_launches() as c: ...; c.delta`` — the test/
     benchmark idiom for asserting launch schedules (e.g. fused softmax
-    is a reduce + one epilogue: delta == 2)."""
+    is a reduce + one epilogue: delta == 2).  ``c.by_backend`` breaks
+    the delta down per backend tag."""
     return _LaunchCounter()
 
 
 def reset_counters() -> None:
     """Zero the compile/launch counters (cache contents are kept)."""
-    global _compile_count, _launch_count
     with _counter_lock:
-        _compile_count = 0
-        _launch_count = 0
+        _compile_counts.clear()
+        _launch_counts.clear()
 
 
 def clear() -> None:
@@ -258,4 +293,6 @@ def stats() -> dict:
     s = _driver_cache.stats()
     s["compiles"] = compile_count()
     s["launches"] = launch_count()
+    s["compiles_by_backend"] = compile_counts()
+    s["launches_by_backend"] = launch_counts()
     return s

@@ -1,11 +1,16 @@
-"""ElementwiseKernel — generated, tiled elementwise Pallas kernels (paper §5.2, Fig. 4).
+"""ElementwiseKernel — generated, tiled elementwise kernels (paper §5.2, Fig. 4).
 
 The user supplies an argument list and a C-like snippet; the toolkit
 supplies *loop slicing* and driver code.  On CUDA, loop slicing meant
-thread/block decomposition; on TPU it means: flatten -> pad -> reshape to
-``(rows, 128)`` lanes -> tile rows into VMEM blocks -> 1-D grid.  The
-lane width 128 matches the VPU register lane count; ``block_rows`` is
-the tunable (the analogue of CUDA block size) exposed to the autotuner.
+thread/block decomposition; here the kernel family only *describes* the
+computation — translated snippet body, argument metadata, output dtypes
+(an `ElementwiseSpec`) — and hands it with a bucketed geometry to an
+execution `Backend` (`repro.core.backends`):
+
+  * ``pallas`` (default): flatten -> pad -> reshape to ``(rows, 128)``
+    lanes -> tile rows into VMEM blocks -> 1-D grid, with
+    ``block_rows`` as the tunable (the analogue of CUDA block size);
+  * ``xla``: the same snippet jitted over the whole bucketed operand.
 
 Faithful API surface (both paper variants):
 
@@ -19,11 +24,11 @@ Faithful API surface (both paper variants):
 
 Launch path: ``__call__`` goes through `repro.core.dispatch` — element
 counts are rounded up to power-of-two row *buckets* so one compiled
-driver (shared process-wide in an LRU) serves every ``n`` in the
-bucket, and the hot path is a couple of integer ops plus a cache
-lookup: no argument re-parsing, no dict construction, no re-render.
-Per-bucket tuned ``block_rows`` (see `autotune`) are applied
-automatically when the call site does not pin one.
+driver (shared process-wide in an LRU, keyed per backend) serves every
+``n`` in the bucket, and the hot path is a couple of integer ops plus a
+cache lookup: no argument re-parsing, no dict construction, no
+re-render.  Per-(backend, bucket) tuned ``block_rows`` (see `autotune`)
+are applied automatically when the call site does not pin one.
 
 Row layout (axis-aware fusion, PR 3): ``layout="rows"`` keeps ``(B, N)``
 operands 2-D — blocks are ``(block_rows, ncols)`` row groups, buckets
@@ -36,155 +41,26 @@ row reductions and shared feature weights enter a fused 2-D epilogue.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
-from typing import Any, Sequence
+from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
 
-from repro.core import dispatch, snippets
+from repro.core import backends, dispatch, snippets
+from repro.core.backends.base import ElementwiseSpec
+from repro.core.backends.pallas import row_block_specs  # compat re-export
 from repro.core.cache import stable_hash
-from repro.core.templates import KernelTemplate
+from repro.core.platform import (DEFAULT_BLOCK_ROWS, LANES, BroadcastArg,
+                                 ScalarArg, VectorArg, arg_kind,
+                                 canonical_dtype, on_tpu, pad_row_operand,
+                                 parse_arguments, rows_geometry)
 
-LANES = dispatch.LANES  # VPU lane count — the innermost slicing axis on TPU.
-DEFAULT_BLOCK_ROWS = 8  # sublane count of a float32 VREG tile.
-
-
-def _canonical(dtype):
-    """Respect jax_enable_x64: float64 -> float32 when x64 is off."""
-    return jnp.dtype(jax.dtypes.canonicalize_dtype(jnp.dtype(dtype)))
-
-
-@dataclass(frozen=True)
-class VectorArg:
-    dtype: Any
-    name: str
-
-    @property
-    def jnp_dtype(self):
-        return _canonical(self.dtype)
-
-
-@dataclass(frozen=True)
-class ScalarArg:
-    dtype: Any
-    name: str
-
-    @property
-    def jnp_dtype(self):
-        return _canonical(self.dtype)
-
-
-@dataclass(frozen=True)
-class BroadcastArg:
-    """Broadcast vector argument of a *row-layout* kernel over ``(B, N)``
-    operands: ``kind='row'`` binds a length-B vector as a ``(B, 1)``
-    block (a per-row reduced value re-entering fused elementwise code),
-    ``kind='col'`` binds a length-N vector as a ``(1, N)`` block (a
-    per-feature weight shared by every row).  In snippets the name is
-    referenced bare (no ``[i]``) or as ``name[i]`` — either way jnp
-    broadcasting inside the kernel stretches it across the block."""
-
-    dtype: Any
-    name: str
-    kind: str = "row"  # 'row' -> (B, 1) | 'col' -> (1, N)
-
-    @property
-    def jnp_dtype(self):
-        return _canonical(self.dtype)
-
-
-def _arg_kind(a) -> str:
-    if isinstance(a, ScalarArg):
-        return "scalar"
-    if isinstance(a, BroadcastArg):
-        return a.kind
-    return "full"
-
-
-# Shared row-layout plumbing: ElementwiseKernel and ReductionKernel
-# drivers pad/validate operands and pick block specs identically — one
-# copy here keeps the two kernel families from diverging.
-def row_block_specs(block_rows: int, ncols: int) -> dict:
-    """BlockSpec per operand kind for a (brows, ncols) row layout."""
-    return {
-        "scalar": pl.BlockSpec((1, 1), lambda r: (0, 0)),
-        "full": pl.BlockSpec((block_rows, ncols), lambda r: (r, 0)),
-        "row": pl.BlockSpec((block_rows, 1), lambda r: (r, 0)),
-        "col": pl.BlockSpec((1, ncols), lambda r: (0, 0)),
-    }
-
-
-def pad_row_operand(kind: str, name: str, arg, dt, b: int, n: int,
-                    brows: int, ncols: int):
-    """Validate one operand against the (b, n) geometry and zero-pad it
-    to its bucketed block shape (padding must never hide a size bug)."""
-    if kind == "scalar":
-        return jnp.full((1, 1), arg, dtype=dt)
-    v = jnp.asarray(arg)
-    if kind == "full":
-        if v.size != b * n:
-            raise ValueError(f"vector argument {name!r} has {v.size} "
-                             f"elements, expected {b}x{n}")
-        return jnp.pad(v.reshape(b, n), ((0, brows - b), (0, ncols - n)))
-    if kind == "row":
-        if v.size != b:
-            raise ValueError(f"per-row argument {name!r} has {v.size} "
-                             f"elements, expected {b} rows")
-        return jnp.pad(v.reshape(b, 1), ((0, brows - b), (0, 0)))
-    if v.size != n:
-        raise ValueError(f"per-col argument {name!r} has {v.size} "
-                         f"elements, expected row length {n}")
-    return jnp.pad(v.reshape(1, n), ((0, 0), (0, ncols - n)))
-
-
-def rows_geometry(first_vec) -> tuple[int, int]:
-    """(batch rows, row length) of the leading full vector operand."""
-    shape = first_vec.shape
-    n = int(shape[-1])
-    b = max(1, int(np.prod(shape[:-1]))) if len(shape) > 1 else 1
-    return b, n
-
-
-def _parse_arguments(arguments) -> list:
-    if isinstance(arguments, str):
-        out = []
-        for name, dtype, is_vec in snippets.parse_c_arguments(arguments):
-            out.append(VectorArg(dtype, name) if is_vec else ScalarArg(dtype, name))
-        return out
-    return list(arguments)
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-_KERNEL_TMPL = KernelTemplate(
-    "eltwise",
-    '''
-def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in out_names %}{{ o }}_out_ref{{ ", " if not loop.last }}{% endfor %}):
-{% for s in scalar_names %}
-    {{ s }} = {{ s }}_ref[0, 0]
-{% endfor %}
-{% if needs_i %}
-    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
-    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
-    i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
-{% endif %}
-    _BLK = ({{ block_rows }}, {{ lanes }})
-{% for v in loaded_vectors %}
-    {{ v }} = {{ v }}_ref[...]
-{% endfor %}
-{% for line in body_lines %}
-    {{ line }}
-{% endfor %}
-{% for o in out_names %}
-    {{ o }}_out_ref[...] = {{ o }}
-{% endfor %}
-''',
-)
+# Compat aliases — these helpers lived here before the backend layer
+# (PR 4); sibling kernel families and user code import them by the old
+# names.  New code should import from `repro.core.platform`.
+_canonical = canonical_dtype
+_arg_kind = arg_kind
+_parse_arguments = parse_arguments
 
 
 class ElementwiseKernel:
@@ -192,14 +68,16 @@ class ElementwiseKernel:
 
     def __init__(self, arguments, operation: str, name: str = "eltwise",
                  preamble: str = "", block_rows: int | None = None,
-                 interpret: bool | None = None, layout: str = "flat"):
-        self.args = _parse_arguments(arguments)
+                 interpret: bool | None = None, layout: str = "flat",
+                 backend: "str | None" = None):
+        self.args = parse_arguments(arguments)
         self.operation = operation
         self.name = re.sub(r"\W", "_", name)
         self.preamble = preamble
         self.block_rows = block_rows
         self.interpret = (not on_tpu()) if interpret is None else interpret
         self.layout = layout
+        self.backend = backend  # None: resolve REPRO_BACKEND per call
 
         self.scalar_args = [a for a in self.args if isinstance(a, ScalarArg)]
         self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
@@ -223,13 +101,25 @@ class ElementwiseKernel:
         # precomputed here so __call__ does no per-call parsing.
         names = [a.name for a in self.args]
         self._first_vec_pos = names.index(self.vector_args[0].name)
-        self._arg_meta = tuple((a.name, a.jnp_dtype, _arg_kind(a))
+        self._arg_meta = tuple((a.name, a.jnp_dtype, arg_kind(a))
                                for a in self.args)
         self._out_positions = [names.index(o) for o in self.out_names]
         self._out_dtypes = [dict((v.name, v.jnp_dtype) for v in self.vector_args)[o]
                             for o in self.out_names]
-        self._src_keys: dict = {}             # (block_rows[, ncols]) -> source hash
-        self._tuned: dict = {}                # bucket (key) -> tuned block_rows
+        self.spec = ElementwiseSpec(
+            name=self.name,
+            arg_meta=self._arg_meta,
+            scalar_names=tuple(s.name for s in self.scalar_args),
+            loaded_vectors=tuple(self._loaded),
+            body_lines=tuple(self._body_lines),
+            out_names=tuple(self.out_names),
+            out_dtypes=tuple(self._out_dtypes),
+            needs_i=self._needs_i(),
+            preamble=self.preamble,
+            interpret=self.interpret,
+        )
+        self._content_key = stable_hash(self.spec.token())
+        self._tuned: dict = {}      # (backend, bucket key) -> tuned block_rows
 
     # -- codegen ----------------------------------------------------------
     def _translate(self) -> tuple[list[str], list[str]]:
@@ -265,159 +155,63 @@ class ElementwiseKernel:
         probe = snippets._SUBSCRIPT_RE.sub(lambda m: m.group(1), self.operation)
         return bool(re.search(r"\bi\b", probe))
 
-    def render(self, block_rows: int, ncols: int | None = None) -> str:
-        """Row layout renders the same template with the lane axis widened
-        to the (bucketed) row length ``ncols`` — blocks are
-        ``(block_rows, ncols)`` row groups instead of flat lane tiles."""
-        src = _KERNEL_TMPL.render(
-            name=self.name,
-            in_names=[a.name for a in self.args],
-            out_names=self.out_names,
-            scalar_names=[s.name for s in self.scalar_args],
-            loaded_vectors=self._loaded,
-            body_lines=self._body_lines,
-            needs_i=self._needs_i(),
-            block_rows=block_rows,
-            lanes=ncols if ncols is not None else LANES,
-        )
-        if self.preamble:
-            src = self.preamble + "\n" + src
-        return src
+    def render(self, block_rows: int, ncols: int | None = None,
+               backend: "str | None" = None) -> str:
+        """Source this kernel's spec renders to on ``backend`` (debug/
+        introspection surface; drivers render internally)."""
+        return backends.get_backend(backend or self.backend).render_elementwise(
+            self.spec, block_rows, ncols)
 
     # -- driver -----------------------------------------------------------
-    def _src_key(self, block_rows: int, ncols: int | None = None) -> str:
-        """Content key of the driver source for one block shape (cached)."""
-        cache_key = (block_rows, ncols)
-        key = self._src_keys.get(cache_key)
-        if key is None:
-            key = stable_hash((self.render(block_rows, ncols),
-                               [str(d) for d in self._out_dtypes],
-                               [(m[0], str(m[1]), m[2]) for m in self._arg_meta],
-                               self.interpret))
-            self._src_keys[cache_key] = key
-        return key
-
-    def _build_driver(self, bucket: int, block_rows: int):
-        """Compile one driver serving every ``n`` with padded rows <= bucket.
-
-        The pallas_call is traced once over the static ``(bucket, LANES)``
-        shape; the element count only appears at run time (padding on
-        the way in, slicing on the way out), so the driver is reused
-        across the whole bucket.
-        """
-        from repro.core.rtcg import SourceModule
-
-        grid = bucket // block_rows
-        mod = SourceModule.load(self.render(block_rows), name=self.name)
-        kernel = mod.get_function(f"{self.name}_kernel")
-
-        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
-        scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
-        in_specs = [scl if kind == "scalar" else blk
-                    for _, _, kind in self._arg_meta]
-        out_shape = [jax.ShapeDtypeStruct((bucket, LANES), d) for d in self._out_dtypes]
-
-        call = jax.jit(pl.pallas_call(
-            kernel,
-            grid=(grid,),
-            in_specs=in_specs,
-            out_specs=[blk] * len(self.out_names),
-            out_shape=out_shape,
-            interpret=self.interpret,
-        ))
-        padded_size = bucket * LANES
-        arg_meta = self._arg_meta
-
-        def driver(n, flat_args):
-            padded = []
-            for (name, dt, kind), arg in zip(arg_meta, flat_args):
-                if kind == "scalar":
-                    padded.append(jnp.full((1, 1), arg, dtype=dt))
-                else:
-                    v = jnp.ravel(jnp.asarray(arg))
-                    if v.size != n:  # padding must never hide a size bug
-                        raise ValueError(
-                            f"vector argument {name!r} has {v.size} elements, "
-                            f"expected {n} (size of the first vector argument)")
-                    if n != padded_size:
-                        v = jnp.pad(v, (0, padded_size - n))
-                    padded.append(v.reshape(bucket, LANES))
-            outs = call(*padded)
-            return [o.reshape(-1)[:n] for o in outs]
-
-        return driver
-
-    def _build_row_driver(self, brows: int, ncols: int, block_rows: int):
-        """One driver per (source, batch-bucket, row-length-bucket): blocks
-        are ``(block_rows, ncols)`` row groups, per-row broadcast args bind
-        as ``(block_rows, 1)``, per-col as ``(1, ncols)``.  Row padding is
-        sliced off on the way out, so any ``(B, N)`` whose buckets match
-        reuses this compile."""
-        from repro.core.rtcg import SourceModule
-
-        grid = brows // block_rows
-        mod = SourceModule.load(self.render(block_rows, ncols), name=self.name)
-        kernel = mod.get_function(f"{self.name}_kernel")
-
-        spec = row_block_specs(block_rows, ncols)
-        in_specs = [spec[kind] for _, _, kind in self._arg_meta]
-        out_shape = [jax.ShapeDtypeStruct((brows, ncols), d)
-                     for d in self._out_dtypes]
-        call = jax.jit(pl.pallas_call(
-            kernel,
-            grid=(grid,),
-            in_specs=in_specs,
-            out_specs=[spec["full"]] * len(self.out_names),
-            out_shape=out_shape,
-            interpret=self.interpret,
-        ))
-        arg_meta = self._arg_meta
-
-        def driver(b, n, flat_args):
-            padded = [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
-                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
-            outs = call(*padded)
-            return [o[:b, :n] for o in outs]
-
-        return driver
-
-    def _pick_block_rows(self, n: int, block_rows: int | None) -> int:
+    def _pick_block_rows(self, n: int, block_rows: int | None,
+                         be_name: str) -> int:
         if block_rows:
             return block_rows
-        tuned = self._tuned.get(dispatch.n_bucket(n))
+        tuned = self._tuned.get((be_name, dispatch.n_bucket(n)))
         return tuned or self.block_rows or dispatch.default_block_rows(n)
 
     def _rows_geometry(self, call_args) -> tuple[int, int]:
         return rows_geometry(call_args[self._first_vec_pos])
 
-    def _call_rows(self, call_args, block_rows: int | None):
+    def _call_rows(self, call_args, block_rows: int | None, be):
         b, n = self._rows_geometry(call_args)
-        br = (block_rows or self._tuned.get(dispatch.rc_bucket(b, n))
+        br = (block_rows or self._tuned.get((be.name, dispatch.rc_bucket(b, n)))
               or self.block_rows or dispatch.default_batch_block(b))
         brows = dispatch.bucket_batch(b, br)
         ncols = dispatch.bucket_cols(n)
-        key = ("eltwise_rows", self._src_key(br, ncols), brows, ncols, br)
+        key = ("eltwise_rows", be.name, self._content_key, brows, ncols,
+               br if be.block_sensitive else 0)
         drv = dispatch.get_or_build(
-            key, lambda: self._build_row_driver(brows, ncols, br))
+            key,
+            lambda: be.elementwise_rows_driver(self.spec, brows=brows,
+                                               ncols=ncols, block_rows=br),
+            backend=be.name)
         outs = drv(b, n, call_args)
         # each output takes the shape of its template argument
         outs = [o.reshape(call_args[p].shape)
                 for o, p in zip(outs, self._out_positions)]
-        dispatch.record_launch()
+        dispatch.record_launch(be.name)
         return outs[0] if len(outs) == 1 else tuple(outs)
 
-    def __call__(self, *call_args, block_rows: int | None = None):
+    def __call__(self, *call_args, block_rows: int | None = None,
+                 backend: "str | None" = None):
+        be = backends.get_backend(backend or self.backend)
         if self.layout == "rows":
-            return self._call_rows(call_args, block_rows)
+            return self._call_rows(call_args, block_rows, be)
         first_vec = call_args[self._first_vec_pos]
         shape = first_vec.shape
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(shape))
-        br = self._pick_block_rows(n, block_rows)
+        br = self._pick_block_rows(n, block_rows, be.name)
         bucket = dispatch.bucket_rows(n, br)
-        key = ("eltwise", self._src_key(br), bucket, br)
-        drv = dispatch.get_or_build(key, lambda: self._build_driver(bucket, br))
+        key = ("eltwise", be.name, self._content_key, bucket,
+               br if be.block_sensitive else 0)
+        drv = dispatch.get_or_build(
+            key,
+            lambda: be.elementwise_driver(self.spec, bucket=bucket,
+                                          block_rows=br),
+            backend=be.name)
         outs = [o.reshape(shape) for o in drv(n, call_args)]
-        dispatch.record_launch()  # after the driver: failed launches don't count
+        dispatch.record_launch(be.name)  # after the driver: failed launches don't count
         return outs[0] if len(outs) == 1 else tuple(outs)
 
     # -- tuning ------------------------------------------------------------
@@ -449,18 +243,23 @@ class ElementwiseKernel:
 
     def autotune(self, *call_args, candidates: list[dict] | None = None,
                  measure: str = "hybrid", cache=None, repeats: int = 3,
-                 warmup: int = 1, prune_keep: int | None = None):
+                 warmup: int = 1, prune_keep: int | None = None,
+                 backend: "str | None" = None):
         """Tune ``block_rows`` for the *bucket* of these arguments.
 
-        The winner is recorded per `dispatch.n_bucket` (flat layout) or
-        per `dispatch.rc_bucket` pair (row layout), so it applies to
-        every later call whose size lands in the same bucket, and the
-        tuning-cache key uses the matching bucketed signature so results
-        persist across exact-shape churn too.
+        The winner is recorded per ``(backend, dispatch.n_bucket)``
+        (flat layout) or per ``(backend, dispatch.rc_bucket)`` pair (row
+        layout), so it applies to every later call whose size lands in
+        the same bucket *on the same backend*, and the tuning-cache key
+        uses the matching bucketed signature plus the backend name so
+        results persist across exact-shape churn without leaking across
+        backends.
         """
         from repro.core.autotune import batch_block_candidates, tune_per_bucket
 
-        builder = lambda block_rows: (lambda *a: self(*a, block_rows=block_rows))
+        be = backends.get_backend(backend or self.backend)
+        builder = lambda block_rows: (
+            lambda *a: self(*a, block_rows=block_rows, backend=be))
         if self.layout == "rows":
             b, n = self._rows_geometry(call_args)
             return tune_per_bucket(
@@ -469,7 +268,7 @@ class ElementwiseKernel:
                 args=call_args, n=n, tuned=self._tuned, param="block_rows",
                 measure=measure, cache=cache, repeats=repeats, warmup=warmup,
                 prune_keep=prune_keep, bucket_key=dispatch.rc_bucket(b, n),
-                signature_fn=dispatch.bucketed_signature_2d)
+                signature_fn=dispatch.bucketed_signature_2d, backend=be.name)
         first = call_args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
         return tune_per_bucket(
@@ -479,7 +278,7 @@ class ElementwiseKernel:
             candidates=candidates or self.candidate_configs(n),
             args=call_args, n=n, tuned=self._tuned, param="block_rows",
             measure=measure, cache=cache, repeats=repeats, warmup=warmup,
-            prune_keep=prune_keep)
+            prune_keep=prune_keep, backend=be.name)
 
     # candidate block_rows values for the autotuner (shared pool)
     @staticmethod

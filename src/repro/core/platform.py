@@ -1,0 +1,143 @@
+"""Shared platform/layout vocabulary for the kernel families and backends.
+
+Before the backend abstraction (PR 4) these helpers lived in
+`elementwise.py` and were imported *sideways* by `reduction.py` and
+`scan.py` — one kernel family reaching into a sibling for layout
+constants.  They are not elementwise-specific: the lane width, dtype
+canonicalization, operand classification and padding rules are the
+shared contract between the *snippet layer* (kernel families describing
+what to compute) and the *backend layer* (`repro.core.backends`,
+deciding how to compile and launch it).  This module is that contract's
+home; it depends only on jax/numpy and `snippets` — never on a kernel
+family or a backend.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snippets
+
+LANES = 128  # VPU lane count — the innermost slicing axis on TPU.
+DEFAULT_BLOCK_ROWS = 8  # sublane count of a float32 VREG tile.
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def canonical_dtype(dtype):
+    """Respect jax_enable_x64: float64 -> float32 when x64 is off."""
+    return jnp.dtype(jax.dtypes.canonicalize_dtype(jnp.dtype(dtype)))
+
+
+# ------------------------------------------------------- argument kinds
+@dataclass(frozen=True)
+class VectorArg:
+    dtype: Any
+    name: str
+
+    @property
+    def jnp_dtype(self):
+        return canonical_dtype(self.dtype)
+
+
+@dataclass(frozen=True)
+class ScalarArg:
+    dtype: Any
+    name: str
+
+    @property
+    def jnp_dtype(self):
+        return canonical_dtype(self.dtype)
+
+
+@dataclass(frozen=True)
+class BroadcastArg:
+    """Broadcast vector argument of a *row-layout* kernel over ``(B, N)``
+    operands: ``kind='row'`` binds a length-B vector as a ``(B, 1)``
+    block (a per-row reduced value re-entering fused elementwise code),
+    ``kind='col'`` binds a length-N vector as a ``(1, N)`` block (a
+    per-feature weight shared by every row).  In snippets the name is
+    referenced bare (no ``[i]``) or as ``name[i]`` — either way jnp
+    broadcasting inside the kernel stretches it across the block."""
+
+    dtype: Any
+    name: str
+    kind: str = "row"  # 'row' -> (B, 1) | 'col' -> (1, N)
+
+    @property
+    def jnp_dtype(self):
+        return canonical_dtype(self.dtype)
+
+
+def arg_kind(a) -> str:
+    if isinstance(a, ScalarArg):
+        return "scalar"
+    if isinstance(a, BroadcastArg):
+        return a.kind
+    return "full"
+
+
+def parse_arguments(arguments) -> list:
+    if isinstance(arguments, str):
+        out = []
+        for name, dtype, is_vec in snippets.parse_c_arguments(arguments):
+            out.append(VectorArg(dtype, name) if is_vec else ScalarArg(dtype, name))
+        return out
+    return list(arguments)
+
+
+# ------------------------------------------------ geometry + padding
+def rows_geometry(first_vec) -> tuple[int, int]:
+    """(batch rows, row length) of the leading full vector operand."""
+    shape = first_vec.shape
+    n = int(shape[-1])
+    b = max(1, int(np.prod(shape[:-1]))) if len(shape) > 1 else 1
+    return b, n
+
+
+def pad_flat_operand(kind: str, name: str, arg, dt, n: int,
+                     bucket: int, lanes: int = LANES):
+    """Validate one flat-layout operand against the element count ``n``
+    and zero-pad it to its bucketed ``(bucket, lanes)`` block shape
+    (padding must never hide a size bug)."""
+    if kind == "scalar":
+        return jnp.full((1, 1), arg, dtype=dt)
+    v = jnp.ravel(jnp.asarray(arg))
+    if v.size != n:
+        raise ValueError(
+            f"vector argument {name!r} has {v.size} elements, "
+            f"expected {n} (size of the first vector argument)")
+    padded_size = bucket * lanes
+    if n != padded_size:
+        v = jnp.pad(v, (0, padded_size - n))
+    return v.reshape(bucket, lanes)
+
+
+def pad_row_operand(kind: str, name: str, arg, dt, b: int, n: int,
+                    brows: int, ncols: int):
+    """Validate one operand against the (b, n) geometry and zero-pad it
+    to its bucketed block shape (padding must never hide a size bug)."""
+    if kind == "scalar":
+        return jnp.full((1, 1), arg, dtype=dt)
+    v = jnp.asarray(arg)
+    if kind == "full":
+        if v.size != b * n:
+            raise ValueError(f"vector argument {name!r} has {v.size} "
+                             f"elements, expected {b}x{n}")
+        return jnp.pad(v.reshape(b, n), ((0, brows - b), (0, ncols - n)))
+    if kind == "row":
+        if v.size != b:
+            raise ValueError(f"per-row argument {name!r} has {v.size} "
+                             f"elements, expected {b} rows")
+        return jnp.pad(v.reshape(b, 1), ((0, brows - b), (0, 0)))
+    if v.size != n:
+        raise ValueError(f"per-col argument {name!r} has {v.size} "
+                         f"elements, expected row length {n}")
+    return jnp.pad(v.reshape(1, n), ((0, 0), (0, ncols - n)))

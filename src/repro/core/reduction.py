@@ -1,16 +1,22 @@
-"""ReductionKernel — generated map+reduce Pallas kernels (paper §5.2).
+"""ReductionKernel — generated map+reduce kernels (paper §5.2).
 
 PyCUDA's ReductionKernel takes a ``map_expr`` applied per element and a
-``reduce_expr`` combining pairs, plus a neutral element.  The CUDA
-realization is a two-stage tree reduction over thread blocks; the TPU
-realization exploits that grid iterations on a TensorCore execute
-*sequentially*, so a single kernel can accumulate block partials into an
-SMEM-resident (1,1) output across grid steps — the canonical Pallas
-reduction idiom.  Padding lanes are masked with the neutral element
-against the *runtime* element count ``_n`` (passed as a (1,1) scalar,
-not baked into the source), so one compiled driver serves a whole
-power-of-two shape bucket — see `repro.core.dispatch` for the
-bucketing math and the shared driver LRU.
+``reduce_expr`` combining pairs, plus a neutral element.  The family
+translates those snippets into a `ReductionSpec` and hands it, with a
+bucketed geometry, to an execution `Backend` (`repro.core.backends`):
+
+  * ``pallas``: grid iterations on a TensorCore execute *sequentially*,
+    so a single kernel accumulates block partials into an SMEM-resident
+    (1,1) output across grid steps — the canonical Pallas reduction
+    idiom;
+  * ``xla``: the same masked map expressions fold over the whole
+    bucketed operand under ``jax.jit`` — no grid, no cross-step combine.
+
+Either way padding lanes are masked with the neutral element against
+the *runtime* element count ``_n`` (passed as a (1,1) scalar, not baked
+into the source), so one compiled driver serves a whole power-of-two
+shape bucket — see `repro.core.dispatch` for the bucketing math and the
+shared (backend-keyed) driver LRU.
 
     dot = ReductionKernel(np.float32, neutral="0",
                           reduce_expr="a+b", map_expr="x[i]*y[i]",
@@ -29,37 +35,38 @@ sibling reductions (min/max/sum quantization stats) cost ONE launch:
 
 Per-bucket autotuning: ``autotune()`` wires the shared `Autotuner`
 (``signature_fn=dispatch.bucketed_signature``) to ``block_rows``, and
-the winner is recorded per `dispatch.n_bucket` so every later call in
-the same shape bucket uses it automatically.
+the winner is recorded per ``(backend, dispatch.n_bucket)`` so every
+later call in the same shape bucket on the same backend uses it
+automatically.
 
 Row-segmented form (axis-aware fusion, PR 3): ``axis=-1`` reduces each
-row of a ``(B, N)`` operand to its own accumulator in ONE launch — the
-grid runs over *row blocks*, every row lives entirely inside its block,
-and the runtime row length ``n`` masks padding columns with the neutral
-element.  Outputs are length-B vectors.  Because a row is complete
-within the block, a later accumulator's map expression may reference an
-earlier one as ``_acc<k>`` (a ``(block, 1)`` per-row value) — that is
-how stable softmax computes the row max *and* the shifted-exp sum in a
-single launch.  Arguments may include `BroadcastArg`s: per-row values
-from earlier launches bind as ``(B, 1)``, per-col weights as ``(1, N)``.
-``prelude`` lists extra C-dialect assignment statements (hoisted common
-subexpressions) evaluated once per block before the map expressions.
+row of a ``(B, N)`` operand to its own accumulator in ONE launch —
+every row lives entirely inside its block, and the runtime row length
+``n`` masks padding columns with the neutral element.  Outputs are
+length-B vectors.  Because a row is complete within the block, a later
+accumulator's map expression may reference an earlier one as
+``_acc<k>`` (a per-row value) — that is how stable softmax computes the
+row max *and* the shifted-exp sum in a single launch.  Arguments may
+include `BroadcastArg`s: per-row values from earlier launches bind as
+``(B, 1)``, per-col weights as ``(1, N)``.  ``prelude`` lists extra
+C-dialect assignment statements (hoisted common subexpressions)
+evaluated once per block before the map expressions.
 """
 
 from __future__ import annotations
 
 import re
-import jax
+from typing import Any
+
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
 
-from repro.core import dispatch, snippets
-from repro.core.elementwise import (LANES, BroadcastArg, ScalarArg, VectorArg,
-                                    _arg_kind, _canonical, _parse_arguments,
-                                    on_tpu, pad_row_operand, row_block_specs,
-                                    rows_geometry)
-from repro.core.templates import KernelTemplate
+from repro.core import backends, dispatch, snippets
+from repro.core.backends.base import ReductionSpec
+from repro.core.cache import stable_hash
+from repro.core.platform import (LANES, BroadcastArg, ScalarArg, VectorArg,
+                                 arg_kind, canonical_dtype, on_tpu,
+                                 parse_arguments, rows_geometry)
 
 # Recognized whole-block reducers (fast path); anything else raises.
 _BLOCK_REDUCERS = {
@@ -72,69 +79,13 @@ _BLOCK_REDUCERS = {
     "fminf(a,b)": ("jnp.min", "jnp.minimum"),
 }
 
-_KERNEL_TMPL = KernelTemplate(
-    "reduction",
-    '''
-def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
-    _n = _n_ref[0, 0]
-{% for s in scalar_names %}
-    {{ s }} = {{ s }}_ref[0, 0]
-{% endfor %}
-    _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
-    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
-    i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
-{% for v in loaded_vectors %}
-    {{ v }} = {{ v }}_ref[...]
-{% endfor %}
-{% for line in prelude_lines %}
-    {{ line }}
-{% endfor %}
-{% for o in outs %}
-    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
-    _mapped{{ loop.index0 }} = jnp.where(i < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
-    _partial{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }})
-    _prev{{ loop.index0 }} = jnp.where(pl.program_id(0) == 0,
-                                       jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}),
-                                       o{{ loop.index0 }}_ref[0, 0])
-    o{{ loop.index0 }}_ref[0, 0] = {{ o.combine }}
-{% endfor %}
-''',
-)
-
-# Row-segmented form: the grid runs over blocks of *rows* of a (B, N)
-# operand; each row reduces inside its block (no cross-step combine), the
-# runtime row length masks padding columns, and later accumulators may
-# reference earlier ones (`_acc<k>`, a per-row (block, 1) value).
-_ROW_TMPL = KernelTemplate(
-    "row_reduction",
-    '''
-def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
-    _n = _n_ref[0, 0]
-{% for s in scalar_names %}
-    {{ s }} = {{ s }}_ref[0, 0]
-{% endfor %}
-    _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ ncols }}), 1)
-{% for v in loaded_vectors %}
-    {{ v }} = {{ v }}_ref[...]
-{% endfor %}
-{% for line in prelude_lines %}
-    {{ line }}
-{% endfor %}
-{% for o in outs %}
-    _mapped{{ loop.index0 }} = jnp.asarray({{ o.map_expr }}).astype(jnp.{{ o.dtype }})
-    _mapped{{ loop.index0 }} = jnp.where(_col < _n, _mapped{{ loop.index0 }}, jnp.asarray({{ o.neutral }}, jnp.{{ o.dtype }}))
-    _acc{{ loop.index0 }} = {{ o.block_reduce }}(_mapped{{ loop.index0 }}, axis=1, keepdims=True)
-    o{{ loop.index0 }}_ref[...] = _acc{{ loop.index0 }}
-{% endfor %}
-''',
-)
-
 
 class ReductionKernel:
     def __init__(self, dtype_out, neutral, reduce_expr, map_expr,
                  arguments, name: str = "reduce", preamble: str = "",
                  block_rows: int | None = None, interpret: bool | None = None,
-                 axis: int | None = None, prelude=None):
+                 axis: int | None = None, prelude=None,
+                 backend: "str | None" = None):
         # Normalize the single-output and multi-accumulator forms to lists;
         # `self.multi` records which way results are handed back.
         self.multi = isinstance(map_expr, (list, tuple))
@@ -149,7 +100,7 @@ class ReductionKernel:
         if not (len(neutrals) == len(reduce_exprs) == len(dtypes_out) == k):
             raise ValueError("dtype_out/neutral/reduce_expr/map_expr lengths differ")
 
-        self.dtypes_out = [_canonical(d) for d in dtypes_out]
+        self.dtypes_out = [canonical_dtype(d) for d in dtypes_out]
         self.dtype_out = self.dtypes_out[0]   # single-output compat alias
         self.neutrals = [snippets.translate_expression(nt) for nt in neutrals]
         self.neutral = self.neutrals[0]
@@ -157,11 +108,12 @@ class ReductionKernel:
         self.reduce_expr = reduce_exprs[0]
         self.map_exprs = map_exprs
         self.map_expr = map_exprs[0]
-        self.args = _parse_arguments(arguments)
+        self.args = parse_arguments(arguments)
         self.name = re.sub(r"\W", "_", name)
         self.preamble = preamble
         self.block_rows = block_rows
         self.interpret = (not on_tpu()) if interpret is None else interpret
+        self.backend = backend  # None: resolve REPRO_BACKEND per call
         if axis not in (None, -1):
             raise NotImplementedError("only axis=None (full) or axis=-1 "
                                       "(row-segmented) reductions")
@@ -187,12 +139,29 @@ class ReductionKernel:
             raise ValueError("reduction needs at least one vector argument")
         names = [a.name for a in self.args]
         self._first_vec_pos = names.index(self.vector_args[0].name)
-        self._arg_meta = tuple((a.name, a.jnp_dtype, _arg_kind(a))
+        self._arg_meta = tuple((a.name, a.jnp_dtype, arg_kind(a))
                                for a in self.args)
         self._prelude_lines = [snippets.translate_assignment(s)
                                for s in self.prelude]
-        self._src_keys: dict = {}
-        self._tuned: dict = {}                # bucket (key) -> tuned block_rows
+        outs = self._outs()
+        exprs = [o["map_expr"] for o in outs] + self._prelude_lines
+        loaded = sorted({v.name for v in (self.vector_args + self.bcast_args)
+                         if any(re.search(rf"\b{re.escape(v.name)}\b", e)
+                                for e in exprs)})
+        self.spec = ReductionSpec(
+            name=self.name,
+            arg_meta=self._arg_meta,
+            scalar_names=tuple(s.name for s in self.scalar_args),
+            loaded_vectors=tuple(loaded),
+            prelude_lines=tuple(self._prelude_lines),
+            outs=tuple(outs),
+            multi=self.multi,
+            axis=self.axis,
+            preamble=self.preamble,
+            interpret=self.interpret,
+        )
+        self._content_key = stable_hash(self.spec.token())
+        self._tuned: dict = {}      # (backend, bucket key) -> tuned block_rows
 
     def _outs(self) -> list[dict]:
         outs = []
@@ -209,154 +178,58 @@ class ReductionKernel:
             })
         return outs
 
-    def render(self, block_rows: int, ncols: int | None = None) -> str:
-        outs = self._outs()
-        exprs = [o["map_expr"] for o in outs] + self._prelude_lines
-        read = sorted({v.name for v in (self.vector_args + self.bcast_args)
-                       if any(re.search(rf"\b{re.escape(v.name)}\b", e)
-                              for e in exprs)})
-        tmpl_kwargs = dict(
-            name=self.name,
-            in_names=[a.name for a in self.args],
-            scalar_names=[s.name for s in self.scalar_args],
-            loaded_vectors=read,
-            prelude_lines=self._prelude_lines,
-            outs=outs,
-            block_rows=block_rows,
-        )
-        if self.axis is None:
-            src = _KERNEL_TMPL.render(lanes=LANES, **tmpl_kwargs)
-        else:
-            src = _ROW_TMPL.render(ncols=ncols, **tmpl_kwargs)
-        return (self.preamble + "\n" + src) if self.preamble else src
+    def render(self, block_rows: int, ncols: int | None = None,
+               backend: "str | None" = None) -> str:
+        """Source this kernel's spec renders to on ``backend``."""
+        return backends.get_backend(backend or self.backend).render_reduction(
+            self.spec, block_rows, ncols)
 
-    def _src_key(self, block_rows: int, ncols: int | None = None) -> str:
-        cache_key = (block_rows, ncols)
-        key = self._src_keys.get(cache_key)
-        if key is None:
-            from repro.core.cache import stable_hash
-
-            key = stable_hash((self.render(block_rows, ncols),
-                               [(m[0], str(m[1]), m[2]) for m in self._arg_meta],
-                               [str(d) for d in self.dtypes_out], self.interpret))
-            self._src_keys[cache_key] = key
-        return key
-
-    def _build_driver(self, bucket: int, block_rows: int):
-        """One driver per (source, bucket): the element count is a runtime
-        scalar feeding the in-kernel neutral mask, so any ``n`` whose
-        padded rows fit the bucket reuses this compile."""
-        from repro.core.rtcg import SourceModule
-
-        grid = bucket // block_rows
-        mod = SourceModule.load(self.render(block_rows), name=self.name)
-        kernel = mod.get_function(f"{self.name}_kernel")
-
-        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
-        scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
-        in_specs = [scl] + [scl if kind == "scalar" else blk
-                            for _, _, kind in self._arg_meta]
-        call = jax.jit(pl.pallas_call(
-            kernel,
-            grid=(grid,),
-            in_specs=in_specs,
-            out_specs=[pl.BlockSpec((1, 1), lambda r: (0, 0))] * len(self.dtypes_out),
-            out_shape=[jax.ShapeDtypeStruct((1, 1), d) for d in self.dtypes_out],
-            interpret=self.interpret,
-        ))
-        padded_size = bucket * LANES
-        arg_meta = self._arg_meta
-        multi = self.multi
-
-        def driver(n, flat_args):
-            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            for (name, dt, kind), arg in zip(arg_meta, flat_args):
-                if kind == "scalar":
-                    padded.append(jnp.full((1, 1), arg, dtype=dt))
-                else:
-                    v = jnp.ravel(jnp.asarray(arg))
-                    if v.size != n:  # padding must never hide a size bug
-                        raise ValueError(
-                            f"vector argument {name!r} has {v.size} elements, "
-                            f"expected {n} (size of the first vector argument)")
-                    if n != padded_size:
-                        v = jnp.pad(v, (0, padded_size - n))
-                    padded.append(v.reshape(bucket, LANES))
-            outs = call(*padded)
-            if multi:
-                return tuple(o[0, 0] for o in outs)
-            return outs[0][0, 0]
-
-        return driver
-
-    def _build_row_driver(self, brows: int, ncols: int, block_rows: int):
-        """Row-segmented driver: one accumulator per row, single launch.
-        The runtime row length ``n`` masks padding columns; padded *rows*
-        compute on zeros and are sliced off the (B,)-shaped outputs."""
-        from repro.core.rtcg import SourceModule
-
-        grid = brows // block_rows
-        mod = SourceModule.load(self.render(block_rows, ncols), name=self.name)
-        kernel = mod.get_function(f"{self.name}_kernel")
-
-        spec = row_block_specs(block_rows, ncols)
-        in_specs = [spec["scalar"]] + [spec[kind] for _, _, kind in self._arg_meta]
-        call = jax.jit(pl.pallas_call(
-            kernel,
-            grid=(grid,),
-            in_specs=in_specs,
-            out_specs=[spec["row"]] * len(self.dtypes_out),
-            out_shape=[jax.ShapeDtypeStruct((brows, 1), d)
-                       for d in self.dtypes_out],
-            interpret=self.interpret,
-        ))
-        arg_meta = self._arg_meta
-        multi = self.multi
-
-        def driver(b, n, flat_args):
-            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            padded += [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
-                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
-            outs = call(*padded)
-            if multi:
-                return tuple(o[:b, 0] for o in outs)
-            return outs[0][:b, 0]
-
-        return driver
-
-    def _pick_block_rows(self, n: int, block_rows: int | None) -> int:
+    # -- driver -----------------------------------------------------------
+    def _pick_block_rows(self, n: int, block_rows: int | None,
+                         be_name: str) -> int:
         if block_rows:
             return block_rows
-        tuned = self._tuned.get(dispatch.n_bucket(n))
+        tuned = self._tuned.get((be_name, dispatch.n_bucket(n)))
         return tuned or self.block_rows or dispatch.default_block_rows(n)
 
     def _rows_geometry(self, call_args) -> tuple[int, int]:
         return rows_geometry(call_args[self._first_vec_pos])
 
-    def _call_rows(self, call_args, block_rows: int | None):
+    def _call_rows(self, call_args, block_rows: int | None, be):
         b, n = self._rows_geometry(call_args)
-        br = (block_rows or self._tuned.get(dispatch.rc_bucket(b, n))
+        br = (block_rows or self._tuned.get((be.name, dispatch.rc_bucket(b, n)))
               or self.block_rows or dispatch.default_batch_block(b))
         brows = dispatch.bucket_batch(b, br)
         ncols = dispatch.bucket_cols(n)
-        key = ("reduce_rows", self._src_key(br, ncols), brows, ncols, br)
+        key = ("reduce_rows", be.name, self._content_key, brows, ncols,
+               br if be.block_sensitive else 0)
         drv = dispatch.get_or_build(
-            key, lambda: self._build_row_driver(brows, ncols, br))
+            key,
+            lambda: be.reduction_rows_driver(self.spec, brows=brows,
+                                             ncols=ncols, block_rows=br),
+            backend=be.name)
         out = drv(b, n, call_args)
-        dispatch.record_launch()
+        dispatch.record_launch(be.name)
         return out
 
-    def __call__(self, *call_args, block_rows: int | None = None):
+    def __call__(self, *call_args, block_rows: int | None = None,
+                 backend: "str | None" = None):
+        be = backends.get_backend(backend or self.backend)
         if self.axis is not None:
-            return self._call_rows(call_args, block_rows)
+            return self._call_rows(call_args, block_rows, be)
         first_vec = call_args[self._first_vec_pos]
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(first_vec.shape))
-        br = self._pick_block_rows(n, block_rows)
+        br = self._pick_block_rows(n, block_rows, be.name)
         bucket = dispatch.bucket_rows(n, br)
-        key = ("reduce", self._src_key(br), bucket, br)
-        drv = dispatch.get_or_build(key, lambda: self._build_driver(bucket, br))
+        key = ("reduce", be.name, self._content_key, bucket,
+               br if be.block_sensitive else 0)
+        drv = dispatch.get_or_build(
+            key,
+            lambda: be.reduction_driver(self.spec, bucket=bucket,
+                                        block_rows=br),
+            backend=be.name)
         out = drv(n, call_args)
-        dispatch.record_launch()  # after the driver: failed launches don't count
+        dispatch.record_launch(be.name)  # after the driver: failed launches don't count
         return out
 
     # -- tuning ------------------------------------------------------------
@@ -388,18 +261,21 @@ class ReductionKernel:
 
     def autotune(self, *call_args, candidates: list[dict] | None = None,
                  measure: str = "hybrid", cache=None, repeats: int = 3,
-                 warmup: int = 1, prune_keep: int | None = None):
+                 warmup: int = 1, prune_keep: int | None = None,
+                 backend: "str | None" = None):
         """Tune ``block_rows`` for the *bucket* of these arguments.
 
         Same contract as `ElementwiseKernel.autotune`: the winner is
-        recorded per `dispatch.n_bucket` (flat) or per
-        `dispatch.rc_bucket` pair (row-segmented), so one tuning run
-        covers every shape in the bucket.
+        recorded per ``(backend, dispatch.n_bucket)`` (flat) or
+        ``(backend, dispatch.rc_bucket)`` pair (row-segmented), so one
+        tuning run covers every shape in the bucket on that backend.
         """
         from repro.core.autotune import (batch_block_candidates,
                                          block_rows_candidates, tune_per_bucket)
 
-        builder = lambda block_rows: (lambda *a: self(*a, block_rows=block_rows))
+        be = backends.get_backend(backend or self.backend)
+        builder = lambda block_rows: (
+            lambda *a: self(*a, block_rows=block_rows, backend=be))
         if self.axis is not None:
             b, n = self._rows_geometry(call_args)
             return tune_per_bucket(
@@ -408,7 +284,7 @@ class ReductionKernel:
                 args=call_args, n=n, tuned=self._tuned, param="block_rows",
                 measure=measure, cache=cache, repeats=repeats, warmup=warmup,
                 prune_keep=prune_keep, bucket_key=dispatch.rc_bucket(b, n),
-                signature_fn=dispatch.bucketed_signature_2d)
+                signature_fn=dispatch.bucketed_signature_2d, backend=be.name)
         first = call_args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))
         return tune_per_bucket(
@@ -418,4 +294,4 @@ class ReductionKernel:
             candidates=candidates or block_rows_candidates(n),
             args=call_args, n=n, tuned=self._tuned, param="block_rows",
             measure=measure, cache=cache, repeats=repeats, warmup=warmup,
-            prune_keep=prune_keep)
+            prune_keep=prune_keep, backend=be.name)

@@ -1,37 +1,40 @@
 """ScanKernel — generated prefix-scan kernels (PyCUDA's pycuda.scan).
 
 PyCUDA ships Inclusive/ExclusiveScanKernel alongside ElementwiseKernel
-and ReductionKernel; the TPU realization is the classic two-pass blocked
-scan, both passes generated from templates:
+and ReductionKernel; the combine operator comes from a C-like snippet
+("a+b", "fmaxf(a,b)").  The family describes the scan (`ScanSpec`:
+combine op, neutral, dtype, exclusivity) and hands it to an execution
+`Backend` (`repro.core.backends`):
 
-  pass 1: per-block inclusive scan (lanes-major layout) + block total
-  host  : tiny exclusive scan over the block totals
-  pass 2: add each block's carry offset
+  * ``pallas``: the classic two-pass blocked scan, both passes generated
+    from templates — per-block inclusive scan + block totals, a tiny
+    host exclusive combine over the totals, then a carry-offset pass;
+  * ``xla``: one associative cumulative op over the whole padded stream.
 
-Like ReductionKernel, the combine operator comes from a C-like snippet
-("a+b", "fmaxf(a,b)").  The generated source is element-count free;
-drivers are compiled per power-of-two *grid bucket* (`repro.core.dispatch`)
-with neutral-element padding on the way in and slicing on the way out,
-and shared across instances through the dispatch LRU.
+The generated source is element-count free; drivers are compiled per
+power-of-two *grid bucket* (`repro.core.dispatch`) with neutral-element
+padding on the way in and slicing on the way out, and shared across
+instances through the backend-keyed dispatch LRU.
 
 The block length ``block_n`` is the scan's tunable (the analogue of
 ``block_rows`` elsewhere): ``autotune()`` wires the shared `Autotuner`
 with ``signature_fn=dispatch.bucketed_signature`` and records the
-winner per `dispatch.n_bucket`, so later calls in the same shape bucket
-pick it up automatically.
+winner per ``(backend, dispatch.n_bucket)``, so later calls in the same
+shape bucket pick it up automatically.
 """
 
 from __future__ import annotations
 
 import re
-import jax
+from typing import Any
+
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import pallas as pl
 
-from repro.core import dispatch, snippets
-from repro.core.elementwise import DEFAULT_BLOCK_ROWS, LANES, _canonical, on_tpu
-from repro.core.templates import KernelTemplate
+from repro.core import backends, dispatch
+from repro.core.backends.base import ScanSpec
+from repro.core.cache import stable_hash
+from repro.core.platform import canonical_dtype, on_tpu
 
 _SCAN_OPS = {
     "a+b": ("jnp.cumsum", "+", "0"),
@@ -43,38 +46,6 @@ _SCAN_OPS = {
     "a*b": ("jnp.cumprod", "*", "1"),
 }
 
-_PASS1_TMPL = KernelTemplate(
-    "scan1",
-    '''
-def {{ name }}(x_ref, y_ref, tot_ref):
-    # block laid out (rows, lanes) in ROW-MAJOR flat order: scan rows
-    # within each lane column is wrong — so the driver hands us a
-    # (1, block_n) row: a straight 1-axis scan.
-    x = x_ref[...].astype(jnp.{{ dtype }})
-    s = {{ cumop }}(x, axis=1)
-    y_ref[...] = s
-    tot_ref[0, 0] = s[0, -1]
-''',
-)
-
-_PASS2_TMPL = KernelTemplate(
-    "scan2",
-    '''
-def {{ name }}(y_ref, off_ref, o_ref):
-    off = off_ref[0, 0]
-{% if exclusive %}
-    # exclusive: shift right by one within the global stream; the driver
-    # passes the per-block carry already exclusive of this block.
-    y = y_ref[...]
-    prev = jnp.concatenate([jnp.full((1, 1), off, y.dtype),
-                            ({{ binop_expr }})[:, :-1]], axis=1)
-    o_ref[...] = prev
-{% else %}
-    o_ref[...] = {{ combine }}
-{% endif %}
-''',
-)
-
 
 class ScanKernel:
     """Generated blocked prefix scan.
@@ -85,120 +56,53 @@ class ScanKernel:
 
     def __init__(self, dtype, scan_expr: str, neutral: str | None = None,
                  name: str = "scan", exclusive: bool = False,
-                 block_n: int = 4096, interpret: bool | None = None):
+                 block_n: int = 4096, interpret: bool | None = None,
+                 backend: "str | None" = None):
         key = re.sub(r"\s", "", scan_expr)
         if key not in _SCAN_OPS:
             raise NotImplementedError(
                 f"scan_expr {scan_expr!r}; supported: {sorted(_SCAN_OPS)}")
         self.cumop, self.binop, default_neutral = _SCAN_OPS[key]
         self.neutral = neutral if neutral is not None else default_neutral
-        self.dtype = _canonical(dtype)
+        self.dtype = canonical_dtype(dtype)
         self.name = re.sub(r"\W", "_", name)
         self.exclusive = exclusive
         self.block_n = block_n
         self.interpret = (not on_tpu()) if interpret is None else interpret
-        self._src_key_cache: str | None = None
-        self._tuned: dict[int, int] = {}      # n_bucket -> tuned block_n
+        self.backend = backend  # None: resolve REPRO_BACKEND per call
+        self.spec = ScanSpec(
+            name=self.name,
+            dtype=str(self.dtype),
+            neutral=self.neutral,
+            cumop=self.cumop,
+            binop=self.binop,
+            exclusive=self.exclusive,
+            interpret=self.interpret,
+        )
+        self._content_key = stable_hash(self.spec.token())
+        self._tuned: dict = {}      # (backend, n_bucket) -> tuned block_n
 
-    def _binop_apply(self, a: str, b: str) -> str:
-        if self.binop in ("+", "*"):
-            return f"({a} {self.binop} {b})"
-        return f"{self.binop}({a}, {b})"
-
-    def _render_passes(self) -> tuple[str, str]:
-        src1 = _PASS1_TMPL.render(name=f"{self.name}_p1", dtype=str(self.dtype),
-                                  cumop=self.cumop)
-        src2 = _PASS2_TMPL.render(
-            name=f"{self.name}_p2", exclusive=self.exclusive,
-            binop_expr=self._binop_apply("y", "off"),
-            combine=self._binop_apply("y_ref[...]", "off"))
-        return src1, src2
-
-    def _src_key(self) -> str:
-        # Source is block_n-independent (the block length only enters the
-        # BlockSpecs); the dispatch key carries (grid, block_n) separately.
-        if self._src_key_cache is None:
-            from repro.core.cache import stable_hash
-
-            self._src_key_cache = stable_hash((*self._render_passes(),
-                                               str(self.dtype),
-                                               self.neutral, self.interpret))
-        return self._src_key_cache
-
-    def _build_driver(self, grid: int, bn: int):
-        """One driver per (source, grid bucket, block_n): padding with the
-        neutral element makes the tail blocks no-ops, so any ``n`` needing
-        at most ``grid`` blocks reuses this compile."""
-        from repro.core.rtcg import SourceModule
-
-        pn = grid * bn
-        dt = self.dtype
-
-        src1, src2 = self._render_passes()
-        k1 = SourceModule.load(src1).get_function(f"{self.name}_p1")
-        k2 = SourceModule.load(src2).get_function(f"{self.name}_p2")
-
-        row = pl.BlockSpec((1, bn), lambda i: (i, 0))
-        one = pl.BlockSpec((1, 1), lambda i: (i, 0))
-        p1 = pl.pallas_call(
-            k1, grid=(grid,), in_specs=[row], out_specs=[row, one],
-            out_shape=[jax.ShapeDtypeStruct((grid, bn), dt),
-                       jax.ShapeDtypeStruct((grid, 1), dt)],
-            interpret=self.interpret)
-        p2 = pl.pallas_call(
-            k2, grid=(grid,), in_specs=[row, one], out_specs=row,
-            out_shape=jax.ShapeDtypeStruct((grid, bn), dt),
-            interpret=self.interpret)
-
-        neutral = self.neutral
-        binop = self.binop
-
-        @jax.jit
-        def core(xp):
-            partial, totals = p1(xp)
-            # tiny exclusive combine over block totals
-            if binop == "+":
-                carry = jnp.cumsum(totals[:, 0]) - totals[:, 0]
-                carry = carry + jnp.asarray(neutral, dt)
-            elif binop == "*":
-                # exclusive product via shift, NOT cumprod/totals division
-                # (a zero block total would make that 0/0 = NaN)
-                shifted = jnp.concatenate(
-                    [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
-                carry = jnp.cumprod(shifted)
-            else:
-                fn = jax.lax.cummax if "max" in binop else jax.lax.cummin
-                shifted = jnp.concatenate(
-                    [jnp.full((1,), np.asarray(neutral, dt)), totals[:-1, 0]])
-                carry = fn(shifted)
-            return p2(partial, carry[:, None])
-
-        def driver(n, x):
-            xf = jnp.ravel(jnp.asarray(x)).astype(dt)
-            if int(xf.size) != pn:
-                xp = jnp.pad(xf, (0, pn - int(xf.size)),
-                             constant_values=np.asarray(neutral, dt))
-            else:
-                xp = xf
-            out = core(xp.reshape(grid, bn))
-            return out.reshape(-1)[:n]
-
-        return driver
-
-    def _pick_block_n(self, n: int, block_n: int | None) -> int:
+    def _pick_block_n(self, n: int, block_n: int | None, be_name: str) -> int:
         if block_n:
             return block_n
-        tuned = self._tuned.get(dispatch.n_bucket(n))
+        tuned = self._tuned.get((be_name, dispatch.n_bucket(n)))
         return tuned or self.block_n
 
-    def __call__(self, x, block_n: int | None = None):
+    def __call__(self, x, block_n: int | None = None,
+                 backend: "str | None" = None):
+        be = backends.get_backend(backend or self.backend)
         n = int(getattr(x, "size", 0)) or int(np.prod(x.shape))
-        bn = self._pick_block_n(n, block_n)
+        bn = self._pick_block_n(n, block_n, be.name)
         grid = dispatch.next_pow2(-(-n // bn))
-        key = ("scan", self._src_key(), grid, bn)
-        drv = dispatch.get_or_build(key, lambda: self._build_driver(grid, bn))
+        # block-insensitive backends only care about the padded stream
+        # length grid*bn, so block_n candidates sharing it share a driver
+        key = ("scan", be.name, self._content_key,
+               (grid, bn) if be.block_sensitive else (grid * bn,))
+        drv = dispatch.get_or_build(
+            key, lambda: be.scan_driver(self.spec, grid=grid, block_n=bn),
+            backend=be.name)
         out = drv(n, x).reshape(x.shape)
-        dispatch.record_launch()  # after the driver: failed launches don't count
+        dispatch.record_launch(be.name)  # after the driver: failed launches don't count
         return out
 
     # -- tuning ------------------------------------------------------------
@@ -222,25 +126,29 @@ class ScanKernel:
 
     def autotune(self, x, candidates: list[dict] | None = None,
                  measure: str = "hybrid", cache=None, repeats: int = 3,
-                 warmup: int = 1, prune_keep: int | None = None):
+                 warmup: int = 1, prune_keep: int | None = None,
+                 backend: "str | None" = None):
         """Tune ``block_n`` for the *bucket* of this input.
 
         Same contract as the other kernel families: the winner is
-        recorded per `dispatch.n_bucket` and the tuning-cache key uses
-        `dispatch.bucketed_signature`, so one tuning run covers every
-        ``n`` in the bucket.
+        recorded per ``(backend, dispatch.n_bucket)`` and the
+        tuning-cache key uses `dispatch.bucketed_signature` plus the
+        backend name, so one tuning run covers every ``n`` in the
+        bucket on that backend.
         """
         from repro.core.autotune import block_n_candidates, tune_per_bucket
 
+        be = backends.get_backend(backend or self.backend)
         n = int(getattr(x, "size", 0)) or int(np.prod(x.shape))
         return tune_per_bucket(
             f"scan.{self.name}",
-            builder=lambda block_n: (lambda a: self(a, block_n=block_n)),
+            builder=lambda block_n: (
+                lambda a: self(a, block_n=block_n, backend=be)),
             cost_fn=self.block_cost,
             candidates=candidates or block_n_candidates(n),
             args=(x,), n=n, tuned=self._tuned, param="block_n",
             measure=measure, cache=cache, repeats=repeats, warmup=warmup,
-            prune_keep=prune_keep)
+            prune_keep=prune_keep, backend=be.name)
 
 
 def InclusiveScanKernel(dtype, scan_expr, **kw):

@@ -131,7 +131,10 @@ def translate_statement(stmt: str) -> tuple[str | None, str]:
     stmt = stmt.strip()
     m = _DECL_RE.match(stmt)
     if m:
-        stmt = stmt[stmt.index(m.group(1)):]  # drop the C type
+        # drop the C type: slice at the *match position* of the declared
+        # name, never a substring search (a name like 't' also occurs
+        # inside 'float', and index() would cut there)
+        stmt = stmt[m.start(1):]
     m = _AUG_RE.match(stmt)
     if m:  # z[i] *= 2  ->  z[i] = z[i] * (2)
         lhs, op, rhs = m.groups()

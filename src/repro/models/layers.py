@@ -80,7 +80,7 @@ def position_encode(cfg: ModelConfig, x, positions):
 
 
 # ------------------------------------------------------------- softmax
-def fused_softmax(x, *, stable: bool = True):
+def fused_softmax(x, *, stable: bool = True, backend: str | None = None):
     """Softmax dispatch with an RTCG fused host path — axis-aware.
 
     Concrete inputs of ANY batch shape (a logits row outside jit, the
@@ -92,6 +92,10 @@ def fused_softmax(x, *, stable: bool = True):
     max and the shifted-exp sum share one wave (each row is complete
     inside its block, so the dependency resolves in-kernel).  Traced
     values fall back to ``jax.nn.softmax``; axis is always the last one.
+
+    ``backend`` pins the execution backend per call (``"pallas"`` /
+    ``"xla"``); by default the process-wide ``REPRO_BACKEND`` selection
+    applies.
     """
     if isinstance(x, jax.core.Tracer):
         return jax.nn.softmax(x, axis=-1)
@@ -100,23 +104,26 @@ def fused_softmax(x, *, stable: bool = True):
     from repro.core import array as ga
 
     rows = jnp.reshape(x, (-1, x.shape[-1]))
-    out = ga.softmax(ga.RTCGArray(rows), stable=stable).value
+    out = ga.softmax(ga.RTCGArray(rows), stable=stable).evaluate(
+        backend=backend).value
     return jnp.reshape(out, x.shape).astype(x.dtype)
 
 
-def rtcg_rmsnorm(x, w, *, eps: float = 1e-6):
+def rtcg_rmsnorm(x, w, *, eps: float = 1e-6, backend: str | None = None):
     """Planner-backed RMSNorm: ``x / sqrt(mean(x^2, -1) + eps) * w``
     scheduled as ONE row-segmented reduction wave plus ONE fused 2-D
     epilogue (2 launches), with the ``(N,)`` weight broadcast per-col
     and the per-row ``mean`` re-entering the epilogue as a ``(B, 1)``
     broadcast arg — the axis-aware-fusion counterpart of the
-    hand-written `repro.kernels.rmsnorm` Pallas kernel."""
+    hand-written `repro.kernels.rmsnorm` Pallas kernel.  ``backend``
+    pins the execution backend per call (default: ``REPRO_BACKEND``)."""
     from repro.core import array as ga
 
     orig = x.shape
     X = ga.RTCGArray(jnp.reshape(x, (-1, orig[-1])).astype(jnp.float32))
     W = ga.RTCGArray(jnp.asarray(w).astype(jnp.float32))
-    out = (X / (((X * X).mean(axis=-1) + eps).sqrt()) * W).value
+    out = (X / (((X * X).mean(axis=-1) + eps).sqrt()) * W).evaluate(
+        backend=backend).value
     return jnp.reshape(out, orig).astype(x.dtype)
 
 

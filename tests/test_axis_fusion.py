@@ -24,13 +24,29 @@ except ModuleNotFoundError:
     from _hypothesis_stub import given, settings, st
 
 import repro.core.array as ga
-from repro.core import dispatch
+from repro.core import backends, dispatch
 
 rng = np.random.default_rng(7)
 
 # col-bucket boundary: ceil(N/128) lane groups, bucket flips at pow2 groups
 BOUNDARY_NS = (1023, 1024, 1025)
 BATCHES = (1, 7, 32)
+
+
+@pytest.fixture(scope="module", params=["pallas", "xla"], autouse=True)
+def rtcg_backend(request):
+    """Run the whole axis-aware suite once per execution backend (PR 4):
+    row-wave schedules, `_acc` chaining, broadcast-arg binding and
+    bucket-reuse guarantees must hold identically on pallas and xla."""
+    import os
+
+    old = os.environ.get("REPRO_BACKEND")
+    os.environ["REPRO_BACKEND"] = request.param
+    yield request.param
+    if old is None:
+        os.environ.pop("REPRO_BACKEND", None)
+    else:
+        os.environ["REPRO_BACKEND"] = old
 
 
 def _launches(fn):
@@ -232,7 +248,8 @@ def test_row_reduction_autotune_per_bucket_pair(tmp_path):
     cache = DiskCache("tune", root=tmp_path)
     v = jnp.asarray(rng.standard_normal((16, 3000)).astype(np.float32))
     rep = rowsum.autotune(v, cache=cache, repeats=1, warmup=1)
-    assert rowsum._tuned[dispatch.rc_bucket(16, 3000)] == rep.best["block_rows"]
+    be = backends.get_backend().name
+    assert rowsum._tuned[(be, dispatch.rc_bucket(16, 3000))] == rep.best["block_rows"]
     # same bucket pair, different exact shape -> cached, no re-timing
     v2 = jnp.asarray(rng.standard_normal((13, 2900)).astype(np.float32))
     rep2 = rowsum.autotune(v2, cache=cache, repeats=1, warmup=1)

@@ -11,7 +11,7 @@ import pytest
 import jax.numpy as jnp
 
 import repro.core.array as ga
-from repro.core import dispatch
+from repro.core import backends, dispatch
 from repro.core.cache import DiskCache, LRUCache
 from repro.core.elementwise import ElementwiseKernel
 from repro.core.reduction import ReductionKernel
@@ -193,7 +193,8 @@ def test_hybrid_autotune_prunes_and_transfers_across_bucket(tmp_path):
     timed = [r for r in rep.results if r.ok]
     assert timed and pruned                      # model pruned, clock decided
     assert rep.best in [r.params for r in timed]
-    assert k._tuned[dispatch.n_bucket(100_000)] == rep.best["block_rows"]
+    be = backends.get_backend().name
+    assert k._tuned[(be, dispatch.n_bucket(100_000))] == rep.best["block_rows"]
     # same bucket, different exact n -> tuning-cache hit, no re-timing
     v2 = jnp.asarray(rng.standard_normal(98_304).astype(np.float32))
     rep2 = k.autotune(v2, v2, cache=cache, repeats=1, warmup=1)
