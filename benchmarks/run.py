@@ -12,6 +12,8 @@
 #             launches for a whole (B, N) batch vs 3·B unfused)
 #   rmsnorm — bench_rmsnorm:     planner-fused row norm vs hand-written
 #             Pallas kernel vs eager baseline
+#   serving — bench_serving:     PR 5 runtime — coalesced vs per-request
+#             dispatch, auto vs pinned backend, cold vs warm start
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
 #
@@ -32,18 +34,20 @@ from pathlib import Path
 
 
 def compare_rows(fresh: dict, committed: dict, tol: float = 0.20) -> list[str]:
-    """Regressions in *fused* rows of ``fresh`` vs ``committed``.
+    """Regressions in *gated* rows of ``fresh`` vs ``committed``.
 
-    Only rows whose name marks them as a fused path (``.fused`` /
-    ``.fused_stable`` suffixes) gate the build; baselines move with the
-    machine.  Rows present on one side only are skipped (a new suite
-    size is not a regression).  Returns human-readable messages.
+    Rows gate the build when their name marks them as a fused path
+    (``.fused`` / ``.fused_stable`` suffixes) OR they carry an explicit
+    ``gate: true`` flag — how BENCH_serving.json's coalesced/auto rows
+    opt in (PR 5) without the fusion naming convention.  Baselines move
+    with the machine.  Rows present on one side only are skipped (a new
+    suite size is not a regression).  Returns human-readable messages.
     """
     old = {r["name"]: r for r in committed.get("rows", [])}
     problems = []
     for row in fresh.get("rows", []):
         name = row["name"]
-        if ".fused" not in name:
+        if ".fused" not in name and not row.get("gate"):
             continue
         ref = old.get(name)
         if ref is None:
@@ -89,7 +93,7 @@ def main() -> None:
 
     from benchmarks import (bench_copperhead, bench_dgfem, bench_elementwise,
                             bench_filterbank, bench_model, bench_nn,
-                            bench_rmsnorm, bench_softmax)
+                            bench_rmsnorm, bench_serving, bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
     from repro.core import dispatch
@@ -98,6 +102,7 @@ def main() -> None:
     fusion_kwargs = {}
     softmax_kwargs = {}
     rmsnorm_kwargs = {}
+    serving_kwargs = {}
     if args.sizes:
         sizes = tuple(int(s) for s in args.sizes.split(","))
         fusion_kwargs["sizes"] = sizes
@@ -107,6 +112,7 @@ def main() -> None:
                        for s in args.batches.split(","))
         softmax_kwargs["batches"] = shapes
         rmsnorm_kwargs["shapes"] = shapes
+        serving_kwargs["shapes"] = shapes   # K x N request waves
 
     suites = {
         "table1": bench_filterbank.run,
@@ -115,6 +121,7 @@ def main() -> None:
         "fusion": lambda repeats: bench_elementwise.run(repeats=repeats, **fusion_kwargs),
         "softmax": lambda repeats: bench_softmax.run(repeats=repeats, **softmax_kwargs),
         "rmsnorm": lambda repeats: bench_rmsnorm.run(repeats=repeats, **rmsnorm_kwargs),
+        "serving": lambda repeats: bench_serving.run(repeats=repeats, **serving_kwargs),
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }

@@ -53,6 +53,22 @@ for be in ("pallas", "xla"):
 # same numbers, same 2-launch schedule — only the compile target differs
 #   (run e.g.:  REPRO_BACKEND=xla PYTHONPATH=src python examples/quickstart.py)
 
+# 1e. Serving runtime (PR 5): backend="auto" stops pinning and lets the
+#     runtime's router pick pallas-vs-xla per call from measured latency
+#     (seeded by autotuner winners); single-row requests submitted from
+#     concurrent threads micro-batch into ONE 2-launch (K, N) schedule;
+#     and every served key lands in a warm-start manifest that
+#     runtime.warmup() replays at startup (zero cold-start compiles).
+from repro import runtime
+
+auto_sm = ga.softmax(scores, stable=True).evaluate(backend="auto").value
+from repro.models.layers import fused_softmax
+auto_layer = fused_softmax(np.random.randn(4, 256).astype(np.float32),
+                           backend="auto")
+st = runtime.stats()
+print("runtime routes:", st["router"]["routes"],
+      "| manifest entries:", st["manifest"]["entries"])
+
 # 2. ElementwiseKernel: C-like snippet -> generated tiled Pallas kernel
 #    (paper Fig. 4a, verbatim API)
 from repro.core import ElementwiseKernel

@@ -1,5 +1,9 @@
 """Serve a small model with batched requests through the engine
-(prefill + stepwise decode + prompt-granular continuous batching).
+(prefill + stepwise decode + prompt-granular continuous batching),
+with the PR 5 serving runtime in the loop: temperature sampling routes
+its softmax through the backend auto-router, every request id maps back
+to its padding-stripped result, and the coalescing demo shows K
+concurrent single-row requests flushing as ONE 2-launch schedule.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,7 +18,9 @@ from repro.launch import serve as serve_mod  # noqa: E402
 def main():
     serve_mod.main(["--arch", "internlm2-1.8b", "--smoke",
                     "--batch", "4", "--prompt-len", "24",
-                    "--steps", "24", "--requests", "8"])
+                    "--steps", "24", "--requests", "8",
+                    "--temperature", "0.8", "--use-runtime",
+                    "--coalesce", "8"])
 
 
 if __name__ == "__main__":

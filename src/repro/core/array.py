@@ -79,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends import is_auto as _is_auto
 from repro.core.cache import LRUCache, stable_hash
 from repro.core.elementwise import ElementwiseKernel
 from repro.core.platform import (BroadcastArg, ScalarArg, VectorArg,
@@ -983,6 +984,14 @@ class RTCGArray:
         expr = self._expr
         if expr.op == "leaf":
             return expr.value
+        if _is_auto(backend):
+            # routing policy, not a target (PR 5): the serving runtime's
+            # router picks pallas-vs-xla per (DAG family, shape bucket)
+            # from latency telemetry, times the launch, and feeds the
+            # measurement back — see repro.runtime.router.route_expr.
+            from repro.runtime.router import route_expr
+
+            return route_expr(expr)
         if _has_reduce(expr):
             return plan_many([expr], backend=backend).launch()[0]
         return plan(expr, backend=backend).launch()
@@ -990,7 +999,9 @@ class RTCGArray:
     def evaluate(self, backend=None) -> "RTCGArray":
         """Force the DAG through the planner; ``backend`` pins an
         execution backend for every generated kernel in the schedule
-        (default: the process-wide ``REPRO_BACKEND`` selection)."""
+        (default: the process-wide ``REPRO_BACKEND`` selection).
+        ``backend="auto"`` routes per call through the serving runtime's
+        latency-telemetry router (DESIGN.md §9.2) instead of pinning."""
         if self._expr.op == "leaf":
             return self
         return RTCGArray(self._evaluate_expr(backend))

@@ -41,6 +41,25 @@ import jax
 from repro.core.cache import DiskCache, stable_hash, tuning_cache
 
 
+# Winner hooks (PR 5, DESIGN.md §9.2): after a per-bucket tune resolves,
+# every registered hook gets ``(name, backend, bucket, seconds)`` for the
+# winning config.  The serving runtime's backend router subscribes here
+# so its per-(backend, bucket) latency priors are *seeded* by measured
+# tuning results instead of starting blind.
+WINNER_HOOKS: list[Callable] = []
+
+
+def notify_winner(name: str, backend: "str | None", bucket: Any,
+                  seconds: float) -> None:
+    """Fan a tuning winner's measured score out to the registered hooks
+    (exceptions are swallowed — telemetry must never fail a tune)."""
+    for fn in list(WINNER_HOOKS):
+        try:
+            fn(name, backend, bucket, seconds)
+        except Exception:  # pragma: no cover - observability only
+            pass
+
+
 def block_rows_candidates(n: int, lanes: int = 128) -> list[dict]:
     """Shared ``block_rows`` candidate pool for the row-blocked kernel
     families (elementwise, reduction): powers of two up to the padded
@@ -121,6 +140,10 @@ def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
     # ``backend`` still stores a readable (None, bucket) entry rather
     # than a bare-bucket key nothing ever consults
     tuned[(backend, nb)] = report.best[param]
+    viable = [r.score for r in report.results
+              if r.ok and math.isfinite(r.score)]
+    if viable:  # seed the serving runtime's router with the winner's score
+        notify_winner(name, backend, nb, min(viable))
     return report
 
 

@@ -45,6 +45,13 @@ def available_backends() -> list[str]:
     return sorted(_FACTORIES)
 
 
+def is_auto(name) -> bool:
+    """True when ``name`` is the serving runtime's ``"auto"`` routing
+    *policy* (resolved per call by `repro.runtime`, PR 5) rather than a
+    concrete execution target this registry can return."""
+    return isinstance(name, str) and name.lower() == "auto"
+
+
 def active_backend_name() -> str:
     """The process-wide default backend name (``REPRO_BACKEND``),
     normalized the same way `get_backend` resolves it."""
@@ -62,6 +69,16 @@ def get_backend(name: "str | Backend | None" = None) -> Backend:
         try:
             factory = _FACTORIES[key]
         except KeyError:
+            if key == "auto":
+                # "auto" is a routing *policy*, not an execution target:
+                # the serving runtime resolves it per call from latency
+                # telemetry (PR 5).  Planner/layer entry points accept
+                # backend="auto" and never let it reach this registry.
+                raise ValueError(
+                    "backend='auto' is resolved by the serving runtime "
+                    "(repro.runtime) per call; pass it to planner/layer "
+                    "entry points (RTCGArray.evaluate, fused_softmax, "
+                    "rtcg_rmsnorm) rather than to a kernel family") from None
             raise ValueError(
                 f"unknown RTCG backend {key!r}; available: "
                 f"{available_backends()}") from None
@@ -73,5 +90,5 @@ __all__ = [
     "Backend", "ElementwiseSpec", "ReductionSpec", "ScanSpec",
     "PallasBackend", "XlaBackend", "DEFAULT_BACKEND",
     "register_backend", "available_backends", "active_backend_name",
-    "get_backend",
+    "get_backend", "is_auto",
 ]

@@ -92,6 +92,7 @@ class DiskCache:
         self.root = (root or _default_cache_dir()) / namespace
         self.root.mkdir(parents=True, exist_ok=True)
         self._lock = threading.Lock()
+        self._update_lock = threading.Lock()
         self._mem: dict[str, Any] = {}
 
     def _path(self, key: str) -> Path:
@@ -132,6 +133,19 @@ class DiskCache:
                 os.unlink(tmp)
             except OSError:
                 pass
+
+    def update(self, key: str, fn: Callable[[Any], Any],
+               default: Any = None) -> Any:
+        """Read-modify-write under a dedicated lock: ``fn(current)`` maps
+        the stored value (or ``default`` when absent) to the new one,
+        which is persisted and returned.  Serializes *threads* of one
+        process; cross-process writers still race benignly (last atomic
+        rename wins) — acceptable for append-mostly documents like the
+        serving runtime's warm-start manifest (DESIGN.md §9.3)."""
+        with self._update_lock:
+            val = fn(self.get(key, default))
+            self.put(key, val)
+            return val
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
@@ -223,6 +237,12 @@ class LRUCache:
     def __contains__(self, key: Any) -> bool:
         with self._lock:
             return key in self._data
+
+    def keys(self) -> list:
+        """Snapshot of the cached keys (LRU order, oldest first) — the
+        warm-start manifest checks replay coverage against this."""
+        with self._lock:
+            return list(self._data.keys())
 
     def stats(self) -> dict:
         with self._lock:

@@ -65,6 +65,13 @@ _UNTAGGED = "untagged"  # counter tag when a caller does not name a backend
 _compile_counts: dict[str, int] = {}
 _launch_counts: dict[str, int] = {}
 
+# Compile listeners (PR 5, DESIGN.md §9.3): the serving runtime's
+# warm-start manifest records every driver build it witnesses, so a
+# fresh process can replay the same keys at startup.  Listeners get
+# ``(key, backend)`` per build; exceptions are swallowed (observability
+# must never break a compile).
+_compile_listeners: list = []
+
 
 # ----------------------------------------------------------------- buckets
 def next_pow2(x: int) -> int:
@@ -205,12 +212,31 @@ def get_or_build(key: Any, builder: Callable[[], Callable],
     ``key`` too — the tag only labels the counter."""
     tag = backend or _UNTAGGED
     return _driver_cache.get_or_create(
-        key, builder, on_create=lambda: _record_compile(tag))
+        key, builder, on_create=lambda: _record_compile(tag, key))
 
 
-def _record_compile(backend: str) -> None:
+def add_compile_listener(fn: Callable[[Any, str], None]) -> None:
+    """Register ``fn(key, backend)`` to run after every driver compile
+    (the warm-start manifest's recording hook)."""
+    if fn not in _compile_listeners:
+        _compile_listeners.append(fn)
+
+
+def remove_compile_listener(fn: Callable[[Any, str], None]) -> None:
+    try:
+        _compile_listeners.remove(fn)
+    except ValueError:
+        pass
+
+
+def _record_compile(backend: str, key: Any = None) -> None:
     with _counter_lock:
         _compile_counts[backend] = _compile_counts.get(backend, 0) + 1
+    for fn in list(_compile_listeners):
+        try:
+            fn(key, backend)
+        except Exception:  # pragma: no cover - observability never breaks builds
+            pass
 
 
 def record_launch(backend: str | None = None) -> None:
@@ -274,6 +300,36 @@ def count_launches() -> _LaunchCounter:
     is a reduce + one epilogue: delta == 2).  ``c.by_backend`` breaks
     the delta down per backend tag."""
     return _LaunchCounter()
+
+
+class _CompileCounter:
+    """Context manager over the *compile* counter: ``delta`` after exit
+    is the number of driver builds inside the block, ``by_backend`` the
+    nonzero per-backend deltas.  The warm-start acceptance gate
+    (DESIGN.md §9.3) is ``delta == 0`` around replayed traffic after
+    ``runtime.warmup()``."""
+
+    def __enter__(self):
+        self._start = compile_counts()
+        self.delta = 0
+        self.by_backend: dict[str, int] = {}
+        return self
+
+    def __exit__(self, *exc):
+        end = compile_counts()
+        self.by_backend = {
+            k: d for k in end
+            if (d := end[k] - self._start.get(k, 0)) > 0}
+        self.delta = sum(self.by_backend.values())
+        return False
+
+
+def count_compiles() -> _CompileCounter:
+    """``with dispatch.count_compiles() as c: ...; c.delta`` — compile-
+    side twin of `count_launches`, used by the serving runtime's
+    warm-start tests and the CI warmup leg (zero cold-start compiles
+    after a manifest replay)."""
+    return _CompileCounter()
 
 
 def reset_counters() -> None:

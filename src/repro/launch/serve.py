@@ -1,22 +1,60 @@
 """Serving launcher: batched generation demo with throughput report.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke
+
+PR 5 adds the serving-runtime path (DESIGN.md §9):
+
+  * ``--use-runtime`` routes temperature sampling through a
+    `repro.runtime.ServingRuntime` — softmax over each logits block is
+    ONE fused 2-launch schedule on the backend the latency router picks,
+    every call lands in the warm-start manifest, and the report prints
+    ``runtime.stats()`` (router routes, coalesce counters, manifest
+    size);
+  * ``--coalesce K`` demos cross-request micro-batching: K threads each
+    submit one softmax row and the executor flushes them as a single
+    ``(K, N)`` schedule — 2 launches total instead of ``2·K``.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_config
 from repro.launch.mesh import make_mesh
 from repro.models.schema import init_params
 from repro.serving.engine import Engine, RequestQueue
 from repro.sharding.partition import MeshContext
+
+
+def coalesce_demo(runtime, k: int, n: int) -> None:
+    """K concurrent single-row softmax requests -> one 2-launch flush."""
+    from repro.core import dispatch
+
+    rng = np.random.default_rng(0)
+    rows = [rng.standard_normal(n).astype(np.float32) for _ in range(k)]
+    futs: list = [None] * k
+
+    def submit(i):
+        futs[i] = runtime.submit_softmax(rows[i])
+
+    with dispatch.count_launches() as c:
+        threads = [threading.Thread(target=submit, args=(i,)) for i in range(k)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for f in futs:
+            f.result(timeout=120)
+    ex = runtime.executor.stats()
+    print(f"coalesce demo: {k} requests x ({n},) rows -> "
+          f"{c.delta} launches {c.by_backend} "
+          f"(coalesce factor {ex['coalesce_factor']:.1f}, "
+          f"{ex['launches_per_request']:.2f} launches/request)")
 
 
 def main(argv=None):
@@ -27,26 +65,61 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--use-runtime", action="store_true",
+                    help="route sampling softmax through the serving "
+                         "runtime (backend auto-router + manifest)")
+    ap.add_argument("--coalesce", type=int, default=0, metavar="K",
+                    help="also run the K-request coalescing demo")
     args = ap.parse_args(argv)
+
+    runtime = None
+    if args.use_runtime or args.coalesce:
+        from repro import runtime as rtm
+
+        # generous window: the demo's submitter threads must all land in
+        # one flush (a real server tunes this against latency SLOs)
+        runtime = rtm.ServingRuntime(backend="auto", window=0.1,
+                                     max_batch=max(args.coalesce or 16, 2))
+        warm = runtime.warmup()
+        print(f"runtime warmup: {warm['replayed']}/{warm['entries']} manifest "
+              f"entries replayed, {warm['compiles']} driver compiles")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     mesh = make_mesh((len(jax.devices()),), ("data",))
     ctx = MeshContext(mesh)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, ctx, max_len=args.prompt_len + args.steps + 8)
+    engine = Engine(cfg, params, ctx,
+                    max_len=args.prompt_len + args.steps + 8,
+                    runtime=runtime if args.use_runtime else None)
 
     rng = np.random.default_rng(0)
     queue = RequestQueue()
-    for _ in range(args.requests):
-        queue.submit(rng.integers(0, cfg.vocab_size,
-                                  rng.integers(4, args.prompt_len)).astype(np.int32))
+    ids = [queue.submit(rng.integers(0, cfg.vocab_size,
+                                     rng.integers(4, args.prompt_len))
+                        .astype(np.int32))
+           for _ in range(args.requests)]
     t0 = time.time()
-    done = queue.run(engine, args.batch, args.steps)
+    done = queue.run(engine, args.batch, args.steps,
+                     temperature=args.temperature)
     dt = time.time() - t0
-    total_tokens = sum(len(d) for d in done)
+    total_tokens = sum(r.tokens.size for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s -> {total_tokens/dt:.1f} tok/s")
-    print("sample:", done[0][:16])
+    first = queue.result_for(ids[0])
+    print(f"request {first.request_id}: prompt_len={first.prompt_len} "
+          f"(padded to {first.padded_len}), sequence[:8]:",
+          first.sequence[:8])
+
+    if args.coalesce:
+        coalesce_demo(runtime, args.coalesce, int(cfg.vocab_size))
+    if runtime is not None:
+        st = runtime.stats()
+        print("runtime.stats(): routes:", st["router"]["routes"],
+              "| executor:", {k: st["executor"][k] for k in
+                              ("requests", "flushes", "coalesce_factor")},
+              "| manifest entries:", st["manifest"]["entries"])
+        runtime.close()
     return len(done)
 
 

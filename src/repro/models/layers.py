@@ -95,12 +95,21 @@ def fused_softmax(x, *, stable: bool = True, backend: str | None = None):
 
     ``backend`` pins the execution backend per call (``"pallas"`` /
     ``"xla"``); by default the process-wide ``REPRO_BACKEND`` selection
-    applies.
+    applies.  ``backend="auto"`` (PR 5) takes the serving-runtime path
+    instead: the default `repro.runtime.ServingRuntime` picks the
+    backend per shape bucket from latency telemetry and records the
+    call into the warm-start manifest — see DESIGN.md §9.2.
     """
     if isinstance(x, jax.core.Tracer):
         return jax.nn.softmax(x, axis=-1)
     if getattr(x, "ndim", 0) == 0:
         return jax.nn.softmax(x, axis=-1)
+    from repro.core.backends import is_auto
+
+    if is_auto(backend):
+        from repro import runtime as _rt
+
+        return _rt.default_runtime().softmax(x, stable=stable)
     from repro.core import array as ga
 
     rows = jnp.reshape(x, (-1, x.shape[-1]))
@@ -116,7 +125,15 @@ def rtcg_rmsnorm(x, w, *, eps: float = 1e-6, backend: str | None = None):
     and the per-row ``mean`` re-entering the epilogue as a ``(B, 1)``
     broadcast arg — the axis-aware-fusion counterpart of the
     hand-written `repro.kernels.rmsnorm` Pallas kernel.  ``backend``
-    pins the execution backend per call (default: ``REPRO_BACKEND``)."""
+    pins the execution backend per call (default: ``REPRO_BACKEND``);
+    ``backend="auto"`` routes through the serving runtime's latency
+    router + warm-start manifest (DESIGN.md §9.2)."""
+    from repro.core.backends import is_auto
+
+    if is_auto(backend):
+        from repro import runtime as _rt
+
+        return _rt.default_runtime().rmsnorm(x, w, eps=eps)
     from repro.core import array as ga
 
     orig = x.shape

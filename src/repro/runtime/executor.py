@@ -1,0 +1,241 @@
+"""Request-coalescing executor — micro-batch concurrent single-row work.
+
+The serving problem (DESIGN.md §9.1): request traffic arrives as
+*independent* single-row calls — a sampler softmax over one logits row
+per request — and the pre-runtime path paid one full generated-kernel
+schedule per request: 2 launches each, ``2·K`` for K concurrent
+requests.  The PR 3 axis-aware machinery already executes a whole
+``(K, N)`` batch in the SAME 2 launches (one row-segmented reduction
+wave + one fused 2-D epilogue); what was missing is batching *across
+requests*.  This executor closes that gap:
+
+  * `submit` enqueues a row into the micro-batch forming for its
+    coalescing key — ``(family, row length, dtype, family params)`` —
+    and returns a `RuntimeFuture`;
+  * a batch **flushes** when it reaches ``max_batch`` rows or its
+    ``window`` (seconds, measured from the batch's first row) expires,
+    whichever is first;
+  * a flush stacks the rows into one ``(K, N)`` operand and runs the
+    family's fused row schedule ONCE through the owning
+    `ServingRuntime` (which routes the backend, records telemetry and
+    the warm-start manifest), then scatters row results back to their
+    futures — K requests, 2 launches.
+
+Coalesce-factor counters (`stats`): ``requests / flushes`` is the
+realized micro-batch size; ``launches`` (via `dispatch.count_launches`)
+proves the ``2`` vs ``2·K`` claim, and both feed
+``benchmarks/bench_serving.py`` rows and the acceptance tests.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.core import dispatch
+
+
+class RuntimeFuture:
+    """Single-assignment result slot handed back by `submit`."""
+
+    __slots__ = ("_event", "_value", "_error")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: "BaseException | None" = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: "float | None" = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("runtime request still pending")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _set(self, value: Any) -> None:
+        self._value = value
+        self._event.set()
+
+    def _set_error(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+
+class _Batch:
+    __slots__ = ("family", "shared", "deadline", "rows", "posts", "futures")
+
+    def __init__(self, family: str, shared: dict, deadline: float):
+        self.family = family
+        self.shared = shared
+        self.deadline = deadline
+        self.rows: list = []
+        self.posts: list = []
+        self.futures: list[RuntimeFuture] = []
+
+
+class CoalescingExecutor:
+    """Micro-batch window over single-row requests (one worker thread).
+
+    ``runtime`` is the owning `ServingRuntime` — flushes call its
+    ``_run_batch`` so routing/telemetry/manifest recording ride along.
+    ``window`` is the maximum seconds a request waits for co-travellers;
+    ``max_batch`` flushes a batch early the moment it fills (the
+    benchmarks set ``max_batch=K`` so a K-request wave flushes exactly
+    once, with no timing dependence).
+    """
+
+    def __init__(self, runtime, window: float = 0.002, max_batch: int = 64):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._runtime = runtime
+        self.window = float(window)
+        self.max_batch = int(max_batch)
+        self._cv = threading.Condition()
+        self._batches: dict = {}      # coalescing key -> _Batch
+        self._inflight = 0
+        self._closed = False
+        self._thread: "threading.Thread | None" = None
+        # counters (under _cv): the coalesce-factor bookkeeping
+        self._requests = 0
+        self._flushes = 0
+        self._launches = 0
+        self._max_coalesce = 0
+
+    # -- submission ------------------------------------------------------
+    def submit(self, family: str, row, *, shared: "dict | None" = None,
+               key_extra: tuple = (), post: "Callable | None" = None
+               ) -> RuntimeFuture:
+        """Queue one row for ``family``; rows sharing the coalescing key
+        ``(family, len(row), dtype, *key_extra)`` inside one window
+        flush as a single ``(K, N)`` schedule.  ``post(row_result)``
+        runs on this request's slice of the batch output (the sampler's
+        per-request categorical draw)."""
+        row = jnp.asarray(row)
+        if row.ndim != 1:
+            raise ValueError(
+                f"submit coalesces single rows; got shape {row.shape} "
+                "(batched operands go through the runtime directly)")
+        fut = RuntimeFuture()
+        key = (family, int(row.shape[0]), str(row.dtype)) + tuple(key_extra)
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("executor is closed")
+            batch = self._batches.get(key)
+            if batch is None:
+                batch = self._batches[key] = _Batch(
+                    family, dict(shared or {}),
+                    time.monotonic() + self.window)
+            batch.rows.append(row)
+            batch.posts.append(post)
+            batch.futures.append(fut)
+            self._requests += 1
+            self._ensure_thread()
+            self._cv.notify_all()
+        return fut
+
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._loop, name="repro-runtime-flusher", daemon=True)
+            self._thread.start()
+
+    # -- the flush loop --------------------------------------------------
+    def _due(self, now: float) -> list:
+        return [k for k, b in self._batches.items()
+                if self._closed or b.deadline <= now
+                or len(b.rows) >= self.max_batch]
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                now = time.monotonic()
+                due = self._due(now)
+                if not due:
+                    if self._closed:
+                        return
+                    timeout = None
+                    if self._batches:
+                        timeout = max(0.0, min(
+                            b.deadline for b in self._batches.values()) - now)
+                    self._cv.wait(timeout)
+                    continue
+                batches = [self._batches.pop(k) for k in due]
+                self._inflight += len(batches)
+            try:
+                for b in batches:
+                    self._flush_batch(b)
+            finally:
+                with self._cv:
+                    self._inflight -= len(batches)
+                    self._cv.notify_all()
+
+    def _flush_batch(self, batch: _Batch) -> None:
+        try:
+            X = jnp.stack(batch.rows)
+            with dispatch.count_launches() as c:
+                out = self._runtime._run_batch(batch.family, X, batch.shared)
+            with self._cv:
+                self._flushes += 1
+                self._launches += c.delta
+                self._max_coalesce = max(self._max_coalesce, len(batch.rows))
+        except BaseException as e:  # noqa: BLE001 - batch failed: fan out
+            for fut in batch.futures:
+                fut._set_error(e)
+            return
+        # scatter results; a failing per-request post step (e.g. a bad
+        # sampler key) fails ONLY its own future, never co-batched ones
+        for i, (fut, post) in enumerate(zip(batch.futures, batch.posts)):
+            try:
+                fut._set(post(out[i]) if post is not None else out[i])
+            except BaseException as e:  # noqa: BLE001
+                fut._set_error(e)
+
+    # -- control ---------------------------------------------------------
+    def flush(self, wait: bool = True, timeout: float = 30.0) -> None:
+        """Force every forming batch to flush now; with ``wait`` block
+        until the queue and in-flight work drain."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            for b in self._batches.values():
+                b.deadline = 0.0
+            if self._batches:
+                self._ensure_thread()
+            self._cv.notify_all()
+            while wait and (self._batches or self._inflight):
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("executor flush timed out")
+                self._cv.wait(min(remaining, 0.1))
+
+    def close(self) -> None:
+        """Flush what is queued, then stop the worker."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+            thread = self._thread
+        if thread is not None and thread.is_alive():
+            thread.join(timeout=30.0)
+
+    def stats(self) -> dict:
+        """Coalesce-factor counters: K requests per flush at 2 launches
+        each is the whole value proposition, so it is measured."""
+        with self._cv:
+            return {
+                "requests": self._requests,
+                "flushes": self._flushes,
+                "launches": self._launches,
+                "pending": sum(len(b.rows) for b in self._batches.values()),
+                "max_coalesce": self._max_coalesce,
+                "coalesce_factor": (self._requests / self._flushes
+                                    if self._flushes else 0.0),
+                "launches_per_request": (self._launches / self._requests
+                                         if self._requests else 0.0),
+                "window_s": self.window,
+                "max_batch": self.max_batch,
+            }

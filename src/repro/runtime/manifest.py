@@ -1,0 +1,167 @@
+"""Warm-start kernel manifest — the paper's compiler cache, extended to
+fleet cold starts (DESIGN.md §9.3).
+
+PyCUDA's semi-permanent compiler cache amortizes compilation *within*
+one machine's lifetime; a serving fleet additionally needs every fresh
+process to reach steady state before real traffic arrives.  The
+manifest closes that gap: the runtime records every routed call it
+serves — family, geometry, dtype, execution backend, family params —
+plus the dispatch-level driver keys (spec fingerprint × bucket ×
+backend) observed while serving it, into a `DiskCache` namespace
+(``runtime_manifest``).  `replay` (surfaced as ``runtime.warmup()``)
+re-executes one representative call per recorded entry at startup, on
+the entry's recorded backend, with zero-filled operands of the recorded
+geometry/dtype — driver-cache keys are content-addressed on rendered
+source and bucketed geometry, never on values, so the replayed build is
+bit-identical to the one live traffic would trigger, and the process
+serves its first real request with ``dispatch.compile_count`` flat.
+
+Entries are deduplicated per ``(family, bucket, dtype, backend,
+params)``; the document is merged read-modify-write (`DiskCache.update`)
+so concurrent runtimes append without clobbering each other.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+from repro.core import dispatch
+from repro.core.cache import DiskCache, stable_hash
+
+#: DiskCache namespace + fixed document key (one manifest per cache root;
+#: entries carry their own backend, so the key is env-insensitive)
+NAMESPACE = "runtime_manifest"
+DOC_KEY = "manifest-v1"
+
+#: cap on recorded raw driver keys (coverage reporting, not replay input)
+MAX_OBSERVED_KEYS = 512
+
+
+def entry_key(family: str, geometry: tuple, dtype: str, backend: str,
+              params: dict) -> str:
+    """Dedup key: bucket (not exact geometry) × everything else — two
+    shapes sharing a driver bucket share a warmup entry."""
+    from repro.runtime.router import bucket_for
+
+    return stable_hash([family, list(bucket_for(geometry)), dtype, backend,
+                        sorted((k, repr(v)) for k, v in params.items())])[:16]
+
+
+class WarmStartManifest:
+    """Record served (family, geometry, backend) keys; replay at startup."""
+
+    def __init__(self, cache: "DiskCache | None" = None,
+                 doc_key: str = DOC_KEY):
+        self.cache = cache if cache is not None else DiskCache(NAMESPACE)
+        self.doc_key = doc_key
+        self._lock = threading.Lock()
+        doc = self.cache.get(self.doc_key) or {}
+        self._entries: dict = dict(doc.get("entries", {}))
+        self._observed: list = list(doc.get("observed_keys", []))
+        self._listening = False
+
+    # -- recording -------------------------------------------------------
+    def record(self, family: str, geometry: tuple, dtype: str, backend: str,
+               params: "dict | None" = None) -> bool:
+        """Record one served call; returns True when it was new (a new
+        (family, bucket, dtype, backend, params) cell)."""
+        params = dict(params or {})
+        ek = entry_key(family, geometry, dtype, backend, params)
+        with self._lock:
+            if ek in self._entries:
+                return False
+            self._entries[ek] = {
+                "family": family,
+                "geometry": [int(d) for d in geometry],
+                "dtype": str(dtype),
+                "backend": backend,
+                "params": params,
+            }
+        self._persist()
+        return True
+
+    def observe_compile(self, key: Any, backend: str) -> None:
+        """Dispatch compile listener: remember the raw driver key (spec
+        fingerprint × bucket × backend) for coverage reporting."""
+        with self._lock:
+            self._observed.append(repr(key))
+            del self._observed[:-MAX_OBSERVED_KEYS]
+
+    def start_listening(self) -> None:
+        if not self._listening:
+            self._listening = True
+            dispatch.add_compile_listener(self.observe_compile)
+
+    def stop_listening(self) -> None:
+        if self._listening:
+            self._listening = False
+            dispatch.remove_compile_listener(self.observe_compile)
+
+    def _persist(self) -> None:
+        with self._lock:
+            entries = dict(self._entries)
+            observed = list(self._observed)
+
+        def merge(doc):
+            doc = doc or {}
+            merged = dict(doc.get("entries", {}))
+            merged.update(entries)
+            seen = list(dict.fromkeys(doc.get("observed_keys", []) + observed))
+            return {"entries": merged,
+                    "observed_keys": seen[-MAX_OBSERVED_KEYS:]}
+
+        self.cache.update(self.doc_key, merge, default={})
+
+    # -- reading ---------------------------------------------------------
+    def entries(self) -> list[dict]:
+        with self._lock:
+            return [dict(e) for e in self._entries.values()]
+
+    def reload(self) -> int:
+        """Re-read the persisted document (a fresh process's first step);
+        returns the entry count."""
+        doc = self.cache.get(self.doc_key) or {}
+        with self._lock:
+            self._entries = dict(doc.get("entries", {}))
+            self._observed = list(doc.get("observed_keys", []))
+            return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._observed.clear()
+        self.cache.update(self.doc_key, lambda _:
+                          {"entries": {}, "observed_keys": []}, default={})
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    # -- replay ----------------------------------------------------------
+    def replay(self, run_entry) -> dict:
+        """Warm the process: re-execute every entry via ``run_entry(entry)``
+        (the `ServingRuntime` passes its pinned-backend runner) and
+        report ``{"entries", "replayed", "errors", "compiles",
+        "covered_keys"}``.  ``compiles`` counts the driver builds warmup
+        itself paid; after it, replaying the same traffic must compile
+        nothing (the CI warmup-leg assertion)."""
+        self.reload()
+        errors: list[str] = []
+        replayed = 0
+        with dispatch.count_compiles() as cc:
+            for entry in self.entries():
+                try:
+                    run_entry(entry)
+                    replayed += 1
+                except Exception as e:  # a stale entry must not kill startup
+                    errors.append(f"{entry.get('family')}: "
+                                  f"{type(e).__name__}: {e}"[:200])
+        live = {repr(k) for k in dispatch.driver_cache().keys()}
+        with self._lock:
+            covered = sum(1 for k in self._observed if k in live)
+        return {"entries": len(self), "replayed": replayed,
+                "errors": errors, "compiles": cc.delta,
+                "compiles_by_backend": cc.by_backend,
+                "covered_keys": covered,
+                "observed_keys": len(self._observed)}

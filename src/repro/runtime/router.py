@@ -1,0 +1,245 @@
+"""Backend auto-router — pick pallas vs xla per call from latency telemetry.
+
+PR 4 left the selection problem open: the xla lowering wins tiny serving
+shapes (where pallas interpret overhead dominates off-TPU) while pallas
+wins large ones, and the right choice is a *measured* property of the
+``(family, backend, shape bucket)`` triple — exactly the paper's
+run-time-tuning argument ("choose the best one ... at run time, when
+complete information is available") applied one level up, to the
+execution target itself.  See DESIGN.md §9.2 for the policy contract.
+
+`BackendRouter` keeps an EMA of observed wall-clock seconds per
+``(family, backend, bucket)``:
+
+  * **seeding** — before any live traffic, estimates come from (a) the
+    autotuner's winning wall-clock scores (`repro.core.autotune`
+    winner hooks feed `seed_prior`, keyed per (backend, bucket)) and
+    (b) the analytic `BlockCost` model (`seed_from_cost`), so a cold
+    router starts from measured/modelled priors instead of guessing;
+  * **exploration** — a backend with zero *observations* for a bucket
+    is always tried first (priors inform, they never suppress a first
+    measurement), and every ``explore_every``-th decision re-measures
+    the current runner-up so a drifting machine can flip the route;
+  * **exploitation** — otherwise the argmin-EMA backend wins.
+
+``backend="auto"`` on `RTCGArray.evaluate` / `fused_softmax` /
+`rtcg_rmsnorm` funnels into `route_expr` / the `ServingRuntime`, which
+choose here, time the launch, and `observe` the result back.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import weakref
+from typing import Any, Callable
+
+import jax
+
+from repro.core import autotune, dispatch
+
+#: routers that receive autotuner winner seeds (weak: routers die with
+#: their runtime, the hook must not keep them alive)
+_ROUTERS: "weakref.WeakSet" = weakref.WeakSet()
+_HOOK_INSTALLED = False
+
+_DEFAULT: "BackendRouter | None" = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def bucket_for(geometry: tuple) -> tuple:
+    """Telemetry bucket of a plan geometry: the 2-D `dispatch.rc_bucket`
+    pair for row layouts, a 1-tuple of `dispatch.n_bucket` for flat ones
+    — the same keys tuning winners are recorded under, so seeds and
+    observations line up."""
+    if len(geometry) >= 2:
+        return dispatch.rc_bucket(int(geometry[0]), int(geometry[-1]))
+    return (dispatch.n_bucket(max(1, int(geometry[0]))),)
+
+
+def _install_winner_hook() -> None:
+    global _HOOK_INSTALLED
+    if _HOOK_INSTALLED:
+        return
+    _HOOK_INSTALLED = True
+    autotune.WINNER_HOOKS.append(_seed_routers_from_winner)
+
+
+def _seed_routers_from_winner(name: str, backend: "str | None", bucket: Any,
+                              seconds: float) -> None:
+    """`autotune.tune_per_bucket` winner hook: a tuned kernel's best
+    measured score is a latency prior for its (backend, bucket)."""
+    if not backend:
+        return
+    nb = tuple(bucket) if isinstance(bucket, tuple) else (int(bucket),)
+    for router in list(_ROUTERS):
+        router.seed_prior(backend, nb, float(seconds))
+
+
+class BackendRouter:
+    """EMA latency table + routing policy over the registered backends.
+
+    Thread-safe: `choose`/`observe`/`seed*` take one lock; the executor
+    and any number of direct routed calls may interleave freely.
+    """
+
+    def __init__(self, backends: tuple = ("pallas", "xla"),
+                 alpha: float = 0.25, explore_every: int = 64):
+        self.backends = tuple(backends)
+        self.alpha = float(alpha)
+        self.explore_every = int(explore_every)
+        self._lock = threading.Lock()
+        self._ema: dict = {}        # (family, backend, bucket) -> seconds
+        self._obs: dict = {}        # (family, backend, bucket) -> sample count
+        self._prior: dict = {}      # (backend, bucket) -> seeded seconds
+        self._decisions: dict = {}  # (family, bucket) -> choose() calls
+        self._routes: dict = {}     # (family, backend) -> times chosen
+        _install_winner_hook()
+        _ROUTERS.add(self)
+
+    # -- telemetry in ----------------------------------------------------
+    def observe(self, family: str, backend: str, bucket: tuple,
+                seconds: float) -> None:
+        """Fold one measured wall-clock sample into the EMA."""
+        k = (family, backend, tuple(bucket))
+        with self._lock:
+            cur = self._ema.get(k)
+            self._ema[k] = (seconds if cur is None
+                            else (1.0 - self.alpha) * cur + self.alpha * seconds)
+            self._obs[k] = self._obs.get(k, 0) + 1
+
+    def seed_prior(self, backend: str, bucket: tuple, seconds: float) -> None:
+        """Record an autotuner-winner latency prior for (backend, bucket)
+        — consulted when a family has no observations of its own yet."""
+        k = (backend, tuple(bucket))
+        with self._lock:
+            cur = self._prior.get(k)
+            self._prior[k] = seconds if cur is None else min(cur, seconds)
+
+    def seed_from_cost(self, family: str, bucket: tuple, cost,
+                       backends: tuple | None = None) -> None:
+        """Seed EMA entries from an analytic `BlockCost` estimate.  The
+        model is target-agnostic, so every backend gets the same prior —
+        it initializes the table (stats/readability, tie ordering) while
+        first-observation exploration still measures each backend."""
+        secs = float(cost.seconds())
+        with self._lock:
+            for be in (backends or self.backends):
+                self._ema.setdefault((family, be, tuple(bucket)), secs)
+
+    # -- routing out -----------------------------------------------------
+    def estimate(self, family: str, backend: str,
+                 bucket: tuple) -> "float | None":
+        with self._lock:
+            est = self._ema.get((family, backend, tuple(bucket)))
+            if est is None:
+                est = self._prior.get((backend, tuple(bucket)))
+            return est
+
+    def choose(self, family: str, bucket: tuple) -> str:
+        """Pick the backend for one call of ``family`` in ``bucket``."""
+        bucket = tuple(bucket)
+        with self._lock:
+            dk = (family, bucket)
+            self._decisions[dk] = self._decisions.get(dk, 0) + 1
+            ranked = []
+            for be in self.backends:
+                if self._obs.get((family, be, bucket), 0) == 0:
+                    # never measured for this family+bucket: explore now
+                    self._routes[(family, be)] = \
+                        self._routes.get((family, be), 0) + 1
+                    return be
+                ranked.append((self._ema[(family, be, bucket)], be))
+            ranked.sort()
+            pick = ranked[0][1]
+            if (len(ranked) > 1 and self.explore_every
+                    and self._decisions[dk] % self.explore_every == 0):
+                pick = ranked[1][1]  # periodic re-measure of the runner-up
+            self._routes[(family, pick)] = \
+                self._routes.get((family, pick), 0) + 1
+            return pick
+
+    def timed(self, family: str, geometry: tuple,
+              run: Callable[[str], Any]) -> Any:
+        """Route one call: choose a backend for ``geometry``'s bucket,
+        run ``run(backend_name)``, block on the result, feed the
+        wall-clock back into the EMA, and return the result.  Calls
+        that triggered driver compiles are NOT folded in — compile cost
+        is amortized by the cache, launch cost is what repeats — so the
+        cold first call per backend leaves its cell unobserved and the
+        next call re-measures it warm."""
+        bucket = bucket_for(geometry)
+        be = self.choose(family, bucket)
+        t0 = time.perf_counter()
+        with dispatch.count_compiles() as cc:
+            out = run(be)
+            jax.block_until_ready(out)
+        if cc.delta == 0:
+            self.observe(family, be, bucket, time.perf_counter() - t0)
+        return out
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> dict:
+        """Route counts + the EMA table (stringified keys, JSON-able)."""
+        with self._lock:
+            return {
+                "backends": list(self.backends),
+                "routes": {f"{fam}->{be}": n
+                           for (fam, be), n in sorted(self._routes.items())},
+                "ema_ms": {f"{fam}|{be}|{bucket}": ema * 1e3
+                           for (fam, be, bucket), ema
+                           in sorted(self._ema.items(), key=repr)},
+                "priors_ms": {f"{be}|{bucket}": p * 1e3
+                              for (be, bucket), p
+                              in sorted(self._prior.items(), key=repr)},
+            }
+
+    def route_table(self) -> dict:
+        """``{(family, bucket): winner}`` snapshot of what `choose` would
+        exploit right now (ignores exploration) — bench/report surface."""
+        with self._lock:
+            fams = {}
+            for (fam, be, bucket), ema in self._ema.items():
+                fams.setdefault((fam, bucket), []).append((ema, be))
+            return {k: min(v)[1] for k, v in fams.items()}
+
+
+def default_router() -> BackendRouter:
+    """Process-wide router shared by ``backend="auto"`` entry points that
+    are not bound to an explicit `ServingRuntime`."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = BackendRouter()
+        return _DEFAULT
+
+
+def set_default_router(router: "BackendRouter | None") -> None:
+    """Swap (or reset with ``None``) the process-wide router — tests."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        _DEFAULT = router
+
+
+def route_expr(expr, router: "BackendRouter | None" = None):
+    """Evaluate one planner DAG with the backend chosen per call.
+
+    The telemetry family is derived from the DAG *structure* (isomorphic
+    expressions share a family, exactly like they share a generated
+    kernel), the bucket from the broadcast geometry — so ``evaluate(
+    backend="auto")`` learns independently per (expression shape,
+    size-bucket) cell.  Entry point for `RTCGArray.evaluate`.
+    """
+    import math
+
+    import repro.core.array as ga
+    from repro.core.cache import stable_hash
+
+    bs = ga._bshape(expr)
+    geometry = ga._row_geometry(bs) if len(bs) >= 2 else \
+        (max(1, math.prod(int(d) for d in bs)),)
+    family = "plan:" + stable_hash(expr.structure())[:8]
+    r = router or default_router()
+    return r.timed(
+        family, geometry,
+        lambda be: ga.RTCGArray(_expr=expr)._evaluate_expr(backend=be))

@@ -5,6 +5,12 @@ gives continuous-batching semantics at prompt granularity (finished
 sequences are replaced at the next prefill boundary).  Per-slot position
 decode (token-granular continuous batching) is scaffolded behind
 `uniform_pos` — see DESIGN.md §5.
+
+Runtime-routed sampling (PR 5, DESIGN.md §9): pass a
+`repro.runtime.ServingRuntime` and temperature sampling computes its
+softmax through the runtime — ONE fused 2-launch row schedule for the
+whole logits block, backend picked per bucket by the latency router,
+and the call recorded into the warm-start manifest.
 """
 
 from __future__ import annotations
@@ -29,11 +35,12 @@ class GenerationResult:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ctx: MeshContext = NULL_CTX,
-                 max_len: int = 512):
+                 max_len: int = 512, runtime=None):
         self.cfg = cfg
         self.params = params
         self.ctx = ctx
         self.max_len = max_len
+        self.runtime = runtime  # optional repro.runtime.ServingRuntime
         self._prefill = jax.jit(
             lambda p, b: transformer.prefill(cfg, p, b, ctx, max_len=max_len))
         self._decode = jax.jit(
@@ -42,6 +49,11 @@ class Engine:
     def _sample(self, logits, key, temperature: float):
         if temperature == 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self.runtime is not None and not isinstance(logits, jax.core.Tracer):
+            # runtime-routed path: RTCG softmax over the concrete logits
+            # block (2 generated launches, auto-routed backend) + per-row
+            # host-side categorical draw
+            return self.runtime.sample(logits, key, temperature)
         return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
 
     def generate(self, prompts: np.ndarray, steps: int, *, temperature: float = 0.0,
@@ -67,23 +79,68 @@ class Engine:
 
 
 @dataclass
+class ServedResult:
+    """One finished request, mapped back to its submitter.
+
+    ``prompt`` is the *original* unpadded prompt (the engine left-pads a
+    block to its longest member; that padding never leaks out here),
+    ``tokens`` the generated continuation, ``padded_len`` the block
+    width this request was actually served at.
+    """
+
+    request_id: int
+    prompt: np.ndarray
+    prompt_len: int
+    tokens: np.ndarray
+    padded_len: int = 0
+
+    @property
+    def sequence(self) -> np.ndarray:
+        """Original prompt + generated tokens, padding stripped."""
+        return np.concatenate([np.asarray(self.prompt, np.int32),
+                               np.asarray(self.tokens, np.int32)])
+
+
+@dataclass
 class RequestQueue:
     """Prompt-granular continuous batching: keeps the static batch full by
-    refilling finished slots from a pending queue between generate calls."""
-    pending: list = field(default_factory=list)
-    done: list = field(default_factory=list)
+    refilling finished slots from a pending queue between generate calls.
 
-    def submit(self, prompt: np.ndarray):
-        self.pending.append(prompt)
+    Requests carry per-request ids and original prompt lengths through
+    `run` (PR 5): ``done`` holds `ServedResult` records instead of bare
+    padded rows in pop order, so a caller can map each result back to
+    its submitter (`result_for`) and read padding-free sequences."""
+    pending: list = field(default_factory=list)   # (request_id, prompt)
+    done: list = field(default_factory=list)      # ServedResult
+    _next_id: int = 0
 
-    def run(self, engine: Engine, batch_size: int, steps: int, pad_id: int = 0):
+    def submit(self, prompt: np.ndarray, request_id: "int | None" = None) -> int:
+        """Queue one prompt; returns the id its result will carry."""
+        if request_id is None:
+            request_id = self._next_id
+        self._next_id = max(self._next_id, request_id) + 1
+        self.pending.append((request_id, np.asarray(prompt, np.int32)))
+        return request_id
+
+    def run(self, engine: Engine, batch_size: int, steps: int, pad_id: int = 0,
+            temperature: float = 0.0, seed: int = 0):
         while self.pending:
             block = [self.pending.pop(0) for _ in range(min(batch_size, len(self.pending)))]
-            S = max(len(p) for p in block)
+            S = max(len(p) for _, p in block)
             arr = np.full((len(block), S), pad_id, np.int32)
-            for i, p in enumerate(block):
+            for i, (_, p) in enumerate(block):
                 arr[i, S - len(p):] = p   # left-pad
-            res = engine.generate(arr, steps)
-            for i in range(len(block)):
-                self.done.append(res.tokens[i])
+            res = engine.generate(arr, steps, temperature=temperature,
+                                  seed=seed)
+            for i, (rid, p) in enumerate(block):
+                self.done.append(ServedResult(
+                    request_id=rid, prompt=p, prompt_len=len(p),
+                    tokens=np.asarray(res.tokens[i]), padded_len=S))
         return self.done
+
+    def result_for(self, request_id: int) -> "ServedResult | None":
+        """Look a finished request up by the id `submit` returned."""
+        for r in self.done:
+            if r.request_id == request_id:
+                return r
+        return None

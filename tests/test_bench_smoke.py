@@ -90,6 +90,39 @@ def test_rmsnorm_suite_emits_json(tmp_path):
     assert rows["rmsnorm.b8x512.pallas"]["us_per_call"] > 0
 
 
+@pytest.mark.slow
+def test_serving_suite_emits_json(tmp_path):
+    """Serving-runtime smoke (PR 5): BENCH_serving.json carries the
+    coalesced-vs-per-request rows (2 launches vs 2·K, >=1.5x), the
+    auto-vs-pinned routing rows, and the warm-start row whose replay
+    compile count MUST be zero (the suite hard-asserts it too)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_CACHE_DIR"] = str(tmp_path / "cache")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "serving",
+         "--repeats", "1", "--batches", "8x512", "--json-dir", str(tmp_path)],
+        cwd=str(REPO), env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+
+    payload = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    coal = rows["serving.k8x512.coalesced"]
+    per = rows["serving.k8x512.per_request"]
+    assert coal["kernels_launched"] == 2
+    assert per["kernels_launched"] == 2 * 8
+    assert coal["coalesce_factor"] == 8.0
+    assert coal["gate"] is True and "speedup" in coal
+    auto = rows["serving.k8x512.auto"]
+    assert auto["backend"] == "auto" and auto["routed_to"] in ("pallas", "xla")
+    assert "serving.k8x512.pinned.pallas" in rows
+    assert "serving.k8x512.pinned.xla" in rows
+    warm = rows["serving.k8x512.warmstart"]
+    assert warm["replay_compiles"] == 0          # the warmup-leg contract
+    assert warm["cold_compiles"] > 0
+    assert warm["manifest_entries"] >= 1
+
+
 def test_compare_rows_gate():
     """`benchmarks.run --compare` contract: fused rows regressing >tol
     fail, baselines and one-sided rows don't."""
@@ -129,3 +162,24 @@ def test_compare_rows_gate():
                        "speedup": 5.0, "kernels_launched": 4}]}
     probs = compare_rows(new_l, old_l, tol=10.0)
     assert len(probs) == 1 and "schedule regressed" in probs[0]
+    # gate=true rows participate without the .fused naming convention
+    # (BENCH_serving.json's coalesced/auto rows, PR 5) — speedup AND
+    # launch-schedule checks both apply; ungated serving rows never gate
+    old_s = {"rows": [
+        {"name": "serving.k16x4096.coalesced", "us_per_call": 100.0,
+         "speedup": 2.0, "kernels_launched": 2, "gate": True},
+        {"name": "serving.k16x4096.per_request", "us_per_call": 200.0},
+    ]}
+    regressed_s = {"rows": [
+        {"name": "serving.k16x4096.coalesced", "us_per_call": 100.0,
+         "speedup": 1.2, "kernels_launched": 2, "gate": True},
+        {"name": "serving.k16x4096.per_request", "us_per_call": 9000.0},
+    ]}
+    probs = compare_rows(regressed_s, old_s, tol=0.20)
+    assert len(probs) == 1 and "coalesced" in probs[0]
+    desched = {"rows": [
+        {"name": "serving.k16x4096.coalesced", "us_per_call": 100.0,
+         "speedup": 2.0, "kernels_launched": 32, "gate": True}]}
+    probs = compare_rows(desched, old_s, tol=10.0)
+    assert len(probs) == 1 and "schedule regressed" in probs[0]
+    assert compare_rows(old_s, old_s) == []

@@ -1,0 +1,197 @@
+"""Concurrency tests for the shared caches and counters the serving
+runtime leans on (PR 5).
+
+The coalescing executor flushes from a worker thread while request
+threads keep submitting and other code paths evaluate plans directly —
+so the shared driver `LRUCache` (`get_or_create` under eviction
+pressure) and the backend-keyed compile/launch counters must be
+race-free.  These tests hammer exactly those two surfaces.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.core.array as ga
+from repro.core import dispatch
+from repro.core.cache import LRUCache
+
+rng = np.random.default_rng(17)
+
+
+def _run_threads(n, target):
+    errors: list = []
+
+    def wrap(i):
+        try:
+            target(i)
+        except BaseException as e:  # noqa: BLE001 - surface in main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=wrap, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+
+# ------------------------------------------------------- LRU under load
+def test_lru_get_or_create_threaded_eviction():
+    """8 threads x 200 lookups over 16 keys against a 4-slot LRU: every
+    call must return the value its factory builds for that key (never a
+    neighbour's), with eviction churning constantly."""
+    cache = LRUCache(maxsize=4)
+
+    def target(tid):
+        r = np.random.default_rng(tid)
+        for _ in range(200):
+            k = int(r.integers(0, 16))
+            val = cache.get_or_create(("key", k), lambda k=k: ("value", k))
+            assert val == ("value", k)
+
+    _run_threads(8, target)
+    stats = cache.stats()
+    assert stats["size"] <= 4
+    assert stats["evictions"] > 0          # pressure was real
+    assert stats["hits"] + stats["misses"] >= 8 * 200
+
+
+def test_lru_resize_while_hammered():
+    cache = LRUCache(maxsize=32)
+    stop = threading.Event()
+
+    def churn(tid):
+        r = np.random.default_rng(tid)
+        while not stop.is_set():
+            k = int(r.integers(0, 64))
+            assert cache.get_or_create(k, lambda k=k: k * 3) == k * 3
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for size in (16, 4, 64, 2, 8):
+            cache.resize(size)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert len(cache) <= 8
+
+
+# ------------------------------------- planner under driver-cache churn
+def test_threaded_plans_share_driver_cache_under_eviction():
+    """Concurrent plan evaluations on BOTH backends against a shrunken
+    shared driver cache: evictions force rebuilds mid-traffic and every
+    thread must still get numerically correct results — the runtime
+    executor's flush path depends on exactly this property."""
+    cache = dispatch.driver_cache()
+    old_size = cache.maxsize
+    cache.resize(4)                       # brutal eviction pressure
+    try:
+        sizes = (128, 384, 640, 1152)     # distinct buckets
+
+        def target(tid):
+            n = sizes[tid % len(sizes)]
+            be = ("pallas", "xla")[tid % 2]
+            # per-thread Generator: np Generators are not thread-safe
+            x = np.random.default_rng(tid).standard_normal(
+                (2, n)).astype(np.float32)
+            for _ in range(4):
+                out = ga.softmax(ga.RTCGArray(jnp.asarray(x)),
+                                 stable=True).evaluate(backend=be).value
+                ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=-1))
+                np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+        _run_threads(8, target)
+        assert len(cache) <= 4
+    finally:
+        cache.resize(old_size)
+
+
+# -------------------------------------------- counters under contention
+def test_backend_keyed_counters_exact_under_contention():
+    """Launch/compile counters are lock-protected per backend tag: N
+    threads x M records must sum exactly — the 2-vs-2·K coalescing
+    assertions are meaningless if counts can be lost to races."""
+    T, M = 8, 250
+    launches0 = dispatch.launch_counts()
+    compiles0 = dispatch.compile_counts()
+
+    def target(tid):
+        be = ("pallas", "xla")[tid % 2]
+        for j in range(M):
+            dispatch.record_launch(be)
+            # distinct keys so every get_or_build is a countable build
+            dispatch.get_or_build(("contention", tid, j), lambda: object(),
+                                  backend=be)
+
+    _run_threads(T, target)
+    launches1 = dispatch.launch_counts()
+    compiles1 = dispatch.compile_counts()
+    for be in ("pallas", "xla"):
+        assert launches1.get(be, 0) - launches0.get(be, 0) == (T // 2) * M
+        assert compiles1.get(be, 0) - compiles0.get(be, 0) == (T // 2) * M
+
+
+def test_count_contexts_under_concurrent_traffic():
+    """count_launches()/count_compiles() deltas stay consistent while
+    other threads mutate the same counters (they measure process-wide
+    activity; the point is no crash/negative delta under contention)."""
+    stop = threading.Event()
+
+    def noise():
+        while not stop.is_set():
+            dispatch.record_launch("xla")
+
+    t = threading.Thread(target=noise)
+    t.start()
+    try:
+        with dispatch.count_launches() as cl, dispatch.count_compiles() as cc:
+            dispatch.record_launch("pallas")
+        assert cl.delta >= 1 and cl.by_backend.get("pallas", 0) >= 1
+        assert cc.delta == 0
+    finally:
+        stop.set()
+        t.join()
+
+
+def test_compile_listener_hears_concurrent_builds():
+    heard: list = []
+    lock = threading.Lock()
+
+    def listener(key, backend):
+        with lock:
+            heard.append((key, backend))
+
+    dispatch.add_compile_listener(listener)
+    try:
+        def target(tid):
+            for j in range(20):
+                dispatch.get_or_build(("listener", tid, j), lambda: object(),
+                                      backend="pallas")
+
+        _run_threads(4, target)
+    finally:
+        dispatch.remove_compile_listener(listener)
+    assert len(heard) == 80
+    assert all(be == "pallas" for _, be in heard)
+
+
+def test_count_compiles_counts_real_driver_builds():
+    """End-to-end: a cleared dispatch state recompiles inside the
+    context manager; a warm second call compiles nothing."""
+    x = jnp.asarray(rng.standard_normal((2, 200)).astype(np.float32))
+    ga.softmax(ga.RTCGArray(x), stable=True).evaluate(backend="pallas")
+    dispatch.clear()
+    with dispatch.count_compiles() as cold:
+        ga.softmax(ga.RTCGArray(x), stable=True).evaluate(backend="pallas")
+    assert cold.delta >= 1 and "pallas" in cold.by_backend
+    with dispatch.count_compiles() as warm:
+        ga.softmax(ga.RTCGArray(x), stable=True).evaluate(backend="pallas")
+    assert warm.delta == 0

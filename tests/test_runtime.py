@@ -1,0 +1,396 @@
+"""Serving runtime tests (PR 5) — coalescing executor, backend
+auto-router, warm-start manifest, and the runtime-routed serving paths.
+
+The acceptance trio:
+
+  * K concurrent same-bucket softmax requests inside one flush window
+    execute as a 2-launch ``(K, N)`` schedule (via
+    `dispatch.count_launches`), not ``2·K``;
+  * ``backend="auto"`` routes at least one bucket to each backend under
+    recorded telemetry;
+  * `runtime.warmup()` from a persisted manifest yields zero new
+    compiles when the recorded traffic replays.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import runtime as rtm
+from repro.core import autotune, dispatch
+from repro.core.cache import DiskCache
+import repro.core.array as ga
+
+rng = np.random.default_rng(3)
+
+
+@pytest.fixture
+def rt(tmp_path):
+    """Isolated runtime: private router + tmp-dir manifest, generous
+    window, max_batch=8 (tests submit exactly 8 rows so the flush fires
+    deterministically on the last submit, not on a timer)."""
+    r = rtm.ServingRuntime(
+        backend="auto", window=0.25, max_batch=8,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("runtime_manifest", root=tmp_path)))
+    yield r
+    r.close()
+
+
+def _submit_wave(rt_, rows, submit):
+    futs = [None] * len(rows)
+
+    def one(i):
+        futs[i] = submit(rows[i])
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(len(rows))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return [f.result(timeout=120) for f in futs]
+
+
+# ------------------------------------------------ coalescing executor
+def test_coalesced_wave_is_two_launches(rt):
+    """K single-row requests from K threads -> ONE (K, N) flush: 2
+    generated-kernel launches total instead of 2·K."""
+    K, N = 8, 512
+    rows = [rng.standard_normal(N).astype(np.float32) for _ in range(K)]
+    with dispatch.count_launches() as c:
+        outs = _submit_wave(rt, rows, rt.submit_softmax)
+    assert c.delta == 2, c.by_backend
+    ex = rt.executor.stats()
+    assert ex["requests"] == K and ex["flushes"] == 1
+    assert ex["coalesce_factor"] == pytest.approx(K)
+    assert ex["launches"] == 2
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(np.stack(rows)), axis=-1))
+    np.testing.assert_allclose(np.stack([np.asarray(o) for o in outs]),
+                               ref, atol=1e-5)
+
+
+def test_distinct_buckets_do_not_coalesce(rt):
+    """Rows of different lengths form separate batches (separate keys)."""
+    outs = _submit_wave(
+        rt, [rng.standard_normal(256).astype(np.float32) for _ in range(4)]
+        + [rng.standard_normal(512).astype(np.float32) for _ in range(4)],
+        rt.submit_softmax)
+    rt.flush()
+    assert rt.executor.stats()["flushes"] == 2
+    assert outs[0].shape == (256,) and outs[-1].shape == (512,)
+
+
+def test_submit_rejects_batched_operands(rt):
+    with pytest.raises(ValueError, match="single rows"):
+        rt.submit_softmax(np.zeros((2, 64), np.float32))
+
+
+def test_rmsnorm_submissions_coalesce_per_weight(rt):
+    w = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    rows = [rng.standard_normal(128).astype(np.float32) for _ in range(8)]
+    with dispatch.count_launches() as c:
+        outs = _submit_wave(rt, rows, lambda r: rt.submit_rmsnorm(r, w))
+    assert c.delta == 2
+    X = np.stack(rows)
+    ms = np.mean(X * X, axis=-1, keepdims=True)
+    ref = X / np.sqrt(ms + 1e-6) * np.asarray(w)
+    np.testing.assert_allclose(np.stack([np.asarray(o) for o in outs]),
+                               ref, atol=1e-4)
+
+
+def test_sampler_rides_the_softmax_batch(rt):
+    """submit_sample joins the stable-softmax micro-batch; the
+    per-request draw is a post-step, so the flush stays at 2 launches."""
+    K, N = 8, 128
+    rows = [rng.standard_normal(N).astype(np.float32) for _ in range(K)]
+    keys = [jax.random.PRNGKey(i) for i in range(K)]
+    with dispatch.count_launches() as c:
+        toks = _submit_wave(
+            rt, list(range(K)),
+            lambda i: rt.submit_sample(rows[i], keys[i], temperature=0.8))
+    assert c.delta == 2
+    assert all(isinstance(t, int) and 0 <= t < N for t in toks)
+    assert rt.executor.stats()["flushes"] == 1
+
+
+def test_executor_error_fans_out_to_futures(rt):
+    fut = rt.executor.submit("no-such-family", np.zeros(8, np.float32))
+    with pytest.raises(ValueError, match="unknown runtime family"):
+        fut.result(timeout=60)
+
+
+def test_failing_post_step_fails_only_its_own_future(rt):
+    """One request's bad post hook (e.g. a broken sampler key) must not
+    poison the co-batched requests that already have valid results."""
+    def boom(_row):
+        raise RuntimeError("bad sampler key")
+
+    rows = [rng.standard_normal(96).astype(np.float32) for _ in range(4)]
+    futs = [rt.executor.submit("softmax", r, shared={"stable": True},
+                               key_extra=(True,),
+                               post=boom if i == 2 else None)
+            for i, r in enumerate(rows)]
+    rt.flush()
+    with pytest.raises(RuntimeError, match="bad sampler key"):
+        futs[2].result(timeout=60)
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(np.stack(rows)), axis=-1))
+    for i in (0, 1, 3):
+        np.testing.assert_allclose(np.asarray(futs[i].result(timeout=60)),
+                                   ref[i], atol=1e-5)
+
+
+def test_executor_close_rejects_new_work(tmp_path):
+    r = rtm.ServingRuntime(
+        backend="pallas", router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("runtime_manifest", root=tmp_path)))
+    r.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        r.submit_softmax(np.zeros(8, np.float32))
+
+
+# ------------------------------------------------- backend auto-router
+def test_router_routes_buckets_to_different_backends():
+    """The acceptance shape: under recorded telemetry where xla wins the
+    small bucket and pallas the large one, auto routes each bucket to
+    its winner — at least one bucket per backend."""
+    r = rtm.BackendRouter()
+    small, large = (1, 2), (64, 32)
+    for _ in range(3):
+        r.observe("softmax", "xla", small, 0.001)
+        r.observe("softmax", "pallas", small, 0.010)
+        r.observe("softmax", "pallas", large, 0.002)
+        r.observe("softmax", "xla", large, 0.020)
+    assert r.choose("softmax", small) == "xla"
+    assert r.choose("softmax", large) == "pallas"
+    table = r.route_table()
+    assert set(table.values()) == {"xla", "pallas"}
+
+
+def test_router_explores_unmeasured_backends_first():
+    r = rtm.BackendRouter(backends=("pallas", "xla"))
+    b = (4, 4)
+    assert r.choose("f", b) == "pallas"     # nothing measured: first
+    r.observe("f", "pallas", b, 0.001)
+    assert r.choose("f", b) == "xla"        # xla still unmeasured
+    r.observe("f", "xla", b, 0.005)
+    assert r.choose("f", b) == "pallas"     # now exploit the argmin
+
+
+def test_router_periodic_reexploration():
+    r = rtm.BackendRouter(explore_every=5)
+    b = (4, 4)
+    r.observe("f", "pallas", b, 0.001)
+    r.observe("f", "xla", b, 0.005)
+    picks = [r.choose("f", b) for _ in range(10)]
+    assert picks.count("xla") >= 1          # runner-up gets re-measured
+    assert picks.count("pallas") > picks.count("xla")
+
+
+def test_router_seeded_from_autotuner_winners():
+    """`tune_per_bucket` winner hooks seed (backend, bucket) priors that
+    `estimate` falls back to before a family has its own telemetry."""
+    r = rtm.BackendRouter()
+    autotune.notify_winner("eltwise.fused_ab", "xla", (16, 32), 0.0007)
+    autotune.notify_winner("eltwise.fused_ab", "xla", 128, 0.0021)
+    assert r.estimate("anything", "xla", (16, 32)) == pytest.approx(0.0007)
+    assert r.estimate("anything", "xla", (128,)) == pytest.approx(0.0021)
+    assert r.estimate("anything", "pallas", (16, 32)) is None
+
+
+def test_router_seed_from_block_cost():
+    r = rtm.BackendRouter()
+    cost = autotune.BlockCost(flops=1e6, hbm_bytes=1e6, vmem_bytes=1.0, grid=4)
+    r.seed_from_cost("softmax", (8, 8), cost)
+    est = r.estimate("softmax", "pallas", (8, 8))
+    assert est == pytest.approx(cost.seconds())
+    # priors never suppress first-observation exploration
+    assert r.choose("softmax", (8, 8)) == "pallas"
+    r.observe("softmax", "pallas", (8, 8), 0.5)
+    assert r.choose("softmax", (8, 8)) == "xla"
+
+
+def test_evaluate_backend_auto_routes_through_default_router():
+    prev = rtm.set_default_router(rtm.BackendRouter())
+    try:
+        x = rng.standard_normal((4, 256)).astype(np.float32)
+        out = ga.softmax(ga.RTCGArray(jnp.asarray(x)),
+                         stable=True).evaluate(backend="auto").value
+        ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=-1))
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+        routes = rtm.default_router().stats()["routes"]
+        assert sum(routes.values()) == 1
+        assert next(iter(routes)).startswith("plan:")
+    finally:
+        rtm.set_default_router(prev)
+
+
+def test_layers_backend_auto_uses_default_runtime(rt):
+    from repro.models import layers
+
+    prev = rtm.set_default_runtime(rt)
+    try:
+        x = rng.standard_normal((4, 192)).astype(np.float32)
+        out = layers.fused_softmax(x, backend="auto")
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(jax.nn.softmax(jnp.asarray(x), -1)),
+            atol=1e-5)
+        w = rng.standard_normal(192).astype(np.float32)
+        out2 = layers.rtcg_rmsnorm(x, w, backend="auto")
+        ms = np.mean(x * x, axis=-1, keepdims=True)
+        np.testing.assert_allclose(np.asarray(out2),
+                                   x / np.sqrt(ms + 1e-6) * w, atol=1e-4)
+        assert len(rt.manifest) >= 2       # both families recorded
+        assert rt.router.stats()["routes"]
+    finally:
+        rtm.set_default_runtime(prev)
+
+
+def test_get_backend_auto_raises_helpfully():
+    from repro.core import backends
+
+    with pytest.raises(ValueError, match="serving runtime"):
+        backends.get_backend("auto")
+
+
+# ---------------------------------------------- warm-start manifest
+def test_manifest_records_dedup_and_persist(tmp_path):
+    cache = DiskCache("runtime_manifest", root=tmp_path)
+    m = rtm.WarmStartManifest(cache=cache)
+    assert m.record("softmax", (8, 512), "float32", "pallas",
+                    {"stable": True})
+    # same (family, bucket, dtype, backend, params) cell -> dedup
+    assert not m.record("softmax", (8, 512), "float32", "pallas",
+                        {"stable": True})
+    assert m.record("softmax", (8, 512), "float32", "xla", {"stable": True})
+    assert len(m) == 2
+    # a fresh manifest over the same cache sees the persisted doc
+    m2 = rtm.WarmStartManifest(cache=DiskCache("runtime_manifest",
+                                               root=tmp_path))
+    assert len(m2) == 2
+    fams = {e["family"] for e in m2.entries()}
+    assert fams == {"softmax"}
+
+
+def test_warmup_replay_yields_zero_compiles(rt):
+    """The compiler-cache-for-fleets contract: record traffic, simulate a
+    fresh process (drop every compiled driver), warmup() from the
+    manifest — replaying the same traffic compiles NOTHING."""
+    K, N = 8, 384
+    X = np.stack([rng.standard_normal(N).astype(np.float32)
+                  for _ in range(K)])
+
+    def traffic():
+        for _ in range(5):   # enough calls that auto explores BOTH backends
+            rt.softmax(X, stable=True)
+        _submit_wave(rt, list(X), rt.submit_softmax)
+
+    traffic()
+    assert len(rt.manifest) >= 2   # both explored backends recorded
+
+    dispatch.clear()               # fresh-process simulation
+    report = rt.warmup()
+    assert report["replayed"] == report["entries"] == len(rt.manifest)
+    assert report["compiles"] > 0  # warmup itself pays the builds
+    assert not report["errors"]
+    with dispatch.count_compiles() as cc:
+        traffic()
+    assert cc.delta == 0, cc.by_backend
+
+
+def test_warmup_covers_observed_driver_keys(rt):
+    X = np.stack([rng.standard_normal(256).astype(np.float32)
+                  for _ in range(4)])
+    rt.softmax(X, stable=True)
+    dispatch.clear()
+    report = rt.warmup()
+    assert report["covered_keys"] > 0
+    assert report["observed_keys"] >= report["covered_keys"]
+
+
+# -------------------------------------------- runtime-routed serving
+def test_runtime_sample_matches_distribution_shape(rt):
+    logits = rng.standard_normal((4, 64)).astype(np.float32)
+    toks0 = rt.sample(logits, jax.random.PRNGKey(0), temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(toks0),
+                                  np.argmax(logits, axis=-1))
+    toks = rt.sample(logits, jax.random.PRNGKey(1), temperature=0.9)
+    toks_again = rt.sample(logits, jax.random.PRNGKey(1), temperature=0.9)
+    assert toks.shape == (4,) and toks.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(toks_again))
+    assert all(0 <= int(t) < 64 for t in np.asarray(toks))
+
+
+def test_engine_sample_routes_through_runtime(rt):
+    """Engine._sample with a runtime: concrete logits go through the
+    runtime's routed softmax (recorded in the manifest)."""
+    from repro.serving.engine import Engine
+
+    eng = Engine.__new__(Engine)   # sampling needs no model state
+    eng.runtime = rt
+    logits = jnp.asarray(rng.standard_normal((2, 96)).astype(np.float32))
+    before = len(rt.manifest)
+    tok = eng._sample(logits, jax.random.PRNGKey(0), temperature=0.7)
+    assert tok.shape == (2,)
+    assert len(rt.manifest) > before
+    # greedy path ignores the runtime
+    np.testing.assert_array_equal(
+        np.asarray(eng._sample(logits, jax.random.PRNGKey(0), 0.0)),
+        np.argmax(np.asarray(logits), axis=-1))
+
+
+def test_request_queue_ids_and_padding_strip():
+    """RequestQueue carries ids + original prompt lengths: done entries
+    map back to their submitter with padding stripped."""
+    from repro.serving.engine import GenerationResult, RequestQueue
+
+    class FakeEngine:
+        def __init__(self):
+            self.calls = []
+
+        def generate(self, prompts, steps, *, temperature=0.0, seed=0,
+                     extra_batch=None):
+            self.calls.append(np.asarray(prompts))
+            B, S = prompts.shape
+            toks = np.tile(np.arange(steps, dtype=np.int32), (B, 1)) + 100
+            return GenerationResult(toks, steps, S)
+
+    q = RequestQueue()
+    prompts = [np.arange(3, dtype=np.int32) + 1,
+               np.arange(7, dtype=np.int32) + 10,
+               np.arange(5, dtype=np.int32) + 50]
+    ids = [q.submit(p) for p in prompts]
+    assert ids == [0, 1, 2]
+    eng = FakeEngine()
+    done = q.run(eng, batch_size=2, steps=4)
+    assert [r.request_id for r in done] == ids
+    for r, p in zip(done, prompts):
+        assert r.prompt_len == len(p)
+        np.testing.assert_array_equal(r.prompt, p)           # unpadded
+        np.testing.assert_array_equal(r.sequence[:len(p)], p)
+        assert r.sequence.shape == (len(p) + 4,)
+        assert r.padded_len >= r.prompt_len
+    # first block padded to its longest member (7), second block exact
+    assert eng.calls[0].shape == (2, 7) and eng.calls[1].shape == (1, 5)
+    # left-padding really happened for the short prompt of block 0 ...
+    np.testing.assert_array_equal(eng.calls[0][0][:4], 0)
+    # ... and result_for maps ids to results
+    assert q.result_for(ids[1]).prompt_len == 7
+    assert q.result_for(999) is None
+
+
+def test_runtime_stats_shape(rt):
+    rt.softmax(np.stack([rng.standard_normal(128).astype(np.float32)]))
+    st = rt.stats()
+    assert {"backend", "executor", "router", "manifest",
+            "dispatch"} <= set(st)
+    assert st["manifest"]["entries"] >= 1
+    assert "coalesce_factor" in st["executor"]
+    assert "routes" in st["router"]
+    # and the module-level convenience reads the default runtime
+    assert "router" in rtm.stats()
