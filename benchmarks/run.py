@@ -14,6 +14,9 @@
 #             Pallas kernel vs eager baseline
 #   serving — bench_serving:     PR 5 runtime — coalesced vs per-request
 #             dispatch, auto vs pinned backend, cold vs warm start
+#   chaos   — bench_chaos:       PR 6 fault tolerance — availability + p50
+#             under injected faults, fault-free ladder overhead,
+#             serving with one backend fully dead
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
 #
@@ -52,6 +55,16 @@ def compare_rows(fresh: dict, committed: dict, tol: float = 0.20) -> list[str]:
         ref = old.get(name)
         if ref is None:
             continue
+        # availability rows (the chaos suite, PR 6) gate on availability
+        # ALONE, with zero tolerance — a committed 1.0 must stay 1.0 —
+        # and never on wall clock (latency under injected faults is a
+        # property of the fault plan, not a perf regression signal)
+        if "availability" in row:
+            if row["availability"] < ref.get("availability", 1.0):
+                problems.append(
+                    f"{name}: availability {row['availability']:.3f} < "
+                    f"committed {ref.get('availability', 1.0):.3f}")
+            continue
         # the launch schedule is the fusion contract and is noise-free:
         # a fused row that needs MORE launches always fails, whatever tol
         if ("kernels_launched" in row and "kernels_launched" in ref
@@ -89,11 +102,19 @@ def main() -> None:
                     help="directory holding committed BENCH_<suite>.json; "
                          "fail on >tol regression in fused rows")
     ap.add_argument("--compare-tol", type=float, default=0.20)
+    ap.add_argument("--chaos", default="",
+                    help="arm a process-lifetime transient fault plan, e.g. "
+                         "compile:0.05,launch:0.05 (same spec as REPRO_CHAOS)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_copperhead, bench_dgfem, bench_elementwise,
-                            bench_filterbank, bench_model, bench_nn,
-                            bench_rmsnorm, bench_serving, bench_softmax)
+    if args.chaos:
+        from repro.runtime import faults
+        faults.install_env_plan(args.chaos)
+
+    from benchmarks import (bench_chaos, bench_copperhead, bench_dgfem,
+                            bench_elementwise, bench_filterbank, bench_model,
+                            bench_nn, bench_rmsnorm, bench_serving,
+                            bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
     from repro.core import dispatch
@@ -122,6 +143,7 @@ def main() -> None:
         "softmax": lambda repeats: bench_softmax.run(repeats=repeats, **softmax_kwargs),
         "rmsnorm": lambda repeats: bench_rmsnorm.run(repeats=repeats, **rmsnorm_kwargs),
         "serving": lambda repeats: bench_serving.run(repeats=repeats, **serving_kwargs),
+        "chaos": lambda repeats: bench_chaos.run(repeats=repeats, **serving_kwargs),
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }

@@ -919,6 +919,214 @@ def _as_expr(x) -> _Expr:
     raise TypeError(f"cannot mix RTCGArray with {type(x).__name__}")
 
 
+# ------------------------------------------------------- degradation ladder
+#
+# PR 6 (DESIGN.md §10): a planner evaluation must not die because one
+# generated kernel does.  Execution failures walk a ladder of strictly
+# simpler strategies — each rung trades performance for independence
+# from whatever just broke — and every step taken is counted via
+# `dispatch.record_degradation` so slow-paths stay observable:
+#
+#   rung 0  fused schedule on the requested backend   (the normal path)
+#   rung 1  "unfused": every reduction materialized as its own kernel
+#           launch (no multi-accumulator waves, no in-wave chaining)
+#   rung 2  fused schedule on the fallback backend (pallas <-> xla),
+#           with a one-time warning per (family, backend pair)
+#   rung 3  plain-jnp eager interpretation of the DAG — no generated
+#           kernels at all; the availability floor
+#
+# *Planning* errors (unfusable structure, bad axes, no array leaves)
+# propagate unchanged: the ladder only catches *execution* failures —
+# plan first, then launch under the try.
+
+_EAGER_UNARY = {
+    "exp": jnp.exp, "log": jnp.log, "sqrt": jnp.sqrt, "abs": jnp.abs,
+    "sin": jnp.sin, "cos": jnp.cos, "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+}
+_EAGER_REDUCE = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}
+
+_failover_warned: set = set()
+
+
+def _family_of(expr: _Expr) -> str:
+    """Telemetry/breaker family of a DAG — same derivation as
+    `repro.runtime.router.route_expr` so pinned and routed calls feed
+    the same breaker cells."""
+    return "plan:" + stable_hash(expr.structure())[:8]
+
+
+def _bucket_of(expr: _Expr) -> tuple:
+    from repro.runtime.router import bucket_for
+
+    bs = _bshape(expr)
+    geometry = _row_geometry(bs) if len(bs) >= 2 else \
+        (max(1, math.prod(int(d) for d in bs)),)
+    return bucket_for(geometry)
+
+
+def _get_breaker():
+    from repro.runtime.router import default_breaker
+
+    return default_breaker()
+
+
+def _warn_failover(family: str, from_be: str, to_be: str) -> None:
+    import warnings
+
+    k = (family, from_be, to_be)
+    if k in _failover_warned:
+        return
+    _failover_warned.add(k)
+    warnings.warn(
+        f"RTCG backend {from_be!r} is failing for family {family!r}; "
+        f"falling back to {to_be!r} (counted in "
+        "runtime.stats()['degradations'])", RuntimeWarning, stacklevel=4)
+
+
+def _plan_fused(expr: _Expr, backend):
+    if _has_reduce(expr):
+        return ("many", plan_many([expr], backend=backend))
+    return ("one", plan(expr, backend=backend))
+
+
+def _launch_planned(planned):
+    tag, sched = planned
+    return sched.launch()[0] if tag == "many" else sched.launch()
+
+
+def _eval_unfused(expr: _Expr, backend=None) -> jax.Array:
+    """Rung 1: rebuild the DAG materializing every reduction node as its
+    own single-kernel launch (row reduces re-enter as ``(B, 1)``
+    broadcast-row leaves, full reduces as scalars), then launch one
+    epilogue over the reduce-free remainder."""
+    def rebuild(e: _Expr) -> _Expr:
+        if e.op in ("leaf", "scalar"):
+            return e
+        ne = _Expr(e.op, tuple(rebuild(c) for c in e.children),
+                   value=e.value, axis=e.axis)
+        if e.op != "reduce":
+            return ne
+        val = plan_many([ne], backend=backend).launch()[0]
+        if e.axis is not None:
+            v = jnp.asarray(val)
+            return _Expr("leaf", value=v.reshape(v.shape + (1,)))
+        return _Expr("scalar", value=np.asarray(val).item())
+
+    rb = rebuild(expr)
+    if rb.op == "leaf":
+        out = rb.value
+    elif rb.op == "scalar":
+        out = jnp.asarray(rb.value)
+    else:
+        out = plan_many([rb], backend=backend).launch()[0]
+    out = jnp.asarray(out).astype(_dtype_of(expr))
+    target = _shape_of(expr)
+    return out.reshape(target) if tuple(out.shape) != tuple(target) else out
+
+
+def _eval_eager(expr: _Expr) -> jax.Array:
+    """Rung 3: interpret the DAG with plain jnp — no generated kernels,
+    no drivers, no backends; it cannot fail for backend reasons."""
+    def ev(e: _Expr):
+        if e.op in ("leaf", "scalar"):
+            return e.value
+        if e.op == "reduce":
+            fn = _EAGER_REDUCE[e.value]
+            c = jnp.asarray(ev(e.children[0]))
+            return (fn(c, axis=-1, keepdims=True) if e.axis is not None
+                    else fn(c))
+        kids = [ev(c) for c in e.children]
+        if e.op == "neg":
+            return -kids[0]
+        if e.op in _EAGER_UNARY:
+            return _EAGER_UNARY[e.op](jnp.asarray(kids[0]))
+        if e.op == "+":
+            return kids[0] + kids[1]
+        if e.op == "-":
+            return kids[0] - kids[1]
+        if e.op == "*":
+            return kids[0] * kids[1]
+        if e.op == "/":
+            return kids[0] / kids[1]
+        if e.op == "**":
+            return kids[0] ** kids[1]
+        raise ValueError(f"eager interpreter: unknown op {e.op!r}")
+
+    out = jnp.asarray(ev(expr)).astype(_dtype_of(expr))
+    target = _shape_of(expr)
+    return out.reshape(target) if tuple(out.shape) != tuple(target) else out
+
+
+def _evaluate_resilient(expr: _Expr, backend=None, family=None) -> jax.Array:
+    """Evaluate one DAG through the degradation ladder, feeding the
+    process-wide circuit breaker.  ``family`` overrides the breaker/
+    telemetry family (the serving runtime passes ``"softmax"`` etc. so
+    its cells coincide with the router's); default is the structural
+    `_family_of` hash."""
+    from repro.core import backends as _backends
+    from repro.core import dispatch as _dispatch
+
+    be_name = _backends.get_backend(backend).name
+    breaker = _get_breaker()
+    fam = family
+    bucket = None
+
+    # fault-free fast path: until a failure has ever been recorded this
+    # whole block is one boolean check
+    if breaker.active():
+        fam = fam or _family_of(expr)
+        bucket = _bucket_of(expr)
+        if not breaker.available(fam, be_name, bucket):
+            fb = _backends.fallback_backend(be_name)
+            if fb is not None and breaker.available(fam, fb, bucket):
+                # pinned backend's cell is open: steer around it without
+                # paying the doomed attempt
+                _warn_failover(fam, be_name, fb)
+                _dispatch.record_degradation("breaker_skip", fam)
+                breaker.record_failover()
+                be_name = fb
+
+    planned = _plan_fused(expr, be_name)  # planning errors propagate
+    try:
+        out = _launch_planned(planned)
+        if breaker.active():
+            breaker.record_success(fam or _family_of(expr), be_name,
+                                   bucket if bucket is not None
+                                   else _bucket_of(expr))
+        return out
+    except Exception:  # noqa: BLE001 - execution failure: walk the ladder
+        fam = fam or _family_of(expr)
+        bucket = bucket if bucket is not None else _bucket_of(expr)
+        breaker.record_failure(fam, be_name, bucket)
+
+    # the fused plan was structurally valid, so rungs below swallow
+    # everything and keep descending — only the floor may raise
+    if _has_reduce(expr):
+        try:
+            out = _eval_unfused(expr, backend=be_name)
+            _dispatch.record_degradation("unfused", fam)
+            return out
+        except Exception:  # noqa: BLE001
+            pass
+
+    fb = _backends.fallback_backend(be_name)
+    if fb is not None:
+        try:
+            out = _launch_planned(_plan_fused(expr, fb))
+            _warn_failover(fam, be_name, fb)
+            _dispatch.record_degradation("backend_failover", fam)
+            breaker.record_failover()
+            breaker.record_success(fam, fb, bucket)
+            return out
+        except Exception:  # noqa: BLE001
+            breaker.record_failure(fam, fb, bucket)
+
+    out = _eval_eager(expr)
+    _dispatch.record_degradation("eager", fam)
+    return out
+
+
 class RTCGArray:
     """Lazy, device-resident array evaluated through generated fused kernels."""
 
@@ -980,7 +1188,7 @@ class RTCGArray:
     __abs__ = abs
 
     # -- evaluation -------------------------------------------------------
-    def _evaluate_expr(self, backend=None) -> jax.Array:
+    def _evaluate_expr(self, backend=None, family=None) -> jax.Array:
         expr = self._expr
         if expr.op == "leaf":
             return expr.value
@@ -992,19 +1200,20 @@ class RTCGArray:
             from repro.runtime.router import route_expr
 
             return route_expr(expr)
-        if _has_reduce(expr):
-            return plan_many([expr], backend=backend).launch()[0]
-        return plan(expr, backend=backend).launch()
+        return _evaluate_resilient(expr, backend=backend, family=family)
 
-    def evaluate(self, backend=None) -> "RTCGArray":
+    def evaluate(self, backend=None, family=None) -> "RTCGArray":
         """Force the DAG through the planner; ``backend`` pins an
         execution backend for every generated kernel in the schedule
         (default: the process-wide ``REPRO_BACKEND`` selection).
         ``backend="auto"`` routes per call through the serving runtime's
-        latency-telemetry router (DESIGN.md §9.2) instead of pinning."""
+        latency-telemetry router (DESIGN.md §9.2) instead of pinning.
+        Execution failures walk the degradation ladder (DESIGN.md §10);
+        ``family`` overrides the breaker/telemetry family the ladder
+        reports under (the serving runtime passes its own names)."""
         if self._expr.op == "leaf":
             return self
-        return RTCGArray(self._evaluate_expr(backend))
+        return RTCGArray(self._evaluate_expr(backend, family=family))
 
     def get(self) -> np.ndarray:
         return np.asarray(self.evaluate()._expr.value)

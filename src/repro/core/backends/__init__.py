@@ -58,6 +58,21 @@ def active_backend_name() -> str:
     return os.environ.get("REPRO_BACKEND", DEFAULT_BACKEND).lower()
 
 
+def fallback_backend(name: "str | None") -> "str | None":
+    """The failover target for ``name`` (PR 6, DESIGN.md §10): the other
+    half of the paper's CUDA/OpenCL-style pairing when both are
+    registered, else any other registered backend, else ``None``.  The
+    degradation ladder retries a failing pinned backend here before
+    dropping to eager jnp."""
+    key = (name or active_backend_name()).lower()
+    if key == "pallas" and "xla" in _FACTORIES:
+        return "xla"
+    if key == "xla" and "pallas" in _FACTORIES:
+        return "pallas"
+    others = [n for n in sorted(_FACTORIES) if n != key]
+    return others[0] if others else None
+
+
 def get_backend(name: "str | Backend | None" = None) -> Backend:
     """Resolve a backend: an instance passes through, a name looks up the
     registry, ``None`` reads ``REPRO_BACKEND`` (default: pallas)."""
@@ -90,5 +105,5 @@ __all__ = [
     "Backend", "ElementwiseSpec", "ReductionSpec", "ScanSpec",
     "PallasBackend", "XlaBackend", "DEFAULT_BACKEND",
     "register_backend", "available_backends", "active_backend_name",
-    "get_backend", "is_auto",
+    "get_backend", "is_auto", "fallback_backend",
 ]

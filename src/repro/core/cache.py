@@ -69,6 +69,20 @@ def fingerprint_token(backend: str | None = None) -> str:
     return stable_hash(environment_fingerprint(backend))[:16]
 
 
+# Fault-injection probe for the persistent-store paths (PR 6,
+# DESIGN.md §10): ``repro.runtime.faults`` installs `maybe_fail` here.
+# An injected ``cache.read`` fault behaves as an unreadable file (the
+# lookup misses), an injected ``cache.write`` as a failed disk write
+# (the value stays in-memory only) — the same degraded-but-correct
+# semantics the real OSError paths already have.
+_fault_hook = None
+
+
+def set_fault_hook(fn) -> None:
+    global _fault_hook
+    _fault_hook = fn
+
+
 def stable_hash(obj: Any) -> str:
     """Deterministic content hash of a JSON-able object or string/bytes."""
     if isinstance(obj, bytes):
@@ -112,21 +126,44 @@ class DiskCache:
         if not p.exists():
             return default
         try:
+            if _fault_hook is not None:
+                _fault_hook("cache.read", None, key, None, None)
             val = json.loads(p.read_text())
-        except (json.JSONDecodeError, OSError):
+        except (json.JSONDecodeError, ValueError):
+            # Undecodable entry (truncated write from a crashed process,
+            # bit rot): quarantine it once instead of re-parsing the
+            # same broken bytes on every lookup.  ``<key>.corrupt`` is
+            # kept for post-mortems; the slot reads as a miss and the
+            # next `put` recreates it cleanly.
+            self._quarantine(p)
+            return default
+        except Exception:  # noqa: BLE001 - OSError or an injected read fault
             return default
         with self._lock:
             self._mem[key] = val
         return val
 
+    def _quarantine(self, p: Path) -> None:
+        try:
+            os.replace(p, p.with_suffix(".corrupt"))
+        except OSError:  # pragma: no cover - already gone / perms
+            pass
+
     def put(self, key: str, value: Any) -> None:
         with self._lock:
             self._mem[key] = value
         p = self._path(key)
-        fd, tmp = tempfile.mkstemp(dir=str(self.root), suffix=".tmp")
+        try:
+            if _fault_hook is not None:
+                _fault_hook("cache.write", None, key, None, None)
+            fd, tmp = tempfile.mkstemp(dir=str(self.root), suffix=".tmp")
+        except Exception:  # noqa: BLE001 - injected write fault: stay in-mem
+            return
         try:
             with os.fdopen(fd, "w") as f:
                 json.dump(value, f)
+                f.flush()
+                os.fsync(f.fileno())  # tmp durable BEFORE the atomic rename
             os.replace(tmp, p)
         except OSError:  # pragma: no cover - disk full etc.; stay in-memory
             try:

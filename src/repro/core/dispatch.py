@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Any, Callable, Sequence
 
 from repro.core.cache import LRUCache
@@ -64,6 +65,58 @@ _counter_lock = threading.Lock()
 _UNTAGGED = "untagged"  # counter tag when a caller does not name a backend
 _compile_counts: dict[str, int] = {}
 _launch_counts: dict[str, int] = {}
+_degradation_counts: dict[str, int] = {}
+
+# Fault-injection probe (PR 6, DESIGN.md §10).  ``repro.runtime.faults``
+# installs its `maybe_fail` here on import; until then — and whenever no
+# `FaultPlan` is active — the compile/launch paths pay one ``is None``
+# check.  The hook signature is ``(site, backend, family, bucket,
+# index)`` and it *raises* (an ``InjectedFault``) to inject.
+_fault_hook: "Callable | None" = None
+
+# Bounded-retry knobs for *transient* failures (an exception whose
+# ``transient`` attribute is truthy — injected flakes, and any real
+# error a backend marks recoverable).  Read per call so tests can
+# monkeypatch the env.
+_RETRY_BACKOFF_S = 0.0005
+_RETRY_BACKOFF_CAP_S = 0.05
+
+
+def set_fault_hook(fn: "Callable | None") -> None:
+    """Install (or clear) the fault-injection probe — see
+    `repro.runtime.faults`; core never imports the runtime layer."""
+    global _fault_hook
+    _fault_hook = fn
+
+
+def retry_max() -> int:
+    """Max *retries* (attempts - 1) for transient failures at the
+    compile/launch sites; ``REPRO_RETRY_MAX``, default 5 — deep enough
+    that a 5% transient fault rate escapes a call with p ≈ 1.6e-8, so
+    launch-count assertions stay exact under the CI chaos leg."""
+    return max(0, int(os.environ.get("REPRO_RETRY_MAX", "5")))
+
+
+def run_with_retries(fn: Callable[[], Any], *, site: str,
+                     backend: "str | None" = None,
+                     family: "str | None" = None,
+                     bucket: "tuple | None" = None) -> Any:
+    """Run ``fn`` behind the fault probe with bounded exponential-backoff
+    retries for transient failures.  Non-transient exceptions propagate
+    immediately (the degradation ladder and circuit breaker own those);
+    with no hook installed this is a plain call."""
+    if _fault_hook is None:
+        return fn()
+    attempts = retry_max() + 1
+    for k in range(attempts):
+        try:
+            _fault_hook(site, backend, family, bucket, None)
+            return fn()
+        except Exception as e:  # noqa: BLE001 - classified below
+            if not getattr(e, "transient", False) or k >= attempts - 1:
+                raise
+            time.sleep(min(_RETRY_BACKOFF_S * (2 ** k), _RETRY_BACKOFF_CAP_S))
+    raise AssertionError("unreachable")  # pragma: no cover
 
 # Compile listeners (PR 5, DESIGN.md §9.3): the serving runtime's
 # warm-start manifest records every driver build it witnesses, so a
@@ -206,13 +259,22 @@ def driver_cache() -> LRUCache:
 
 
 def get_or_build(key: Any, builder: Callable[[], Callable],
-                 backend: str | None = None) -> Callable:
+                 backend: str | None = None, name: str | None = None,
+                 bucket: "tuple | None" = None) -> Callable:
     """Shared-LRU lookup; on miss, build + count one driver compile
     against ``backend``'s tag.  Callers must put the backend name in
-    ``key`` too — the tag only labels the counter."""
+    ``key`` too — the tag only labels the counter.  ``name``/``bucket``
+    identify the kernel to the fault probe (the ``compile`` site fires
+    *before* the builder runs, so a failed build never half-counts);
+    transient compile faults are absorbed by bounded retries."""
     tag = backend or _UNTAGGED
+
+    def build():
+        return run_with_retries(builder, site="compile", backend=tag,
+                                family=name, bucket=bucket)
+
     return _driver_cache.get_or_create(
-        key, builder, on_create=lambda: _record_compile(tag, key))
+        key, build, on_create=lambda: _record_compile(tag, key))
 
 
 def add_compile_listener(fn: Callable[[Any, str], None]) -> None:
@@ -243,6 +305,32 @@ def record_launch(backend: str | None = None) -> None:
     tag = backend or _UNTAGGED
     with _counter_lock:
         _launch_counts[tag] = _launch_counts.get(tag, 0) + 1
+
+
+def record_degradation(rung: str, family: str | None = None) -> None:
+    """Count one degradation-ladder step (PR 6): ``rung`` is one of
+    ``unfused`` / ``backend_failover`` / ``breaker_skip`` / ``eager``.
+    Counted here (not in the runtime layer) because the ladder lives in
+    the core planner path; ``runtime.stats()["degradations"]`` reads it
+    back so silent slow-paths stay observable."""
+    with _counter_lock:
+        _degradation_counts[rung] = _degradation_counts.get(rung, 0) + 1
+        if family:
+            k = f"{rung}:{family}"
+            _degradation_counts[k] = _degradation_counts.get(k, 0) + 1
+
+
+def degradation_counts() -> dict[str, int]:
+    """Snapshot of rung -> count (plus ``rung:family`` breakdowns)."""
+    with _counter_lock:
+        return dict(_degradation_counts)
+
+
+def degradation_total() -> int:
+    """Total ladder steps taken — routers/runtimes snapshot this around
+    a timed call so degraded latency never poisons a backend's EMA."""
+    with _counter_lock:
+        return sum(n for k, n in _degradation_counts.items() if ":" not in k)
 
 
 def compile_count(backend: str | None = None) -> int:
@@ -337,6 +425,7 @@ def reset_counters() -> None:
     with _counter_lock:
         _compile_counts.clear()
         _launch_counts.clear()
+        _degradation_counts.clear()
 
 
 def clear() -> None:
@@ -351,4 +440,5 @@ def stats() -> dict:
     s["launches"] = launch_count()
     s["compiles_by_backend"] = compile_counts()
     s["launches_by_backend"] = launch_counts()
+    s["degradations"] = degradation_counts()
     return s

@@ -185,8 +185,10 @@ class ElementwiseKernel:
             key,
             lambda: be.elementwise_rows_driver(self.spec, brows=brows,
                                                ncols=ncols, block_rows=br),
-            backend=be.name)
-        outs = drv(b, n, call_args)
+            backend=be.name, name=self.name, bucket=(brows, ncols))
+        outs = dispatch.run_with_retries(
+            lambda: drv(b, n, call_args), site="launch", backend=be.name,
+            family=self.name, bucket=(brows, ncols))
         # each output takes the shape of its template argument
         outs = [o.reshape(call_args[p].shape)
                 for o, p in zip(outs, self._out_positions)]
@@ -209,8 +211,10 @@ class ElementwiseKernel:
             key,
             lambda: be.elementwise_driver(self.spec, bucket=bucket,
                                           block_rows=br),
-            backend=be.name)
-        outs = [o.reshape(shape) for o in drv(n, call_args)]
+            backend=be.name, name=self.name, bucket=(bucket,))
+        outs = [o.reshape(shape) for o in dispatch.run_with_retries(
+            lambda: drv(n, call_args), site="launch", backend=be.name,
+            family=self.name, bucket=(bucket,))]
         dispatch.record_launch(be.name)  # after the driver: failed launches don't count
         return outs[0] if len(outs) == 1 else tuple(outs)
 

@@ -207,8 +207,10 @@ class ReductionKernel:
             key,
             lambda: be.reduction_rows_driver(self.spec, brows=brows,
                                              ncols=ncols, block_rows=br),
-            backend=be.name)
-        out = drv(b, n, call_args)
+            backend=be.name, name=self.name, bucket=(brows, ncols))
+        out = dispatch.run_with_retries(
+            lambda: drv(b, n, call_args), site="launch", backend=be.name,
+            family=self.name, bucket=(brows, ncols))
         dispatch.record_launch(be.name)
         return out
 
@@ -227,8 +229,10 @@ class ReductionKernel:
             key,
             lambda: be.reduction_driver(self.spec, bucket=bucket,
                                         block_rows=br),
-            backend=be.name)
-        out = drv(n, call_args)
+            backend=be.name, name=self.name, bucket=(bucket,))
+        out = dispatch.run_with_retries(
+            lambda: drv(n, call_args), site="launch", backend=be.name,
+            family=self.name, bucket=(bucket,))
         dispatch.record_launch(be.name)  # after the driver: failed launches don't count
         return out
 

@@ -100,8 +100,10 @@ class ScanKernel:
                (grid, bn) if be.block_sensitive else (grid * bn,))
         drv = dispatch.get_or_build(
             key, lambda: be.scan_driver(self.spec, grid=grid, block_n=bn),
-            backend=be.name)
-        out = drv(n, x).reshape(x.shape)
+            backend=be.name, name=self.name, bucket=(grid * bn,))
+        out = dispatch.run_with_retries(
+            lambda: drv(n, x), site="launch", backend=be.name,
+            family=self.name, bucket=(grid * bn,)).reshape(x.shape)
         dispatch.record_launch(be.name)  # after the driver: failed launches don't count
         return out
 

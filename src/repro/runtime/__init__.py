@@ -46,10 +46,16 @@ import numpy as np
 from repro.core import backends as _backends
 from repro.core import dispatch
 from repro.core.backends import is_auto as _is_auto
+from repro.runtime import faults
 from repro.runtime.executor import CoalescingExecutor, RuntimeFuture
 from repro.runtime.manifest import WarmStartManifest
-from repro.runtime.router import (BackendRouter, bucket_for, default_router,
-                                  set_default_router)
+from repro.runtime.router import (BackendRouter, CircuitBreaker, bucket_for,
+                                  default_breaker, default_router,
+                                  set_default_breaker, set_default_router)
+
+# arm the process-lifetime chaos plan, if REPRO_CHAOS asks for one (the
+# CI chaos leg; a no-op otherwise)
+faults.install_env_plan()
 
 _DEFAULT: "ServingRuntime | None" = None
 _DEFAULT_LOCK = threading.Lock()
@@ -87,6 +93,7 @@ class ServingRuntime:
                run, backend: "str | None" = None, record: bool = True):
         bucket = bucket_for(geometry)
         be = self._resolve(family, bucket, backend)
+        d0 = dispatch.degradation_total()
         t0 = time.perf_counter()
         with dispatch.count_compiles() as cc:
             out = run(be)
@@ -96,10 +103,17 @@ class ServingRuntime:
             # cold calls pay one-off driver builds; folding that wall-clock
             # into the EMA would poison the route (compile cost is
             # amortized by the cache, launch cost is what repeats), so
-            # only compile-free calls feed the latency telemetry
-            if cc.delta == 0:
+            # only compile-free calls feed the latency telemetry.
+            # Degraded calls (ladder rungs taken inside `run`, PR 6) are
+            # excluded for the same reason — the measurement belongs to
+            # a fallback path, not to the chosen backend — and are not
+            # recorded in the manifest (a warm start should replay the
+            # healthy configuration, not a broken one).
+            clean = dispatch.degradation_total() == d0
+            if cc.delta == 0 and clean:
                 self.router.observe(family, be, bucket, dt)
-            self.manifest.record(family, geometry, dtype, be, params)
+            if clean:
+                self.manifest.record(family, geometry, dtype, be, params)
         return out
 
     def _run_batch(self, family: str, X, shared: dict,
@@ -113,8 +127,10 @@ class ServingRuntime:
             stable = bool(shared.get("stable", True))
 
             def run(be):
-                return ga.softmax(ga.RTCGArray(X),
-                                  stable=stable).evaluate(backend=be).value
+                # family= keys the ladder's breaker cells consistently
+                # with router.choose ("softmax", not the structural hash)
+                return ga.softmax(ga.RTCGArray(X), stable=stable).evaluate(
+                    backend=be, family=family).value
 
             params = {"stable": stable}
         elif family == "rmsnorm":
@@ -124,7 +140,7 @@ class ServingRuntime:
             def run(be):
                 Xa, W = ga.RTCGArray(X), ga.RTCGArray(w)
                 return (Xa / (((Xa * Xa).mean(axis=-1) + eps).sqrt())
-                        * W).evaluate(backend=be).value
+                        * W).evaluate(backend=be, family=family).value
 
             params = {"eps": eps}
         else:
@@ -177,22 +193,28 @@ class ServingRuntime:
         return jnp.asarray(toks.reshape(L.shape[:-1]), jnp.int32)
 
     # -- coalescing single-row submissions -------------------------------
-    def submit_softmax(self, row, stable: bool = True) -> RuntimeFuture:
+    def submit_softmax(self, row, stable: bool = True,
+                       deadline: "float | None" = None) -> RuntimeFuture:
         """Queue one softmax row; same-bucket rows inside the window
-        flush as ONE ``(K, N)`` 2-launch schedule."""
+        flush as ONE ``(K, N)`` 2-launch schedule.  ``deadline``
+        (seconds) bounds this request's retry budget after a failed
+        flush (PR 6 poison isolation)."""
         return self.executor.submit("softmax", row,
                                     shared={"stable": stable},
-                                    key_extra=(bool(stable),))
+                                    key_extra=(bool(stable),),
+                                    deadline=deadline)
 
-    def submit_rmsnorm(self, row, w, eps: float = 1e-6) -> RuntimeFuture:
+    def submit_rmsnorm(self, row, w, eps: float = 1e-6,
+                       deadline: "float | None" = None) -> RuntimeFuture:
         """Queue one rmsnorm row; coalesces with rows sharing the SAME
         weight vector (identity) and eps."""
         return self.executor.submit(
             "rmsnorm", jnp.asarray(row).astype(jnp.float32),
-            shared={"w": w, "eps": eps}, key_extra=(id(w), float(eps)))
+            shared={"w": w, "eps": eps}, key_extra=(id(w), float(eps)),
+            deadline=deadline)
 
-    def submit_sample(self, logits_row, key,
-                      temperature: float = 1.0) -> RuntimeFuture:
+    def submit_sample(self, logits_row, key, temperature: float = 1.0,
+                      deadline: "float | None" = None) -> RuntimeFuture:
         """Queue one sampler request: the row joins the stable-softmax
         micro-batch (scaled by its temperature at submit so the batch
         stays homogeneous); the per-request categorical draw runs as a
@@ -200,7 +222,8 @@ class ServingRuntime:
         row = jnp.asarray(logits_row) / float(max(temperature, 1e-8))
         return self.executor.submit(
             "softmax", row, shared={"stable": True}, key_extra=(True,),
-            post=lambda probs_row: int(_draw(np.asarray(probs_row), key)))
+            post=lambda probs_row: int(_draw(np.asarray(probs_row), key)),
+            deadline=deadline)
 
     # -- lifecycle / introspection ---------------------------------------
     def warmup(self) -> dict:
@@ -249,6 +272,9 @@ class ServingRuntime:
             "router": self.router.stats(),
             "manifest": {"entries": len(self.manifest)},
             "dispatch": dispatch.stats(),
+            "degradations": dispatch.degradation_counts(),
+            "breaker": self.router.breaker.stats(),
+            "faults": faults.stats(),
         }
 
     def flush(self, wait: bool = True) -> None:
@@ -300,7 +326,8 @@ def stats() -> dict:
 
 __all__ = [
     "ServingRuntime", "CoalescingExecutor", "RuntimeFuture",
-    "BackendRouter", "WarmStartManifest", "bucket_for",
+    "BackendRouter", "CircuitBreaker", "WarmStartManifest", "bucket_for",
     "default_runtime", "set_default_runtime", "default_router",
-    "set_default_router", "warmup", "stats",
+    "set_default_router", "default_breaker", "set_default_breaker",
+    "faults", "warmup", "stats",
 ]

@@ -39,36 +39,49 @@ from repro.core import dispatch
 
 
 class RuntimeFuture:
-    """Single-assignment result slot handed back by `submit`."""
+    """Single-assignment result slot handed back by `submit`.
 
-    __slots__ = ("_event", "_value", "_error")
+    First writer wins: once a result or error lands, later writes are
+    ignored — so `close()` can fail a stuck request and a late worker
+    completion is dropped instead of clobbering the reported error."""
 
-    def __init__(self):
+    __slots__ = ("_event", "_value", "_error", "_family", "_n")
+
+    def __init__(self, family: str = "?", n: int = 0):
         self._event = threading.Event()
         self._value: Any = None
         self._error: "BaseException | None" = None
+        self._family = family
+        self._n = n
 
     def done(self) -> bool:
         return self._event.is_set()
 
     def result(self, timeout: "float | None" = None) -> Any:
         if not self._event.wait(timeout):
-            raise TimeoutError("runtime request still pending")
+            raise TimeoutError(
+                f"runtime request still pending after {timeout}s "
+                f"(family={self._family!r}, row_length={self._n})")
         if self._error is not None:
             raise self._error
         return self._value
 
     def _set(self, value: Any) -> None:
+        if self._event.is_set():
+            return
         self._value = value
         self._event.set()
 
     def _set_error(self, exc: BaseException) -> None:
+        if self._event.is_set():
+            return
         self._error = exc
         self._event.set()
 
 
 class _Batch:
-    __slots__ = ("family", "shared", "deadline", "rows", "posts", "futures")
+    __slots__ = ("family", "shared", "deadline", "rows", "posts", "futures",
+                 "seqs", "deadlines")
 
     def __init__(self, family: str, shared: dict, deadline: float):
         self.family = family
@@ -77,6 +90,8 @@ class _Batch:
         self.rows: list = []
         self.posts: list = []
         self.futures: list[RuntimeFuture] = []
+        self.seqs: list[int] = []       # executor-wide request sequence ids
+        self.deadlines: list = []       # per-request absolute deadlines
 
 
 class CoalescingExecutor:
@@ -99,29 +114,37 @@ class CoalescingExecutor:
         self._cv = threading.Condition()
         self._batches: dict = {}      # coalescing key -> _Batch
         self._inflight = 0
+        self._inflight_batches: list = []  # popped but not yet resolved
         self._closed = False
         self._thread: "threading.Thread | None" = None
+        self._seq = 0                 # request sequence (fault-probe index)
         # counters (under _cv): the coalesce-factor bookkeeping
         self._requests = 0
         self._flushes = 0
         self._launches = 0
         self._max_coalesce = 0
+        self._batch_retries = 0       # flushes that fell back to per-row
+        self._isolated_rows = 0       # rows re-run individually
+        self._row_retries = 0         # individual row attempts beyond first
+        self._row_failures = 0        # futures failed after isolation
 
     # -- submission ------------------------------------------------------
     def submit(self, family: str, row, *, shared: "dict | None" = None,
-               key_extra: tuple = (), post: "Callable | None" = None
-               ) -> RuntimeFuture:
+               key_extra: tuple = (), post: "Callable | None" = None,
+               deadline: "float | None" = None) -> RuntimeFuture:
         """Queue one row for ``family``; rows sharing the coalescing key
         ``(family, len(row), dtype, *key_extra)`` inside one window
         flush as a single ``(K, N)`` schedule.  ``post(row_result)``
         runs on this request's slice of the batch output (the sampler's
-        per-request categorical draw)."""
+        per-request categorical draw).  ``deadline`` (seconds from now)
+        bounds this request's share of any per-row retry budget after a
+        failed flush — it does not cancel a healthy in-flight batch."""
         row = jnp.asarray(row)
         if row.ndim != 1:
             raise ValueError(
                 f"submit coalesces single rows; got shape {row.shape} "
                 "(batched operands go through the runtime directly)")
-        fut = RuntimeFuture()
+        fut = RuntimeFuture(family, int(row.shape[0]))
         key = (family, int(row.shape[0]), str(row.dtype)) + tuple(key_extra)
         with self._cv:
             if self._closed:
@@ -134,6 +157,10 @@ class CoalescingExecutor:
             batch.rows.append(row)
             batch.posts.append(post)
             batch.futures.append(fut)
+            batch.seqs.append(self._seq)
+            batch.deadlines.append(
+                None if deadline is None else time.monotonic() + deadline)
+            self._seq += 1
             self._requests += 1
             self._ensure_thread()
             self._cv.notify_all()
@@ -167,16 +194,23 @@ class CoalescingExecutor:
                     continue
                 batches = [self._batches.pop(k) for k in due]
                 self._inflight += len(batches)
+                self._inflight_batches.extend(batches)
             try:
                 for b in batches:
                     self._flush_batch(b)
             finally:
                 with self._cv:
                     self._inflight -= len(batches)
+                    for b in batches:
+                        try:
+                            self._inflight_batches.remove(b)
+                        except ValueError:
+                            pass
                     self._cv.notify_all()
 
     def _flush_batch(self, batch: _Batch) -> None:
         try:
+            self._probe_rows(batch)  # injected poison fails the flush here
             X = jnp.stack(batch.rows)
             with dispatch.count_launches() as c:
                 out = self._runtime._run_batch(batch.family, X, batch.shared)
@@ -184,9 +218,11 @@ class CoalescingExecutor:
                 self._flushes += 1
                 self._launches += c.delta
                 self._max_coalesce = max(self._max_coalesce, len(batch.rows))
-        except BaseException as e:  # noqa: BLE001 - batch failed: fan out
-            for fut in batch.futures:
-                fut._set_error(e)
+        except BaseException as e:  # noqa: BLE001 - batch failed: isolate
+            # Poison-request isolation (DESIGN.md §10): one bad request
+            # must not take down its K-1 co-travellers, so the batch
+            # falls back to bounded per-row retries.
+            self._retry_rows(batch, e)
             return
         # scatter results; a failing per-request post step (e.g. a bad
         # sampler key) fails ONLY its own future, never co-batched ones
@@ -195,6 +231,62 @@ class CoalescingExecutor:
                 fut._set(post(out[i]) if post is not None else out[i])
             except BaseException as e:  # noqa: BLE001
                 fut._set_error(e)
+
+    def _probe_rows(self, batch: _Batch) -> None:
+        """Fault-injection probe at the ``executor.row`` site, once per
+        request in the batch (``index`` = the request's submit sequence
+        number) — how tests plant a deterministic poison request."""
+        from repro.runtime import faults
+
+        for seq in batch.seqs:
+            faults.maybe_fail("executor.row", family=batch.family, index=seq)
+
+    def _retry_rows(self, batch: _Batch, batch_err: BaseException) -> None:
+        """Re-run a failed flush one row at a time: ``retry_max`` + 1
+        attempts per row with exponential backoff, each row's budget
+        clipped by its own deadline.  A row that never succeeds fails
+        only its own future (seeded with the batch error if nothing
+        more specific happened)."""
+        from repro.runtime import faults
+
+        with self._cv:
+            self._batch_retries += 1
+        attempts = dispatch.retry_max() + 1
+        for i, fut in enumerate(batch.futures):
+            if fut.done():
+                continue
+            with self._cv:
+                self._isolated_rows += 1
+            seq, dl, post = batch.seqs[i], batch.deadlines[i], batch.posts[i]
+            last: BaseException = batch_err
+            for k in range(attempts):
+                if dl is not None and time.monotonic() >= dl:
+                    last = TimeoutError(
+                        f"request deadline exceeded during retry "
+                        f"(family={batch.family!r}, "
+                        f"row_length={int(batch.rows[i].shape[0])})")
+                    break
+                if k:
+                    with self._cv:
+                        self._row_retries += 1
+                    time.sleep(min(0.0005 * (2 ** k), 0.05))
+                try:
+                    faults.maybe_fail("executor.row", family=batch.family,
+                                      index=seq)
+                    row = batch.rows[i].reshape(1, -1)
+                    with dispatch.count_launches() as c:
+                        out = self._runtime._run_batch(
+                            batch.family, row, batch.shared)
+                    with self._cv:
+                        self._launches += c.delta
+                    fut._set(post(out[0]) if post is not None else out[0])
+                    break
+                except BaseException as e:  # noqa: BLE001
+                    last = e
+            if not fut.done():
+                with self._cv:
+                    self._row_failures += 1
+                fut._set_error(last)
 
     # -- control ---------------------------------------------------------
     def flush(self, wait: bool = True, timeout: float = 30.0) -> None:
@@ -213,18 +305,39 @@ class CoalescingExecutor:
                     raise TimeoutError("executor flush timed out")
                 self._cv.wait(min(remaining, 0.1))
 
-    def close(self) -> None:
-        """Flush what is queued, then stop the worker."""
+    def close(self, timeout: float = 30.0, drain: bool = True) -> None:
+        """Stop the worker; no future is ever left unset.  With
+        ``drain`` (default) queued batches still flush first; with
+        ``drain=False`` they are failed immediately.  Whatever remains
+        pending after ``timeout`` — including rows of a flush stuck
+        inside a wedged backend — fails with
+        ``RuntimeError("executor closed")`` (futures are first-writer-
+        wins, so a late worker completion is dropped harmlessly)."""
+        undrained: list = []
         with self._cv:
             self._closed = True
+            if not drain:
+                undrained = list(self._batches.values())
+                self._batches.clear()
             self._cv.notify_all()
             thread = self._thread
+        for b in undrained:
+            for fut in b.futures:
+                fut._set_error(RuntimeError("executor closed"))
         if thread is not None and thread.is_alive():
-            thread.join(timeout=30.0)
+            thread.join(timeout=timeout)
+        with self._cv:
+            leftovers = list(self._batches.values()) + \
+                list(self._inflight_batches)
+            self._batches.clear()
+        for b in leftovers:
+            for fut in b.futures:
+                fut._set_error(RuntimeError("executor closed"))
 
     def stats(self) -> dict:
         """Coalesce-factor counters: K requests per flush at 2 launches
-        each is the whole value proposition, so it is measured."""
+        each is the whole value proposition, so it is measured.  The
+        retry block reports the poison-isolation path (PR 6)."""
         with self._cv:
             return {
                 "requests": self._requests,
@@ -238,4 +351,8 @@ class CoalescingExecutor:
                                          if self._requests else 0.0),
                 "window_s": self.window,
                 "max_batch": self.max_batch,
+                "batch_retries": self._batch_retries,
+                "isolated_rows": self._isolated_rows,
+                "row_retries": self._row_retries,
+                "row_failures": self._row_failures,
             }

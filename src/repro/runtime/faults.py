@@ -1,0 +1,240 @@
+"""Deterministic fault injection — the chaos harness behind PR 6.
+
+A long-running RTCG process fails in a handful of well-defined places:
+the backend *compile* step (the generated source no longer builds), the
+backend *launch* step (a built driver dies on a shape it claimed to
+support), and the persistent-cache *read/write* path (truncated JSON
+after a crash, a full disk).  The fault-tolerance machinery — circuit
+breaker, degradation ladder, poison-row isolation — is only testable if
+those failures can be produced on demand and *reproducibly*.
+
+This module is that switchboard:
+
+  * `FaultRule` matches a named **site** (``compile``, ``launch``,
+    ``cache.read``, ``cache.write``, ``executor.row``) optionally
+    narrowed by backend, family substring, bucket, or request index,
+    and fires either deterministically (``count``: the first N matching
+    probes) or probabilistically (``probability``, drawn from the
+    plan's seeded RNG);
+  * `FaultPlan` holds rules + seed and is a context manager: rules are
+    live only while the plan is active, so **injected faults can never
+    leak outside an active plan** — `maybe_fail` is a no-op when the
+    active stack is empty;
+  * probes reach the core layers through hooks (`dispatch.set_fault_hook`
+    / `cache.set_fault_hook`) installed at import — core stays free of
+    runtime imports and pays nothing until a plan exists;
+  * `install_env_plan` arms a process-lifetime plan from
+    ``REPRO_CHAOS=compile:0.05,launch:0.05`` (the CI chaos leg and the
+    benchmark ``--chaos`` flag).  Env/flag plans default to
+    ``transient=True``: the dispatch layer absorbs those with bounded
+    retries, modelling recoverable flakes, while tests construct
+    persistent (``transient=False``) rules that exercise the breaker
+    and the ladder.
+
+An injected failure raises `InjectedFault` (a ``RuntimeError``); its
+``transient`` attribute is what `dispatch.run_with_retries` keys on.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import threading
+from dataclasses import dataclass, field
+
+from repro.core import cache as _cache
+from repro.core import dispatch as _dispatch
+
+SITES = ("compile", "launch", "cache.read", "cache.write", "executor.row")
+
+
+class InjectedFault(RuntimeError):
+    """A failure produced by an active `FaultPlan` rule."""
+
+    def __init__(self, site: str, detail: str = "", transient: bool = False):
+        self.site = site
+        self.transient = transient
+        super().__init__(
+            f"injected fault at site {site!r}"
+            + (f" ({detail})" if detail else ""))
+
+
+@dataclass
+class FaultRule:
+    """One injection predicate.  ``site`` is required; every other match
+    field narrows it.  ``family`` matches as a substring (kernel names
+    like ``fused_ab12`` and runtime families like ``softmax`` both
+    work); ``bucket`` and ``index`` match exactly when the probe
+    supplies them.  Triggering: ``count`` fires the first N matching
+    probes deterministically; ``probability`` draws from the plan's
+    seeded RNG; neither set means every match faults (a persistently
+    broken site); ``times`` caps total fires in all cases."""
+
+    site: str
+    backend: "str | None" = None
+    family: "str | None" = None
+    bucket: "tuple | None" = None
+    index: "int | None" = None
+    probability: float = 0.0
+    count: int = 0
+    times: "int | None" = None
+    transient: bool = False
+    fired: int = field(default=0, compare=False)
+
+    def matches(self, site, backend, family, bucket, index) -> bool:
+        if site != self.site:
+            return False
+        if self.backend is not None and backend != self.backend:
+            return False
+        if self.family is not None and self.family not in (family or ""):
+            return False
+        if self.bucket is not None and (
+                bucket is None or tuple(bucket) != tuple(self.bucket)):
+            return False
+        if self.index is not None and index != self.index:
+            return False
+        return True
+
+
+class FaultPlan:
+    """A seeded set of `FaultRule`\\ s, active only inside ``with plan:``
+    (or between explicit `activate` / `deactivate` for process-lifetime
+    env plans).  Thread-safe; counters live under the plan lock."""
+
+    def __init__(self, rules, seed: int = 0):
+        self.rules = list(rules)
+        self.seed = int(seed)
+        self._rng = random.Random(self.seed)
+        self._lock = threading.Lock()
+        self._active = False
+        self.checked = 0
+        self.injected: dict = {}  # site -> fires
+
+    # -- lifecycle -------------------------------------------------------
+    def activate(self) -> "FaultPlan":
+        with _STACK_LOCK:
+            if not self._active:
+                self._active = True
+                _ACTIVE.append(self)
+        return self
+
+    def deactivate(self) -> None:
+        with _STACK_LOCK:
+            self._active = False
+            try:
+                _ACTIVE.remove(self)
+            except ValueError:
+                pass
+
+    def __enter__(self) -> "FaultPlan":
+        return self.activate()
+
+    def __exit__(self, *exc) -> None:
+        self.deactivate()
+
+    # -- the probe -------------------------------------------------------
+    def check(self, site, backend, family, bucket, index) -> None:
+        with self._lock:
+            self.checked += 1
+            for rule in self.rules:
+                if not rule.matches(site, backend, family, bucket, index):
+                    continue
+                if rule.times is not None and rule.fired >= rule.times:
+                    continue
+                if rule.count:
+                    fire = rule.fired < rule.count
+                elif rule.probability:
+                    fire = self._rng.random() < rule.probability
+                else:
+                    fire = True  # no trigger spec: every match faults
+                if not fire:
+                    continue
+                rule.fired += 1
+                self.injected[site] = self.injected.get(site, 0) + 1
+                raise InjectedFault(
+                    site,
+                    detail=f"backend={backend} family={family} "
+                           f"bucket={bucket} index={index}",
+                    transient=rule.transient)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"seed": self.seed, "checked": self.checked,
+                    "injected": dict(self.injected)}
+
+    @classmethod
+    def from_spec(cls, spec: str, seed: int = 0,
+                  transient: bool = True) -> "FaultPlan":
+        """Parse ``site[@backend]:probability`` comma-lists, e.g.
+        ``compile:0.05,launch:0.05`` or ``launch@pallas:1.0``."""
+        rules = []
+        for part in (spec or "").split(","):
+            part = part.strip()
+            if not part:
+                continue
+            where, _, prob = part.rpartition(":")
+            if not where:
+                raise ValueError(f"bad chaos spec entry {part!r} "
+                                 "(want site[@backend]:probability)")
+            site, _, backend = where.partition("@")
+            if site not in SITES:
+                raise ValueError(f"unknown fault site {site!r} "
+                                 f"(known: {', '.join(SITES)})")
+            rules.append(FaultRule(site=site, backend=backend or None,
+                                   probability=float(prob),
+                                   transient=transient))
+        return cls(rules, seed=seed)
+
+
+_ACTIVE: "list[FaultPlan]" = []
+_STACK_LOCK = threading.Lock()
+_ENV_PLAN: "FaultPlan | None" = None
+
+
+def maybe_fail(site: str, backend: "str | None" = None,
+               family: "str | None" = None, bucket: "tuple | None" = None,
+               index: "int | None" = None) -> None:
+    """Probe every active plan; raises `InjectedFault` if a rule fires.
+    No-op (one truthiness check) when no plan is active — the invariant
+    that faults never escape a plan's scope."""
+    if not _ACTIVE:
+        return
+    for plan in tuple(_ACTIVE):
+        plan.check(site, backend, family, bucket, index)
+
+
+def active_plans() -> tuple:
+    return tuple(_ACTIVE)
+
+
+def stats() -> dict:
+    """Aggregate stats over the active plans (``runtime.stats()`` leaf)."""
+    plans = tuple(_ACTIVE)
+    agg: dict = {"active_plans": len(plans), "injected": {}}
+    for p in plans:
+        for site, n in p.stats()["injected"].items():
+            agg["injected"][site] = agg["injected"].get(site, 0) + n
+    return agg
+
+
+def install_env_plan(spec: "str | None" = None) -> "FaultPlan | None":
+    """Arm a process-lifetime plan from ``REPRO_CHAOS`` (or an explicit
+    spec — the benchmark ``--chaos`` flag).  Idempotent; returns the
+    armed plan or ``None`` when no spec is present."""
+    global _ENV_PLAN
+    spec = spec if spec is not None else os.environ.get("REPRO_CHAOS", "")
+    if not spec:
+        return _ENV_PLAN
+    if _ENV_PLAN is not None:
+        return _ENV_PLAN
+    _ENV_PLAN = FaultPlan.from_spec(
+        spec, seed=int(os.environ.get("REPRO_CHAOS_SEED", "0")),
+        transient=True).activate()
+    return _ENV_PLAN
+
+
+# Wire the probe into the core layers.  The hooks are plain module
+# globals over there; until this module is imported AND a plan is
+# active, core pays (at most) one ``is None`` / empty-list check.
+_dispatch.set_fault_hook(maybe_fail)
+_cache.set_fault_hook(maybe_fail)

@@ -38,6 +38,25 @@ DOC_KEY = "manifest-v1"
 MAX_OBSERVED_KEYS = 512
 
 
+def _sane_doc(doc) -> tuple[dict, list]:
+    """Best-effort view of a persisted manifest document: a corrupt file
+    already reads as ``{}`` (DiskCache quarantines it), but a well-formed
+    JSON of the wrong *shape* (hand-edited, version drift) must not kill
+    the runtime either.  Non-dict docs/entry-maps collapse to empty;
+    non-dict entry values are dropped.  Malformed-but-dict entries are
+    kept — `replay` reports them per entry in its ``errors`` list."""
+    if not isinstance(doc, dict):
+        return {}, []
+    entries = doc.get("entries", {})
+    if not isinstance(entries, dict):
+        entries = {}
+    observed = doc.get("observed_keys", [])
+    if not isinstance(observed, list):
+        observed = []
+    return ({k: v for k, v in entries.items() if isinstance(v, dict)},
+            list(observed))
+
+
 def entry_key(family: str, geometry: tuple, dtype: str, backend: str,
               params: dict) -> str:
     """Dedup key: bucket (not exact geometry) × everything else — two
@@ -56,9 +75,9 @@ class WarmStartManifest:
         self.cache = cache if cache is not None else DiskCache(NAMESPACE)
         self.doc_key = doc_key
         self._lock = threading.Lock()
-        doc = self.cache.get(self.doc_key) or {}
-        self._entries: dict = dict(doc.get("entries", {}))
-        self._observed: list = list(doc.get("observed_keys", []))
+        entries, observed = _sane_doc(self.cache.get(self.doc_key))
+        self._entries: dict = entries
+        self._observed: list = observed
         self._listening = False
 
     # -- recording -------------------------------------------------------
@@ -104,10 +123,10 @@ class WarmStartManifest:
             observed = list(self._observed)
 
         def merge(doc):
-            doc = doc or {}
-            merged = dict(doc.get("entries", {}))
+            prev_entries, prev_observed = _sane_doc(doc)
+            merged = dict(prev_entries)
             merged.update(entries)
-            seen = list(dict.fromkeys(doc.get("observed_keys", []) + observed))
+            seen = list(dict.fromkeys(prev_observed + observed))
             return {"entries": merged,
                     "observed_keys": seen[-MAX_OBSERVED_KEYS:]}
 
@@ -121,10 +140,10 @@ class WarmStartManifest:
     def reload(self) -> int:
         """Re-read the persisted document (a fresh process's first step);
         returns the entry count."""
-        doc = self.cache.get(self.doc_key) or {}
+        entries, observed = _sane_doc(self.cache.get(self.doc_key))
         with self._lock:
-            self._entries = dict(doc.get("entries", {}))
-            self._observed = list(doc.get("observed_keys", []))
+            self._entries = entries
+            self._observed = observed
             return len(self._entries)
 
     def clear(self) -> None:

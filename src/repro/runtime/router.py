@@ -29,6 +29,7 @@ choose here, time the launch, and `observe` the result back.
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 import weakref
@@ -76,6 +77,133 @@ def _seed_routers_from_winner(name: str, backend: "str | None", bucket: Any,
         router.seed_prior(backend, nb, float(seconds))
 
 
+class CircuitBreaker:
+    """Per-``(family, backend, bucket)`` failure breaker (PR 6,
+    DESIGN.md §10).
+
+    A cell is **closed** (pristine) until `record_failure` accumulates
+    ``threshold`` *consecutive* failures, at which point it **opens**:
+    `available` answers False and routing/evaluation steers around it.
+    After ``cooldown`` seconds an open cell reads as **half-open** —
+    `available` answers True again so the next call probes the backend;
+    a probe failure re-opens it (restarting the cooldown clock), a
+    `record_success` closes it back to pristine.
+
+    Fault-free cost is the point of the design: until the first failure
+    ever recorded, every query is a single attribute check
+    (`active()`), no locks, no key hashing — the serving fast path pays
+    nothing for the bookkeeping.
+
+    Knobs: ``REPRO_BREAKER_THRESHOLD`` (default 3) and
+    ``REPRO_BREAKER_COOLDOWN`` seconds (default 2.0).
+    """
+
+    def __init__(self, threshold: "int | None" = None,
+                 cooldown: "float | None" = None):
+        self.threshold = int(threshold if threshold is not None else
+                             os.environ.get("REPRO_BREAKER_THRESHOLD", "3"))
+        self.cooldown = float(cooldown if cooldown is not None else
+                              os.environ.get("REPRO_BREAKER_COOLDOWN", "2.0"))
+        self._lock = threading.Lock()
+        self._cells: dict = {}  # key -> [consecutive failures, opened_at|None]
+        self._active = False    # any failure ever recorded
+        self._open = 0          # currently-open cells
+        self._failovers = 0     # times a caller reported steering away
+
+    @staticmethod
+    def _key(family: str, backend: str, bucket) -> tuple:
+        return (family, backend, tuple(bucket) if bucket is not None else ())
+
+    # -- feedback in -----------------------------------------------------
+    def record_failure(self, family: str, backend: str, bucket) -> None:
+        k = self._key(family, backend, bucket)
+        with self._lock:
+            self._active = True
+            cell = self._cells.setdefault(k, [0, None])
+            cell[0] += 1
+            if cell[1] is not None:
+                cell[1] = time.monotonic()  # failed probe: restart cooldown
+            elif cell[0] >= self.threshold:
+                cell[1] = time.monotonic()
+                self._open += 1
+
+    def record_success(self, family: str, backend: str, bucket) -> None:
+        """A clean call on this cell: close it back to pristine."""
+        if not self._active:
+            return
+        k = self._key(family, backend, bucket)
+        with self._lock:
+            cell = self._cells.pop(k, None)
+            if cell is not None and cell[1] is not None:
+                self._open -= 1
+
+    def record_failover(self) -> None:
+        with self._lock:
+            self._failovers += 1
+
+    # -- queries out -----------------------------------------------------
+    def active(self) -> bool:
+        """Any failure ever recorded?  False means every cell is closed
+        and callers may skip key construction entirely."""
+        return self._active
+
+    def any_open(self) -> bool:
+        return self._open > 0
+
+    def state(self, family: str, backend: str, bucket) -> str:
+        with self._lock:
+            cell = self._cells.get(self._key(family, backend, bucket))
+            if cell is None or cell[1] is None:
+                return "closed"
+            if time.monotonic() - cell[1] >= self.cooldown:
+                return "half-open"
+            return "open"
+
+    def available(self, family: str, backend: str, bucket) -> bool:
+        """True unless the cell is open and still cooling down; a
+        half-open cell reads available so exactly the next call probes
+        the backend (non-mutating check — probe accounting happens via
+        record_failure/record_success on the call's outcome)."""
+        return self.state(family, backend, bucket) != "open"
+
+    def stats(self) -> dict:
+        with self._lock:
+            now = time.monotonic()
+            return {
+                "threshold": self.threshold,
+                "cooldown_s": self.cooldown,
+                "failovers": self._failovers,
+                "tracked_cells": len(self._cells),
+                "open_cells": {
+                    "|".join(map(str, k)):
+                        ("half-open" if now - cell[1] >= self.cooldown
+                         else "open")
+                    for k, cell in self._cells.items() if cell[1] is not None},
+            }
+
+
+_DEFAULT_BREAKER: "CircuitBreaker | None" = None
+_BREAKER_LOCK = threading.Lock()
+
+
+def default_breaker() -> CircuitBreaker:
+    """Process-wide breaker shared by the router, the serving runtime and
+    the planner's degradation ladder — a backend failing under routed
+    traffic is also skipped by pinned direct calls, and vice versa."""
+    global _DEFAULT_BREAKER
+    with _BREAKER_LOCK:
+        if _DEFAULT_BREAKER is None:
+            _DEFAULT_BREAKER = CircuitBreaker()
+        return _DEFAULT_BREAKER
+
+
+def set_default_breaker(breaker: "CircuitBreaker | None") -> None:
+    """Swap (or reset with ``None``) the process-wide breaker — tests."""
+    global _DEFAULT_BREAKER
+    with _BREAKER_LOCK:
+        _DEFAULT_BREAKER = breaker
+
+
 class BackendRouter:
     """EMA latency table + routing policy over the registered backends.
 
@@ -84,10 +212,12 @@ class BackendRouter:
     """
 
     def __init__(self, backends: tuple = ("pallas", "xla"),
-                 alpha: float = 0.25, explore_every: int = 64):
+                 alpha: float = 0.25, explore_every: int = 64,
+                 breaker: "CircuitBreaker | None" = None):
         self.backends = tuple(backends)
         self.alpha = float(alpha)
         self.explore_every = int(explore_every)
+        self.breaker = breaker or default_breaker()
         self._lock = threading.Lock()
         self._ema: dict = {}        # (family, backend, bucket) -> seconds
         self._obs: dict = {}        # (family, backend, bucket) -> sample count
@@ -137,13 +267,24 @@ class BackendRouter:
             return est
 
     def choose(self, family: str, bucket: tuple) -> str:
-        """Pick the backend for one call of ``family`` in ``bucket``."""
+        """Pick the backend for one call of ``family`` in ``bucket``.
+        Backends whose breaker cell is open are routed around (a
+        half-open cell is eligible again — that call is the probe);
+        when every cell is open the EMA winner still serves, because
+        refusing to route is never better than trying."""
         bucket = tuple(bucket)
+        candidates = self.backends
+        if self.breaker.any_open():
+            avail = tuple(be for be in self.backends
+                          if self.breaker.available(family, be, bucket))
+            if avail and len(avail) < len(self.backends):
+                self.breaker.record_failover()
+            candidates = avail or self.backends
         with self._lock:
             dk = (family, bucket)
             self._decisions[dk] = self._decisions.get(dk, 0) + 1
             ranked = []
-            for be in self.backends:
+            for be in candidates:
                 if self._obs.get((family, be, bucket), 0) == 0:
                     # never measured for this family+bucket: explore now
                     self._routes[(family, be)] = \
@@ -170,11 +311,15 @@ class BackendRouter:
         next call re-measures it warm."""
         bucket = bucket_for(geometry)
         be = self.choose(family, bucket)
+        d0 = dispatch.degradation_total()
         t0 = time.perf_counter()
         with dispatch.count_compiles() as cc:
             out = run(be)
             jax.block_until_ready(out)
-        if cc.delta == 0:
+        # degraded calls (ladder rungs taken inside `run`) are excluded
+        # like compiles: the measured latency belongs to the fallback
+        # path, not to the backend this cell names.
+        if cc.delta == 0 and dispatch.degradation_total() == d0:
             self.observe(family, be, bucket, time.perf_counter() - t0)
         return out
 
@@ -184,6 +329,7 @@ class BackendRouter:
         with self._lock:
             return {
                 "backends": list(self.backends),
+                "breaker": self.breaker.stats(),
                 "routes": {f"{fam}->{be}": n
                            for (fam, be), n in sorted(self._routes.items())},
                 "ema_ms": {f"{fam}|{be}|{bucket}": ema * 1e3
@@ -240,6 +386,9 @@ def route_expr(expr, router: "BackendRouter | None" = None):
         (max(1, math.prod(int(d) for d in bs)),)
     family = "plan:" + stable_hash(expr.structure())[:8]
     r = router or default_router()
+    # the family is passed down so the ladder's breaker cells coincide
+    # with the cells `choose` just consulted
     return r.timed(
         family, geometry,
-        lambda be: ga.RTCGArray(_expr=expr)._evaluate_expr(backend=be))
+        lambda be: ga.RTCGArray(_expr=expr)._evaluate_expr(
+            backend=be, family=family))

@@ -14,6 +14,17 @@ if SRC not in sys.path:
 # themselves (never set globally here — see the dry-run contract).
 
 
+def pytest_configure(config):
+    # CI chaos leg (DESIGN.md §10): REPRO_CHAOS=compile:0.05,launch:0.05
+    # arms a process-lifetime transient fault plan before any test runs;
+    # the whole tier-1 suite must stay green under it.  A no-op when the
+    # variable is unset.
+    if os.environ.get("REPRO_CHAOS"):
+        from repro.runtime import faults
+
+        faults.install_env_plan()
+
+
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 900):
     """Run a python snippet in a subprocess with N host devices."""
     env = dict(os.environ)

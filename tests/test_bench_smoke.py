@@ -123,6 +123,32 @@ def test_serving_suite_emits_json(tmp_path):
     assert warm["manifest_entries"] >= 1
 
 
+@pytest.mark.slow
+def test_chaos_suite_emits_json(tmp_path):
+    """Fault-tolerance smoke (PR 6): BENCH_chaos.json carries
+    availability rows at 0/1/10% injected fault rates (all 1.0 — the
+    suite hard-asserts it), the fault-free ladder-overhead row (<=5%),
+    and the backend-down row (pallas 100% dead, still 100% served)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_CACHE_DIR"] = str(tmp_path / "cache")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "chaos",
+         "--repeats", "1", "--batches", "4x256", "--json-dir", str(tmp_path)],
+        cwd=str(REPO), env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+
+    payload = json.loads((tmp_path / "BENCH_chaos.json").read_text())
+    rows = {r["name"]: r for r in payload["rows"]}
+    for rate in (0, 1, 10):
+        row = rows[f"chaos.k4x256.rate{rate}"]
+        assert row["availability"] == 1.0 and row["gate"] is True
+    assert rows["chaos.k4x256.rate10"]["injected_faults"] > 0
+    assert rows["chaos.k4x256.overhead"]["overhead_frac"] <= 0.05
+    down = rows["chaos.k4x256.backend_down"]
+    assert down["availability"] == 1.0 and down["failovers"] > 0
+
+
 def test_compare_rows_gate():
     """`benchmarks.run --compare` contract: fused rows regressing >tol
     fail, baselines and one-sided rows don't."""
@@ -183,3 +209,15 @@ def test_compare_rows_gate():
     probs = compare_rows(desched, old_s, tol=10.0)
     assert len(probs) == 1 and "schedule regressed" in probs[0]
     assert compare_rows(old_s, old_s) == []
+    # availability rows (chaos suite, PR 6) gate on availability ALONE,
+    # zero tolerance — latency under injected faults never gates
+    old_a = {"rows": [{"name": "chaos.k16x1024.rate10", "us_per_call": 50.0,
+                       "availability": 1.0, "gate": True}]}
+    bad_a = {"rows": [{"name": "chaos.k16x1024.rate10", "us_per_call": 40.0,
+                       "availability": 0.97, "gate": True}]}
+    probs = compare_rows(bad_a, old_a, tol=10.0)
+    assert len(probs) == 1 and "availability" in probs[0]
+    slow_a = {"rows": [{"name": "chaos.k16x1024.rate10",
+                        "us_per_call": 5000.0, "availability": 1.0,
+                        "gate": True}]}
+    assert compare_rows(slow_a, old_a, tol=0.0) == []

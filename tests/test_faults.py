@@ -1,0 +1,505 @@
+"""PR 6 fault-tolerance acceptance: fault injection, circuit breaker,
+backend failover, degradation ladder, poison-row isolation, crash-safe
+caches (DESIGN.md §10)."""
+
+import json
+import threading
+import time
+import warnings
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.array as ga
+from repro import runtime as rtm
+from repro.core import dispatch
+from repro.core.cache import DiskCache
+from repro.models.layers import fused_softmax, rtcg_rmsnorm
+from repro.runtime.faults import (FaultPlan, FaultRule, InjectedFault,
+                                  maybe_fail)
+from repro.runtime.manifest import WarmStartManifest
+from repro.runtime.router import (BackendRouter, CircuitBreaker,
+                                  set_default_breaker)
+
+BACKENDS = ("pallas", "xla")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_breaker():
+    """Each test gets a pristine process-wide breaker and a clean
+    one-time-warning slate; the default is restored afterwards."""
+    set_default_breaker(CircuitBreaker())
+    ga._failover_warned.clear()
+    yield
+    set_default_breaker(None)
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_plans():
+    """These tests assert exact injection behavior of their OWN plans;
+    suspend any ambient plan (the CI chaos leg's REPRO_CHAOS env plan)
+    for the duration and restore it afterwards."""
+    from repro.runtime import faults
+
+    ambient = faults.active_plans()
+    for p in ambient:
+        p.deactivate()
+    yield
+    for p in ambient:
+        p.activate()
+
+
+def _fresh_runtime(tmp_path, K=8, backend="pallas", window=0.25):
+    man = WarmStartManifest(
+        cache=DiskCache("runtime_manifest", root=Path(tmp_path)))
+    return rtm.ServingRuntime(backend=backend, window=window, max_batch=K,
+                              router=BackendRouter(), manifest=man)
+
+
+def _rows(K=8, N=512, seed=0):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randn(N).astype(np.float32)) for _ in range(K)]
+
+
+# --------------------------------------------------------------- FaultPlan
+def test_count_rule_fires_deterministically():
+    with FaultPlan([FaultRule(site="launch", count=2)]) as plan:
+        for _ in range(2):
+            with pytest.raises(InjectedFault):
+                maybe_fail("launch", backend="pallas")
+        maybe_fail("launch", backend="pallas")  # exhausted: silent
+    assert plan.stats()["injected"] == {"launch": 2}
+
+
+def test_probability_rule_is_seeded():
+    def pattern(seed):
+        fires = []
+        with FaultPlan([FaultRule(site="launch", probability=0.5)],
+                       seed=seed):
+            for _ in range(64):
+                try:
+                    maybe_fail("launch")
+                    fires.append(0)
+                except InjectedFault:
+                    fires.append(1)
+        return fires
+
+    assert pattern(7) == pattern(7)
+    assert pattern(7) != pattern(8)
+    assert 10 < sum(pattern(7)) < 54
+
+
+def test_rule_matching_narrows():
+    rule = FaultRule(site="launch", backend="pallas", family="softmax",
+                     index=3)
+    with FaultPlan([rule]):
+        maybe_fail("launch", backend="xla", family="softmax", index=3)
+        maybe_fail("launch", backend="pallas", family="rmsnorm", index=3)
+        maybe_fail("launch", backend="pallas", family="softmax", index=4)
+        maybe_fail("compile", backend="pallas", family="softmax", index=3)
+        with pytest.raises(InjectedFault):
+            maybe_fail("launch", backend="pallas", family="fused_softmax_x",
+                       index=3)  # family matches as substring
+
+
+def test_faults_never_leak_outside_plan():
+    with FaultPlan([FaultRule(site="launch")]):
+        with pytest.raises(InjectedFault):
+            maybe_fail("launch")
+    maybe_fail("launch")  # no active plan: the probe is inert
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 256).astype("f4"))
+    d0 = dispatch.degradation_total()
+    out = ga.softmax(ga.RTCGArray(x), stable=True).evaluate(
+        backend="pallas").value
+    np.testing.assert_allclose(out, jax.nn.softmax(x, axis=-1), atol=1e-5)
+    assert dispatch.degradation_total() == d0
+
+
+def test_env_spec_parsing():
+    plan = FaultPlan.from_spec("compile:0.05,launch@pallas:1.0")
+    assert [(r.site, r.backend, r.probability, r.transient)
+            for r in plan.rules] == [("compile", None, 0.05, True),
+                                     ("launch", "pallas", 1.0, True)]
+    with pytest.raises(ValueError):
+        FaultPlan.from_spec("warp:0.1")
+
+
+def test_transient_faults_absorbed_with_exact_counts():
+    """The CI chaos contract: probabilistic transient compile/launch
+    faults are retried away inside dispatch, so launch-count assertions
+    (and results) are unchanged and no degradation is recorded."""
+    x = jnp.asarray(np.random.RandomState(1).randn(8, 512).astype("f4"))
+    ref = jax.nn.softmax(x, axis=-1)
+    d0 = dispatch.degradation_total()
+    with FaultPlan([FaultRule(site="launch", probability=0.2,
+                              transient=True),
+                    FaultRule(site="compile", probability=0.2,
+                              transient=True)], seed=3):
+        for _ in range(10):
+            with dispatch.count_launches() as c:
+                out = ga.softmax(ga.RTCGArray(x), stable=True).evaluate(
+                    backend="pallas").value
+            assert c.delta == 2
+            np.testing.assert_allclose(out, ref, atol=1e-5)
+    assert dispatch.degradation_total() == d0
+
+
+# --------------------------------------------------------- CircuitBreaker
+def test_breaker_state_machine():
+    b = CircuitBreaker(threshold=3, cooldown=0.15)
+    cell = ("softmax", "pallas", (8, 4))
+    assert b.state(*cell) == "closed" and not b.active()
+    b.record_failure(*cell)
+    b.record_failure(*cell)
+    assert b.state(*cell) == "closed" and b.active() and not b.any_open()
+    b.record_failure(*cell)  # threshold: open
+    assert b.state(*cell) == "open"
+    assert not b.available(*cell) and b.any_open()
+    time.sleep(0.17)
+    assert b.state(*cell) == "half-open"  # cooldown elapsed: probe allowed
+    assert b.available(*cell)
+
+
+def test_breaker_probe_failure_reopens_success_closes():
+    b = CircuitBreaker(threshold=1, cooldown=0.1)
+    cell = ("softmax", "xla", (8, 4))
+    b.record_failure(*cell)
+    assert b.state(*cell) == "open"
+    time.sleep(0.12)
+    assert b.state(*cell) == "half-open"
+    b.record_failure(*cell)  # failed probe: cooldown restarts
+    assert b.state(*cell) == "open"
+    time.sleep(0.12)
+    b.record_success(*cell)  # successful probe: pristine closed
+    assert b.state(*cell) == "closed" and not b.any_open()
+    assert b.stats()["open_cells"] == {}
+
+
+def test_breaker_success_resets_consecutive_count():
+    b = CircuitBreaker(threshold=3, cooldown=60.0)
+    cell = ("f", "pallas", (1,))
+    for _ in range(2):
+        b.record_failure(*cell)
+    b.record_success(*cell)  # streak broken
+    for _ in range(2):
+        b.record_failure(*cell)
+    assert b.state(*cell) == "closed"  # 2 + 2 non-consecutive never opens
+
+
+@pytest.mark.parametrize("broken", BACKENDS)
+def test_router_routes_around_open_cell(broken):
+    other = "xla" if broken == "pallas" else "pallas"
+    b = CircuitBreaker(threshold=1, cooldown=60.0)
+    r = BackendRouter(breaker=b)
+    bucket = (8, 4)
+    # give both cells observations so choose() exploits, not explores
+    for be in BACKENDS:
+        r.observe("softmax", be, bucket, 0.001 if be == broken else 0.002)
+    assert r.choose("softmax", bucket) == broken  # EMA winner pre-failure
+    b.record_failure("softmax", broken, bucket)
+    for _ in range(8):
+        assert r.choose("softmax", bucket) == other
+    # every cell open: the router still serves (EMA winner)
+    b.record_failure("softmax", other, bucket)
+    assert r.choose("softmax", bucket) in BACKENDS
+
+
+# ------------------------------------------------------ degradation ladder
+def test_ladder_unfused_rung_counts_and_is_correct():
+    x = jnp.asarray(np.random.RandomState(2).randn(8, 384).astype("f4"))
+    ref = jax.nn.softmax(x, axis=-1)
+    before = dispatch.degradation_counts().get("unfused", 0)
+    # exactly one persistent launch failure: the fused wave dies once,
+    # the per-kernel rebuild (rule exhausted) succeeds on the same backend
+    with FaultPlan([FaultRule(site="launch", backend="pallas", count=1)]):
+        out = ga.softmax(ga.RTCGArray(x), stable=True).evaluate(
+            backend="pallas").value
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    assert dispatch.degradation_counts().get("unfused", 0) == before + 1
+
+
+@pytest.mark.parametrize("broken", BACKENDS)
+def test_ladder_pinned_backend_failover(broken):
+    other = "xla" if broken == "pallas" else "pallas"
+    x = jnp.asarray(np.random.RandomState(3).randn(4, 320).astype("f4"))
+    ref = jax.nn.softmax(x, axis=-1)
+    before = dispatch.degradation_counts().get("backend_failover", 0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        with FaultPlan([FaultRule(site="launch", backend=broken),
+                        FaultRule(site="compile", backend=broken)]):
+            out = fused_softmax(x, backend=broken)
+            out2 = fused_softmax(x, backend=broken)  # warning only once
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+    np.testing.assert_allclose(out2, ref, atol=1e-5)
+    assert dispatch.degradation_counts().get("backend_failover", 0) \
+        >= before + 2
+    failover_warnings = [rec for rec in w
+                         if f"falling back to {other!r}" in str(rec.message)]
+    assert len(failover_warnings) == 1
+
+
+def test_ladder_eager_floor():
+    x = jnp.asarray(np.random.RandomState(4).randn(4, 288).astype("f4"))
+    w = jnp.asarray(np.random.RandomState(5).randn(288).astype("f4"))
+    before = dispatch.degradation_counts().get("eager", 0)
+    with FaultPlan([FaultRule(site="launch"), FaultRule(site="compile")]):
+        s = fused_softmax(x, backend="pallas")
+        r = rtcg_rmsnorm(x, w, backend="pallas")
+    np.testing.assert_allclose(s, jax.nn.softmax(x, axis=-1), atol=1e-5)
+    ref_r = (x / jnp.sqrt((x * x).mean(-1, keepdims=True) + 1e-6)) * w
+    np.testing.assert_allclose(r, ref_r, atol=1e-4)
+    assert dispatch.degradation_counts().get("eager", 0) >= before + 2
+
+
+def test_planner_contract_errors_still_raise():
+    """The ladder handles *execution* failures; structurally invalid
+    expressions must keep raising their planner errors."""
+    a = ga.RTCGArray(np.random.RandomState(6).randn(4, 64).astype("f4"))
+    with pytest.raises(NotImplementedError):
+        a.sum(axis=0)  # only axis=None / axis=-1 are fusable
+
+
+@pytest.mark.parametrize("broken", BACKENDS)
+def test_runtime_survives_fully_disabled_backend(broken, tmp_path):
+    """Acceptance: a fully broken backend (compile+launch faults) still
+    serves the quickstart softmax/rmsnorm/sampling paths through the
+    other backend, with the failovers recorded in runtime.stats()."""
+    other = "xla" if broken == "pallas" else "pallas"
+    set_default_breaker(CircuitBreaker(threshold=2, cooldown=3600.0))
+    rt = _fresh_runtime(tmp_path, backend=broken)
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(4, 256).astype(np.float32))
+    w = jnp.asarray(rng.randn(256).astype(np.float32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        with FaultPlan([FaultRule(site="launch", backend=broken),
+                        FaultRule(site="compile", backend=broken)]):
+            for _ in range(3):
+                s = rt.softmax(x)
+            r = rt.rmsnorm(x, w)
+            tok = rt.sample(x, jax.random.PRNGKey(0), temperature=1.0)
+    np.testing.assert_allclose(s, jax.nn.softmax(x, axis=-1), atol=1e-5)
+    ref_r = (x / jnp.sqrt((x * x).mean(-1, keepdims=True) + 1e-6)) * w
+    np.testing.assert_allclose(r, ref_r, atol=1e-4)
+    assert tok.shape == (4,)
+    st = rt.stats()
+    degr = st["degradations"]
+    assert degr.get("backend_failover", 0) >= 1
+    assert degr.get("backend_failover", 0) + degr.get("breaker_skip", 0) >= 4
+    assert st["breaker"]["failovers"] >= 1
+    # the breaker opened the broken backend's softmax cell
+    assert any(f"|{broken}|" in k for k in st["breaker"]["open_cells"])
+    rt.close()
+
+
+# ------------------------------------------------- executor fault handling
+def test_poison_row_isolation(tmp_path):
+    """K=8 coalesced flush with one injected poison request: the other
+    7 complete with correct results, only the poisoned future errors."""
+    rt = _fresh_runtime(tmp_path, K=8)
+    rows = _rows(K=8)
+    futs = [None] * 8
+    with FaultPlan([FaultRule(site="executor.row", family="softmax",
+                              index=3)]):
+        def submit(i):
+            futs[i] = rt.submit_softmax(rows[i])
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        # seqs are assigned under the executor lock in submit order; the
+        # poisoned *request* is whichever thread drew sequence id 3
+        results = []
+        for f in futs:
+            try:
+                results.append(("ok", f.result(timeout=120)))
+            except InjectedFault as e:
+                results.append(("err", e))
+    oks = [r for r in results if r[0] == "ok"]
+    errs = [r for r in results if r[0] == "err"]
+    assert len(oks) == 7 and len(errs) == 1
+    st = rt.executor.stats()
+    assert st["batch_retries"] == 1
+    assert st["isolated_rows"] == 8
+    assert st["row_failures"] == 1
+    rt.close()
+
+
+def test_poisoned_rows_results_still_correct(tmp_path):
+    rt = _fresh_runtime(tmp_path, K=4)
+    rows = _rows(K=4, N=256, seed=8)
+    ref = np.asarray(jax.nn.softmax(jnp.stack(rows), axis=-1))
+    with FaultPlan([FaultRule(site="executor.row", family="softmax",
+                              index=0)]):
+        futs = [rt.submit_softmax(r) for r in rows]
+        with pytest.raises(InjectedFault):
+            futs[0].result(timeout=120)
+        for i in (1, 2, 3):
+            np.testing.assert_allclose(futs[i].result(timeout=120),
+                                       ref[i], atol=1e-5)
+    rt.close()
+
+
+def test_transient_executor_fault_retries_to_success(tmp_path):
+    """A row that fails twice then recovers is served by the bounded
+    per-row retry loop — no error ever reaches the future."""
+    rt = _fresh_runtime(tmp_path, K=2)
+    rows = _rows(K=2, N=256, seed=9)
+    ref = np.asarray(jax.nn.softmax(jnp.stack(rows), axis=-1))
+    with FaultPlan([FaultRule(site="executor.row", family="softmax",
+                              index=1, count=2)]):
+        futs = [rt.submit_softmax(r) for r in rows]
+        for i in (0, 1):
+            np.testing.assert_allclose(futs[i].result(timeout=120),
+                                       ref[i], atol=1e-5)
+    st = rt.executor.stats()
+    assert st["row_failures"] == 0 and st["batch_retries"] == 1
+    rt.close()
+
+
+def test_deadline_bounds_retry_budget(tmp_path):
+    rt = _fresh_runtime(tmp_path, K=1, window=0.01)
+    row = _rows(K=1, N=256, seed=10)[0]
+    with FaultPlan([FaultRule(site="executor.row", family="softmax",
+                              index=0)]):
+        t0 = time.monotonic()
+        fut = rt.submit_softmax(row, deadline=0.5)
+        with pytest.raises((InjectedFault, TimeoutError)):
+            fut.result(timeout=60)
+        assert time.monotonic() - t0 < 30.0
+    rt.close()
+
+
+def test_future_timeout_message_has_context(tmp_path):
+    rt = _fresh_runtime(tmp_path, K=4, window=60.0)  # window never expires
+    fut = rt.submit_softmax(_rows(K=1, N=333, seed=11)[0])
+    with pytest.raises(TimeoutError) as ei:
+        fut.result(timeout=0.05)
+    assert "softmax" in str(ei.value) and "333" in str(ei.value)
+    rt.executor.close(drain=False)
+    rt.close()
+
+
+def test_close_fails_pending_futures(tmp_path):
+    rt = _fresh_runtime(tmp_path, K=16, window=60.0)
+    futs = [rt.submit_softmax(r) for r in _rows(K=3, N=128, seed=12)]
+    rt.executor.close(drain=False)
+    for f in futs:
+        with pytest.raises(RuntimeError, match="executor closed"):
+            f.result(timeout=5)
+    with pytest.raises(RuntimeError, match="executor is closed"):
+        rt.submit_softmax(_rows(K=1, N=128)[0])
+
+
+def test_close_with_wedged_worker_fails_inflight(tmp_path):
+    """A flush stuck inside a wedged backend: close(timeout=...) gives
+    up on the worker and fails the in-flight futures; the worker's late
+    completion is dropped (first writer wins)."""
+    rt = _fresh_runtime(tmp_path, K=1, window=0.01)
+    release = threading.Event()
+    real = rt._run_batch
+
+    def wedged(family, X, shared, **kw):
+        release.wait(10.0)
+        return real(family, X, shared, **kw)
+
+    rt._run_batch = wedged
+    fut = rt.submit_softmax(_rows(K=1, N=128, seed=13)[0])
+    time.sleep(0.1)  # let the worker pick the batch up
+    rt.executor.close(timeout=0.3)
+    with pytest.raises(RuntimeError, match="executor closed"):
+        fut.result(timeout=5)
+    release.set()
+    # drain the late worker completely: its (dropped) completion still
+    # launches kernels, which must not bleed into a later test's
+    # count_launches window
+    worker = rt.executor._thread
+    if worker is not None:
+        worker.join(timeout=60)
+    rt.close()
+
+
+# ------------------------------------------------ crash-safe persistence
+def test_diskcache_quarantines_corrupt_entry(tmp_path):
+    c = DiskCache("t", root=Path(tmp_path))
+    c.put("good", {"v": 1})
+    (c.root / "bad.json").write_text('{"v": 1')  # truncated write
+    c2 = DiskCache("t", root=Path(tmp_path))  # fresh mem view
+    assert c2.get("bad", "missing") == "missing"
+    assert not (c2.root / "bad.json").exists()
+    assert (c2.root / "bad.corrupt").exists()  # kept for post-mortems
+    assert "bad" not in c2
+    assert c2.get("good")["v"] == 1
+    c2.put("bad", {"v": 2})  # the slot is reusable after quarantine
+    assert DiskCache("t", root=Path(tmp_path)).get("bad") == {"v": 2}
+
+
+def test_diskcache_put_is_atomic(tmp_path):
+    c = DiskCache("t", root=Path(tmp_path))
+    c.put("k", {"v": "old"})
+    with FaultPlan([FaultRule(site="cache.write")]):
+        c.put("k", {"v": "new"})  # write fails: disk keeps the old value
+    assert c.get("k") == {"v": "new"}  # this process serves from memory
+    assert DiskCache("t", root=Path(tmp_path)).get("k") == {"v": "old"}
+    assert json.loads((c.root / "k.json").read_text()) == {"v": "old"}
+
+
+def test_diskcache_read_fault_is_a_miss(tmp_path):
+    c = DiskCache("t", root=Path(tmp_path))
+    c.put("k", {"v": 1})
+    c2 = DiskCache("t", root=Path(tmp_path))
+    with FaultPlan([FaultRule(site="cache.read")]):
+        assert c2.get("k", "miss") == "miss"
+    assert c2.get("k") == {"v": 1}  # healthy again outside the plan
+
+
+# ------------------------------------------------------ manifest resilience
+def test_manifest_warmup_with_corrupt_entry(tmp_path):
+    cache = DiskCache("runtime_manifest", root=Path(tmp_path))
+    man = WarmStartManifest(cache=cache)
+    man.record("softmax", (4, 256), "float32", "pallas", {"stable": True})
+    # injected corruption: one malformed entry + one wrong-typed entry
+    cache.update("manifest-v1", lambda doc: {
+        "entries": {**doc["entries"],
+                    "deadbeef": {"family": "softmax", "geometry": "bogus",
+                                 "dtype": "float32", "backend": "pallas"},
+                    "cafebabe": ["not", "a", "dict"]},
+        "observed_keys": doc["observed_keys"]})
+    rt = rtm.ServingRuntime(
+        backend="pallas", window=0.01, max_batch=4, router=BackendRouter(),
+        manifest=WarmStartManifest(cache=cache))
+    report = rt.warmup()
+    assert report["replayed"] == 1          # the healthy entry warmed
+    assert len(report["errors"]) == 1       # the malformed one is reported
+    assert report["entries"] == 2           # non-dict entry dropped on load
+    rt.close()
+
+
+def test_manifest_tolerates_wrong_shaped_document(tmp_path):
+    cache = DiskCache("runtime_manifest", root=Path(tmp_path))
+    cache.put("manifest-v1", ["not", "a", "manifest"])
+    man = WarmStartManifest(cache=cache)
+    assert len(man) == 0
+    assert man.replay(lambda e: None)["entries"] == 0
+    man.record("softmax", (2, 128), "float32", "xla", {"stable": True})
+    assert WarmStartManifest(cache=cache).entries()[0]["backend"] == "xla"
+
+
+# ----------------------------------------------------------- observability
+def test_runtime_stats_has_fault_sections(tmp_path):
+    rt = _fresh_runtime(tmp_path, K=2)
+    st = rt.stats()
+    assert set(st["breaker"]) >= {"threshold", "cooldown_s", "failovers",
+                                  "open_cells"}
+    assert isinstance(st["degradations"], dict)
+    assert st["faults"]["active_plans"] == 0
+    with FaultPlan([FaultRule(site="launch", count=1)]):
+        assert rt.stats()["faults"]["active_plans"] == 1
+    rt.close()
