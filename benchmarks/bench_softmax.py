@@ -158,6 +158,55 @@ def _batched(B: int, N: int, repeats: int, rng) -> None:
              backend=be)
 
 
+def _axis0(B: int, N: int, repeats: int, rng) -> None:
+    """Column softmax (kernel IR `transpose_layout`, DESIGN.md §11):
+    the SAME wave+epilogue schedule as the row case — 2 launches — with
+    the storage bound transposed into the domain.  Rows are gated
+    (``gate=True``): a launch-count regression here means the IR path
+    stopped fusing the transposed layout."""
+    x = (rng.standard_normal((B, N)) * 4).astype(np.float32)
+    X = ga.to_gpu(x)
+
+    def fused(be):
+        # ONE transposed column wave + ONE fused 2-D epilogue
+        return ga.softmax(X, stable=True, axis=0).evaluate(backend=be).value
+
+    def unfused():
+        # pre-IR path: materialize exp, reduce the temp over axis=0,
+        # then divide — 3 launches and an HBM round-trip for the temp
+        e = ga.exp(X).evaluate(backend="pallas")
+        s = e.sum(axis=0, fuse=False).evaluate(backend="pallas")
+        return (e / ga.to_gpu(s.value)).evaluate(backend="pallas").value
+
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=0))
+    for be in BACKENDS:
+        np.testing.assert_allclose(np.asarray(fused(be)), ref, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(unfused()), ref, atol=1e-5)
+
+    for be in BACKENDS:
+        ga.autotune(ga.softmax(X, stable=True, axis=0), backend=be,
+                    repeats=3, warmup=1)
+
+    for be in BACKENDS:
+        fused(be)
+    unfused()  # warm the driver cache
+    t_unfused = timeit(unfused, repeats=repeats)
+    with dispatch.count_launches() as cu:
+        unfused()
+    tag = f"softmax.axis0.b{B}x{N}"
+    emit(f"{tag}.unfused", t_unfused,
+         f"{cu.delta} launches (map; reduce cols; divide)",
+         kernels_launched=cu.delta, backend="pallas")
+    for be in BACKENDS:
+        with dispatch.count_launches() as cf:
+            fused(be)
+        t_fused = timeit(lambda: fused(be), repeats=repeats)
+        emit(f"{tag}.fused{_row_suffix(be)}", t_fused,
+             f"{cf.delta} launches on {be} (transposed col wave + epilogue)",
+             kernels_launched=cf.delta, speedup=t_unfused / t_fused,
+             backend=be, gate=True)
+
+
 def run(repeats: int = 5, sizes=(100_000,),
         batches=((32, 1024), (64, 4096), (256, 8192))):
     rng = np.random.default_rng(0)
@@ -165,3 +214,7 @@ def run(repeats: int = 5, sizes=(100_000,),
         _flat(n, repeats, rng)
     for B, N in batches:
         _batched(B, N, repeats, rng)
+    # column softmax (axis=0) at the first batch geometry only: the gate
+    # is about the launch schedule, not a size sweep
+    if batches:
+        _axis0(batches[0][0], batches[0][1], repeats, rng)

@@ -69,6 +69,23 @@ st = runtime.stats()
 print("runtime routes:", st["router"]["routes"],
       "| manifest entries:", st["manifest"]["entries"])
 
+# 1f. Kernel IR (PR 7, DESIGN.md §11): specs lower into a searchable
+#     IR — a tagged iteration domain + statements + argument access
+#     map — and pure transformations (tile, split, transpose_layout,
+#     fuse_epilogue) rewrite it before either backend renders it.
+#     Every plan is introspectable: dump the IR and its transformation
+#     log.  axis=0 column reductions are just `transpose_layout` —
+#     same 2-launch softmax schedule, columns instead of rows.
+from repro.core import ir
+
+spec = ga.plan(ga.exp(scores)._expr).kernel().spec
+kir = ir.tile(ir.lower_elementwise(spec, rows=32, lanes=1024,
+                                   layout="rows"), "rows", 8)
+print("kernel IR:\n" + kir.describe())
+col_sm = ga.softmax(scores, stable=True, axis=0).value   # still 2 launches
+print("axis=0 softmax cols sum to 1:",
+      bool(np.allclose(np.asarray(col_sm.sum(axis=0)), 1.0, atol=1e-5)))
+
 # 2. ElementwiseKernel: C-like snippet -> generated tiled Pallas kernel
 #    (paper Fig. 4a, verbatim API)
 from repro.core import ElementwiseKernel

@@ -26,7 +26,11 @@ schedule as ONE row-segmented `ReductionKernel` launch (one accumulator
 *per row*) plus ONE fused `ElementwiseKernel` epilogue in the 2-D row
 layout — 2 launches for the whole batch instead of ``3·B`` per-row
 launches or an unfused fallback.  Inside an expression a row-reduced
-value broadcasts like a keepdims ``(B, 1)`` operand.
+value broadcasts like a keepdims ``(B, 1)`` operand.  Column-wise
+``axis=0`` reductions over 2-D operands (kernel IR, PR 7) ride the same
+machinery through the IR's ``transpose_layout`` transformation: ``(N,)``
+results re-enter fused code as ``(1, N)`` per-col broadcast args, and
+``softmax(x, axis=0)`` keeps the 2-launch schedule of its row twin.
 
 Scheduling (`plan_many`) emits a *minimal launch schedule*:
 
@@ -194,26 +198,37 @@ def _bshape(expr: _Expr) -> tuple:
         if expr.axis is None:
             return ()
         child = _bshape(expr.children[0])
+        if expr.axis == 0:  # column reduce: keepdims over the batch dim
+            return child[:-2] + (1,) + child[-1:]
         return child[:-1] + (1,)
     return tuple(np.broadcast_shapes(*[_bshape(c) for c in expr.children]))
 
 
-def _has_row_reduce_outside(expr: _Expr) -> bool:
-    """Any row reduction reachable without crossing another reduction."""
+def _outer_segmented_axes(expr: _Expr) -> set:
+    """Axes of segmented (non-scalar) reductions reachable without
+    crossing another reduction — {-1} row-wise, {0} column-wise, or a
+    mix."""
     if expr.op == "reduce":
-        return expr.axis is not None
-    return any(_has_row_reduce_outside(c) for c in expr.children)
+        return set() if expr.axis is None else {expr.axis}
+    out: set = set()
+    for c in expr.children:
+        out |= _outer_segmented_axes(c)
+    return out
 
 
 def _shape_of(expr: _Expr) -> tuple:
-    """User-visible shape.  Row reductions produce ``(B,)`` results (no
-    keepdims), so expressions made *only* of reduced values — a root
-    reduce, or the host-folded ``sum/n`` of ``.mean(axis=-1)`` — drop
-    the trailing 1 that `_bshape` keeps for broadcasting."""
+    """User-visible shape.  Segmented reductions produce vector results
+    (no keepdims) — ``(B,)`` for axis=-1, ``(N,)`` for axis=0 — so
+    expressions made *only* of reduced values (a root reduce, or the
+    host-folded ``sum/n`` of ``.mean(axis=...)``) drop the 1-extent dim
+    that `_bshape` keeps for broadcasting."""
     s = _bshape(expr)
-    if (s and s[-1] == 1 and not _vector_outside_reduce(expr)
-            and _has_row_reduce_outside(expr)):
-        return s[:-1]
+    if s and not _vector_outside_reduce(expr):
+        axes = _outer_segmented_axes(expr)
+        if axes == {-1} and s[-1] == 1:
+            return s[:-1]
+        if axes == {0} and len(s) >= 2 and s[-2] == 1:
+            return s[:-2] + s[-1:]
     return s
 
 
@@ -286,7 +301,8 @@ class _Serializer:
 
     Slots: concrete array leaves -> ``v<j>`` (dedup by identity),
     embedded Python numbers and computed *scalar* reductions -> ``s<j>``,
-    computed *row* reductions -> ``r<j>`` per-row broadcast args.  Reduce
+    computed segmented reductions -> ``r<j>`` broadcast args, bound
+    per-row ``(B, 1)`` for axis=-1 and per-col ``(1, N)`` for axis=0.  Reduce
     nodes listed in ``local_nodes`` (same row wave) serialize to
     ``_acc<k>`` — resolved in-kernel, no argument at all.
 
@@ -307,6 +323,7 @@ class _Serializer:
         self.scalar_dtypes: list = []
         self.bvecs: list = []
         self.bvec_dtypes: list = []
+        self.bvec_kinds: list = []   # "row" (axis=-1) | "col" (axis=0)
         self.prelude: list = []
         self._counts: dict = {}
         self._skeys: dict = {}
@@ -388,6 +405,7 @@ class _Serializer:
                     return f"r{j}"
             self.bvecs.append(e)
             self.bvec_dtypes.append(_dtype_of(e))
+            self.bvec_kinds.append("col" if e.axis == 0 else "row")
             return f"r{len(self.bvecs) - 1}"
         if e.op in ("+", "-", "*", "/"):
             a = self.emit(e.children[0])
@@ -444,11 +462,12 @@ class FusionPlan:
     key: str = ""
     scalar_dtypes: list = field(default_factory=list)
     nodes: list = field(default_factory=list)   # reduce nodes this plan computes
-    bvecs: list = field(default_factory=list)   # row-reduce _Expr args
+    bvecs: list = field(default_factory=list)   # segmented-reduce _Expr args
     bvec_dtypes: list = field(default_factory=list)
+    bvec_kinds: list = field(default_factory=list)  # "row" | "col" per bvec
     leaf_kinds: list = field(default_factory=list)
     prelude: list = field(default_factory=list)
-    axis: int | None = None                     # None: flat | -1: row layout
+    axis: int | None = None                     # None: flat | -1: rows | 0: cols
     geometry: tuple = ()                        # (n,) flat | (B, N) rows
     out_shapes: list = field(default_factory=list)  # epilogue template shapes
     backend: Any = None                         # None: REPRO_BACKEND per call
@@ -468,8 +487,9 @@ class FusionPlan:
     def _arg_list(self) -> list:
         dts = self.scalar_dtypes or [self._out_dtypes()[0]] * len(self.scalars)
         args = [ScalarArg(dt, f"s{j}") for j, dt in enumerate(dts)]
-        args += [BroadcastArg(dt, f"r{j}", "row")
-                 for j, dt in enumerate(self.bvec_dtypes)]
+        bkinds = self.bvec_kinds or ["row"] * len(self.bvec_dtypes)
+        args += [BroadcastArg(dt, f"r{j}", k)
+                 for j, (dt, k) in enumerate(zip(self.bvec_dtypes, bkinds))]
         kinds = self.leaf_kinds or ["full"] * len(self.leaves)
         for j, (a, k) in enumerate(zip(self.leaves, kinds)):
             if k == "full":
@@ -682,7 +702,7 @@ def plan(expr: _Expr, reduce_expr: str | None = None,
     key = stable_hash((snippet, ser.prelude,
                        [str(a.dtype) for a in ser.leaves], kinds,
                        len(ser.scalars), reduce_expr or "", neutral or "",
-                       str(out_dtype), axis or 0))
+                       str(out_dtype), repr(axis)))
     return FusionPlan(snippet=snippet, leaves=list(ser.leaves),
                       scalars=list(ser.scalars), out_dtype=out_dtype,
                       reduce_expr=reduce_expr, neutral=neutral, key=key,
@@ -732,13 +752,15 @@ def _plan_reduce_wave(ready: list, axis: int | None = None,
         kinds = ser.leaf_kinds(*geometry)
     key = stable_hash((snips, ser.prelude, [str(a.dtype) for a in ser.leaves],
                        kinds, [str(d) for d in ser.scalar_dtypes],
-                       [str(d) for d in ser.bvec_dtypes], rexprs, neutrals,
-                       [str(d) for d in odts], axis or 0))
+                       [str(d) for d in ser.bvec_dtypes], ser.bvec_kinds,
+                       rexprs, neutrals,
+                       [str(d) for d in odts], repr(axis)))
     return FusionPlan(snippet=snips, leaves=list(ser.leaves),
                       scalars=list(ser.scalars), out_dtype=odts,
                       reduce_expr=rexprs, neutral=neutrals, key=key,
                       scalar_dtypes=list(ser.scalar_dtypes), nodes=list(ready),
                       bvecs=list(ser.bvecs), bvec_dtypes=list(ser.bvec_dtypes),
+                      bvec_kinds=list(ser.bvec_kinds),
                       leaf_kinds=kinds, prelude=list(ser.prelude), axis=axis,
                       geometry=geometry, backend=backend)
 
@@ -765,19 +787,19 @@ def _schedule_waves(reduces: list, backend=None) -> list:
             steps.append(_plan_reduce_wave(flat_ready, backend=backend))
             placed += flat_ready
         row_ready = [r for r in ready if r.axis is not None]
-        groups: dict = {}
-        for r in row_ready:
-            g = _row_geometry(_bshape(r.children[0]))
+        groups: dict = {}   # (geometry, axis) -> nodes: axis=0 and axis=-1
+        for r in row_ready:  # waves never mix (different kernel domains)
+            g = (_row_geometry(_bshape(r.children[0])), r.axis)
             groups.setdefault(g, []).append(r)
         placed_ids = {id(p) for p in placed}
-        for g, nodes in groups.items():
+        for (g, ax), nodes in groups.items():
             wave_ids = {id(r) for r in nodes}
             changed = True
             while changed:  # pull same-geometry dependents into the wave
                 changed = False
                 for r in pending:
                     if (id(r) in wave_ids or id(r) in placed_ids
-                            or id(r) in done or r.axis is None):
+                            or id(r) in done or r.axis != ax):
                         continue
                     if _row_geometry(_bshape(r.children[0])) != g:
                         continue
@@ -786,7 +808,7 @@ def _schedule_waves(reduces: list, backend=None) -> list:
                         nodes.append(r)
                         wave_ids.add(id(r))
                         changed = True
-            steps.append(_plan_reduce_wave(nodes, axis=-1, backend=backend))
+            steps.append(_plan_reduce_wave(nodes, axis=ax, backend=backend))
             placed += nodes
             placed_ids |= wave_ids
         done |= {id(r) for r in placed}
@@ -882,13 +904,15 @@ def plan_many(exprs: list, backend=None) -> FusionSchedule:
         key = stable_hash((snips, ser.prelude,
                            [str(a.dtype) for a in ser.leaves], kinds,
                            [str(d) for d in ser.scalar_dtypes],
-                           [str(d) for d in ser.bvec_dtypes], "", "",
-                           [str(d) for d in odts], axis or 0))
+                           [str(d) for d in ser.bvec_dtypes], ser.bvec_kinds,
+                           "", "",
+                           [str(d) for d in odts], repr(axis)))
         epilogues.append(FusionPlan(
             snippet=snips, leaves=list(ser.leaves), scalars=list(ser.scalars),
             out_dtype=odts, reduce_expr=None, neutral=None, key=key,
             scalar_dtypes=list(ser.scalar_dtypes), bvecs=list(ser.bvecs),
-            bvec_dtypes=list(ser.bvec_dtypes), leaf_kinds=kinds,
+            bvec_dtypes=list(ser.bvec_dtypes), bvec_kinds=list(ser.bvec_kinds),
+            leaf_kinds=kinds,
             prelude=list(ser.prelude), axis=axis, geometry=geometry,
             out_shapes=oshapes, backend=backend))
     return FusionSchedule(steps=steps, epilogues=epilogues, outputs=outputs)
@@ -1008,6 +1032,9 @@ def _eval_unfused(expr: _Expr, backend=None) -> jax.Array:
         if e.op != "reduce":
             return ne
         val = plan_many([ne], backend=backend).launch()[0]
+        if e.axis == 0:   # (N,) column reduce re-enters as a (1, N) leaf
+            v = jnp.asarray(val)
+            return _Expr("leaf", value=v.reshape((1,) + v.shape))
         if e.axis is not None:
             v = jnp.asarray(val)
             return _Expr("leaf", value=v.reshape(v.shape + (1,)))
@@ -1034,7 +1061,7 @@ def _eval_eager(expr: _Expr) -> jax.Array:
         if e.op == "reduce":
             fn = _EAGER_REDUCE[e.value]
             c = jnp.asarray(ev(e.children[0]))
-            return (fn(c, axis=-1, keepdims=True) if e.axis is not None
+            return (fn(c, axis=e.axis, keepdims=True) if e.axis is not None
                     else fn(c))
         kids = [ev(c) for c in e.children]
         if e.op == "neg":
@@ -1235,11 +1262,14 @@ class RTCGArray:
             return None
         if axis in (-1, nd - 1) and nd >= 2:
             return -1
+        if axis in (0, -2) and nd == 2:
+            return 0  # column-wise over (B, N) — transpose_layout domain
         if axis in (-1, 0) and nd <= 1:
             return None  # last-axis of a vector IS the full reduction
         raise NotImplementedError(
-            f"axis={axis} over a {nd}-d operand; only axis=None (full) and "
-            f"axis=-1 (row-wise) reductions are fusable")
+            f"axis={axis} over a {nd}-d operand; only axis=None (full), "
+            f"axis=-1 (row-wise) and axis=0 (column-wise, 2-D) reductions "
+            f"are fusable")
 
     def _reduce(self, kind: str, fuse: bool = True,
                 axis: int | None = None) -> "RTCGArray":
@@ -1256,7 +1286,10 @@ class RTCGArray:
         return self._reduce("sum", fuse=fuse, axis=axis)
 
     def mean(self, axis: int | None = None, fuse: bool = True) -> "RTCGArray":
-        if self._norm_axis(axis) is not None:
+        ax = self._norm_axis(axis)
+        if ax == 0:
+            n = int(self.shape[0])
+        elif ax is not None:
             n = int(self.shape[-1])
         else:
             n = int(np.prod(self.shape))
@@ -1304,20 +1337,26 @@ def abs(a: RTCGArray) -> RTCGArray:  # noqa: A001 - mirrors numpy namespace
     return a._unary("abs")
 
 
-def softmax(a: RTCGArray, stable: bool = False) -> RTCGArray:
-    """Softmax through the fusion planner — axis is always the last one.
+def softmax(a: RTCGArray, stable: bool = False, axis: int = -1) -> RTCGArray:
+    """Softmax through the fusion planner.
 
     1-D operands keep the flat schedule: unstable is ONE reduce + ONE
     fused epilogue (2 launches); ``stable=True`` subtracts the max first
     (3 launches — the flat reduction streams grid steps, so the shifted
     sum can't see the max in the same pass).
 
-    2-D ``(B, N)`` operands schedule *row-segmented*: every row's
-    reduction lands in one launch, and because each row is complete
+    2-D ``(B, N)`` operands schedule *segmented*: every segment's
+    reduction lands in one launch, and because each segment is complete
     inside its block, ``stable=True`` stays at 2 launches — the max and
     the shifted-exp sum share one wave (same-wave ``_acc`` chaining).
+    ``axis=-1`` (default) normalizes along rows; ``axis=0`` along
+    columns, via the kernel IR's ``transpose_layout`` transformation —
+    same launch counts, transposed kernel domain.
     """
-    ax = -1 if len(a.shape) >= 2 else None
+    if len(a.shape) < 2:
+        ax = None
+    else:
+        ax = 0 if axis in (0, -2) else -1
     if stable:
         e = (a - a.max(axis=ax)).exp()
     else:

@@ -32,6 +32,7 @@ bucket — a winner tuned once transfers to every size in the bucket
 from __future__ import annotations
 
 import math
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
@@ -42,22 +43,93 @@ from repro.core.cache import DiskCache, stable_hash, tuning_cache
 
 
 # Winner hooks (PR 5, DESIGN.md §9.2): after a per-bucket tune resolves,
-# every registered hook gets ``(name, backend, bucket, seconds)`` for the
-# winning config.  The serving runtime's backend router subscribes here
-# so its per-(backend, bucket) latency priors are *seeded* by measured
-# tuning results instead of starting blind.
+# every registered hook gets ``(name, backend, bucket, seconds, sequence)``
+# for the winning config.  The serving runtime's backend router subscribes
+# here so its per-(backend, bucket) latency priors are *seeded* by measured
+# tuning results instead of starting blind, and the warm-start manifest
+# records the winning transformation sequence for replay.
 WINNER_HOOKS: list[Callable] = []
 
 
 def notify_winner(name: str, backend: "str | None", bucket: Any,
-                  seconds: float) -> None:
-    """Fan a tuning winner's measured score out to the registered hooks
-    (exceptions are swallowed — telemetry must never fail a tune)."""
+                  seconds: float, sequence: "tuple | None" = None) -> None:
+    """Fan a tuning winner's measured score (and, since the kernel-IR
+    layer, its winning transformation sequence) out to the registered
+    hooks (exceptions are swallowed — telemetry must never fail a tune).
+    Legacy four-argument hooks are still called without the sequence."""
     for fn in list(WINNER_HOOKS):
         try:
-            fn(name, backend, bucket, seconds)
+            try:
+                fn(name, backend, bucket, seconds, sequence)
+            except TypeError:
+                fn(name, backend, bucket, seconds)
         except Exception:  # pragma: no cover - observability only
             pass
+
+
+# ----------------------------------------------------------------------
+# Transformation-sequence store (kernel IR, DESIGN.md §11).  A tuning
+# winner is not just a scalar block size: it is the IR transformation
+# sequence (`repro.core.ir.TRANSFORMS` vocabulary) that produced the
+# winning schedule — ``transpose_layout`` for column-segmented domains,
+# ``tile(rows, block)`` / ``split(stream, inner)`` for the blocking.
+# The store is keyed per ``(tune name, backend, bucket)`` so the kernel
+# families can recover a tuned schedule for any shape in the bucket even
+# on a *fresh kernel instance* (the per-instance ``_tuned`` dict only
+# survives as long as the object), and the warm-start manifest persists
+# it across processes.
+# ----------------------------------------------------------------------
+_SEQ_LOCK = threading.Lock()
+SEQUENCE_STORE: dict = {}   # (name, backend, bucket) -> transformation seq
+
+
+def _seq_bucket(bucket: Any) -> Any:
+    return tuple(bucket) if isinstance(bucket, (list, tuple)) else bucket
+
+
+def sequence_for(param: str, value: int, transposed: bool = False) -> tuple:
+    """The IR transformation sequence a winning ``param`` value denotes.
+
+    ``block_rows`` winners tile the ``rows`` axis (after a
+    ``transpose_layout`` when the domain is column-segmented);
+    ``block_n`` winners split the scan ``stream`` axis."""
+    if param == "block_n":
+        return (("split", {"axis": "stream", "inner": int(value)}),)
+    seq = [("transpose_layout", {})] if transposed else []
+    seq.append(("tile", {"axis": "rows", "block": int(value)}))
+    return tuple(seq)
+
+
+def record_sequence(name: str, backend: "str | None", bucket: Any,
+                    sequence) -> None:
+    """Record ``sequence`` as the winning transformation chain for
+    ``(name, backend, bucket)`` (idempotent; thread-safe)."""
+    seq = tuple((op, dict(params)) for op, params in sequence)
+    with _SEQ_LOCK:
+        SEQUENCE_STORE[(name, backend, _seq_bucket(bucket))] = seq
+
+
+def tuned_sequence(name: str, backend: "str | None",
+                   bucket: Any) -> "tuple | None":
+    """The recorded winning transformation sequence, or None."""
+    with _SEQ_LOCK:
+        return SEQUENCE_STORE.get((name, backend, _seq_bucket(bucket)))
+
+
+def sequence_param(name: str, backend: "str | None", bucket: Any,
+                   param: str) -> "int | None":
+    """Extract the scalar knob (``block_rows`` / ``block_n``) from a
+    recorded transformation sequence — how the kernel families' fast
+    paths consult the store without replaying the IR chain."""
+    seq = tuned_sequence(name, backend, bucket)
+    if not seq:
+        return None
+    for op, params in seq:
+        if param == "block_n" and op == "split":
+            return params.get("inner")
+        if param == "block_rows" and op == "tile":
+            return params.get("block")
+    return None
 
 
 def block_rows_candidates(n: int, lanes: int = 128) -> list[dict]:
@@ -140,10 +212,16 @@ def tune_per_bucket(name: str, builder: Callable, cost_fn: Callable,
     # ``backend`` still stores a readable (None, bucket) entry rather
     # than a bare-bucket key nothing ever consults
     tuned[(backend, nb)] = report.best[param]
+    # the winner *is* a transformation sequence: record it per
+    # (name, backend, bucket) so fresh kernel instances and the
+    # warm-start manifest can replay the schedule, not just the scalar
+    transposed = isinstance(nb, tuple) and len(nb) > 2
+    sequence = sequence_for(param, report.best[param], transposed=transposed)
+    record_sequence(name, backend, nb, sequence)
     viable = [r.score for r in report.results
               if r.ok and math.isfinite(r.score)]
     if viable:  # seed the serving runtime's router with the winner's score
-        notify_winner(name, backend, nb, min(viable))
+        notify_winner(name, backend, nb, min(viable), sequence=sequence)
     return report
 
 

@@ -10,14 +10,22 @@ split down for the reproduction:
   * the kernel families (`elementwise`/`reduction`/`scan`) produce
     **specs** — frozen descriptions of translated snippets plus argument
     metadata, with no compilation machinery attached;
-  * a `Backend` turns a (spec, geometry) pair into a compiled *driver*:
-    ``render`` (spec -> source text) → ``compile`` (source -> jitted
-    callable) → ``launch`` (the driver: pad operands, call, slice).
+  * the specs *lower* into the kernel IR (`repro.core.ir`) and a chain
+    of pure transformations (tile / split / transpose_layout / tag)
+    schedules it — that pipeline lives HERE, in the concrete
+    ``*_driver`` methods, shared by every backend;
+  * a `Backend` turns the transformed IR into a compiled *driver*:
+    ``render_ir`` (IR -> source text) → compile (source -> jitted
+    callable) → ``build_*`` (the driver: pad operands, call, slice).
 
 Drivers keep the dispatch-engine calling conventions:
 
   * flat elementwise/reduction: ``driver(n, flat_args)``
   * row-segmented (axis=-1):    ``driver(b, n, flat_args)``
+  * column-segmented (axis=0):  ``driver(b, n, flat_args)`` over the
+    *domain* geometry (b = outputs, n = reduced length) with operands
+    passed in storage order — the IR's ``transpose_layout`` tells the
+    driver to bind full operands transposed;
   * scan:                       ``driver(n, x)``
 
 Backends also carry a capability/fingerprint record (`fingerprint()`)
@@ -72,9 +80,11 @@ class ReductionSpec:
     ``outs`` holds one dict per accumulator: ``map_expr`` (translated),
     ``neutral`` (literal), ``block_reduce`` (e.g. ``jnp.sum``),
     ``combine`` (cross-grid-step fold — only sequential-grid backends
-    use it) and ``dtype``.  ``axis`` is None (flat) or -1 (row-segmented,
+    use it) and ``dtype``.  ``axis`` is None (flat), -1 (row-segmented,
     one accumulator per row; later map_exprs may reference earlier
-    accumulators as ``_acc<k>``).
+    accumulators as ``_acc<k>``) or 0 (column reduction over a 2-D
+    operand — same segmented kernel over the transposed layout, see
+    ``ir.transpose_layout``; arg kinds stay in STORAGE orientation).
     """
 
     name: str
@@ -84,16 +94,19 @@ class ReductionSpec:
     prelude_lines: tuple       # hoisted CSE assignments, pre-translated
     outs: tuple                # (dict(map_expr, neutral, block_reduce, combine, dtype), ...)
     multi: bool
-    axis: Any = None           # None | -1
+    axis: Any = None           # None | -1 | 0
     preamble: str = ""
     interpret: bool = True
 
     def token(self) -> list:
+        # repr(axis) keeps None/-1/0 distinct (`axis or 0` collapsed
+        # None and 0 — harmless pre-IR, a key collision once axis=0
+        # column reductions exist)
         return ["reduce", self.name,
                 [(m[0], str(m[1]), m[2]) for m in self.arg_meta],
                 list(self.prelude_lines),
                 [sorted(o.items()) for o in self.outs],
-                self.multi, self.axis or 0, self.preamble, self.interpret]
+                self.multi, repr(self.axis), self.preamble, self.interpret]
 
 
 @dataclass(frozen=True)
@@ -122,12 +135,19 @@ def binop_apply(binop: str, a: str, b: str) -> str:
 
 
 class Backend(abc.ABC):
-    """One execution target of the RTCG pipeline (render→compile→launch).
+    """One execution target of the RTCG pipeline (lower→render→launch).
 
     Concrete backends are stateless singletons (see the package
     registry); every compiled driver is cached by the dispatch engine
     under a backend-qualified key, so two backends never share or
     clobber each other's drivers.
+
+    The ``*_driver`` entry points are CONCRETE here: they run the
+    shared lowering pipeline (spec -> `repro.core.ir.KernelIR` -> a
+    transformation chain: ``tag_parallel`` the independent axis,
+    ``transpose_layout`` for axis=0 reductions, ``tile``/``split`` for
+    the block schedule) and hand the transformed IR to the backend's
+    abstract ``build_*`` methods.  Backends never see specs — only IR.
     """
 
     #: registry name; also the tag on dispatch counters and bench rows
@@ -145,35 +165,160 @@ class Backend(abc.ABC):
         """Capability/version record — cache-key material and bench
         metadata.  Must differ between any two backends."""
 
-    # -- elementwise -----------------------------------------------------
-    @abc.abstractmethod
+    # ================= shared lowering pipeline (spec -> IR -> build)
     def elementwise_driver(self, spec: ElementwiseSpec, *, bucket: int,
                            block_rows: int) -> Callable:
         """Compile one flat-layout driver: ``driver(n, flat_args) ->
         [flat outputs]`` serving every ``n`` whose padded rows fit
         ``bucket``."""
+        from repro.core import ir
+        from repro.core.platform import LANES
 
-    @abc.abstractmethod
+        kir = ir.lower_elementwise(spec, rows=bucket, lanes=LANES)
+        kir = ir.tag_parallel(kir, "rows")
+        kir = ir.tile(kir, "rows", block_rows)
+        drv = self.build_elementwise(kir)
+        ir.mark_rendered(kir)
+        return drv
+
     def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
                                 ncols: int, block_rows: int) -> Callable:
         """Compile one row-layout driver: ``driver(b, n, flat_args) ->
         [(b, n) outputs]`` serving every ``(B, N)`` in the bucket pair."""
+        from repro.core import ir
 
-    # -- reduction -------------------------------------------------------
-    @abc.abstractmethod
+        kir = ir.lower_elementwise(spec, rows=brows, lanes=ncols,
+                                   layout="rows")
+        kir = ir.tag_parallel(kir, "rows")
+        kir = ir.tile(kir, "rows", block_rows)
+        drv = self.build_elementwise_rows(kir)
+        ir.mark_rendered(kir)
+        return drv
+
     def reduction_driver(self, spec: ReductionSpec, *, bucket: int,
                          block_rows: int) -> Callable:
         """Compile one flat map+reduce driver: ``driver(n, flat_args)``
-        returning a scalar (or tuple of scalars when ``spec.multi``)."""
+        returning a scalar (or tuple of scalars when ``spec.multi``).
+        The rows axis stays SEQUENTIAL: grid steps accumulate."""
+        from repro.core import ir
+        from repro.core.platform import LANES
 
-    @abc.abstractmethod
+        kir = ir.lower_reduction(spec, rows=bucket, cols=LANES)
+        kir = ir.tile(kir, "rows", block_rows)
+        drv = self.build_reduction(kir)
+        ir.mark_rendered(kir)
+        return drv
+
     def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
                               ncols: int, block_rows: int) -> Callable:
-        """Compile one row-segmented driver: ``driver(b, n, flat_args)``
-        returning (b,)-shaped outputs (tuple when ``spec.multi``)."""
+        """Compile one segmented driver: ``driver(b, n, flat_args)``
+        returning (b,)-shaped outputs (tuple when ``spec.multi``).
 
-    # -- scan ------------------------------------------------------------
-    @abc.abstractmethod
+        ``brows``/``ncols`` are DOMAIN buckets (independent outputs x
+        reduced length).  For ``spec.axis == 0`` the domain is the
+        transpose of the stored arrays, so ``transpose_layout`` joins
+        the chain: arg kinds swap row<->col and the driver binds full
+        operands transposed."""
+        from repro.core import ir
+
+        kir = ir.lower_reduction(spec, rows=brows, cols=ncols,
+                                 layout="rows")
+        if spec.axis == 0:
+            kir = ir.transpose_layout(kir)
+        kir = ir.tag_parallel(kir, "rows")
+        kir = ir.tile(kir, "rows", block_rows)
+        drv = self.build_reduction_rows(kir)
+        ir.mark_rendered(kir)
+        return drv
+
     def scan_driver(self, spec: ScanSpec, *, grid: int,
                     block_n: int) -> Callable:
-        """Compile one prefix-scan driver: ``driver(n, x) -> flat out``."""
+        """Compile one prefix-scan driver: ``driver(n, x) -> flat out``.
+        The stream axis splits into (blocks x elements); the inner axis
+        is parallel within a block, the outer carries the prefix."""
+        from repro.core import ir
+
+        kir = ir.lower_scan(spec, n=grid * block_n)
+        kir = ir.split(kir, "stream", block_n)
+        kir = ir.tag_parallel(kir, "stream.i")
+        drv = self.build_scan(kir)
+        ir.mark_rendered(kir)
+        return drv
+
+    # ------------- render compatibility wrappers (introspection path)
+    def render_elementwise(self, spec: ElementwiseSpec, block_rows: int,
+                           ncols: int | None = None):
+        """Source text for an elementwise spec at one block config —
+        kept for `ElementwiseKernel.render` introspection; the IR is
+        the real input (``render_ir``)."""
+        from repro.core import ir
+        from repro.core.platform import LANES
+
+        kir = ir.lower_elementwise(spec, rows=block_rows,
+                                   lanes=ncols if ncols is not None else LANES,
+                                   layout="flat" if ncols is None else "rows")
+        kir = ir.tag_parallel(kir, "rows")
+        kir = ir.tile(kir, "rows", block_rows)
+        return self.render_ir(kir)
+
+    def render_reduction(self, spec: ReductionSpec, block_rows: int,
+                         ncols: int | None = None):
+        from repro.core import ir
+        from repro.core.platform import LANES
+
+        if spec.axis is None:
+            kir = ir.lower_reduction(spec, rows=block_rows, cols=LANES)
+        else:
+            kir = ir.lower_reduction(spec, rows=block_rows, cols=ncols,
+                                     layout="rows")
+            if spec.axis == 0:
+                kir = ir.transpose_layout(kir)
+            kir = ir.tag_parallel(kir, "rows")
+        kir = ir.tile(kir, "rows", block_rows)
+        return self.render_ir(kir)
+
+    def render_scan(self, spec: ScanSpec):
+        from repro.core import ir
+
+        return self.render_ir(ir.lower_scan(spec, n=0))
+
+    # =========================== backend obligations (IR in, code out)
+    @abc.abstractmethod
+    def render_ir(self, kir) -> Any:
+        """Render a transformed `KernelIR` to source text (a str, or
+        the backend's per-pass tuple for scans)."""
+
+    @abc.abstractmethod
+    def build_elementwise(self, kir) -> Callable:
+        """Assemble the flat elementwise driver from a tiled IR."""
+
+    @abc.abstractmethod
+    def build_elementwise_rows(self, kir) -> Callable:
+        """Assemble the row-layout elementwise driver from a tiled IR."""
+
+    @abc.abstractmethod
+    def build_reduction(self, kir) -> Callable:
+        """Assemble the flat map+reduce driver from a tiled IR."""
+
+    @abc.abstractmethod
+    def build_reduction_rows(self, kir) -> Callable:
+        """Assemble the segmented reduction driver from a tiled IR
+        (honoring ``kir.transposed`` at operand-bind time)."""
+
+    @abc.abstractmethod
+    def build_scan(self, kir) -> Callable:
+        """Assemble the prefix-scan driver from a split IR."""
+
+
+def bind_row_operand(kind: str, name: str, arg, dt, b: int, n: int,
+                     brows: int, ncols: int, transposed: bool = False):
+    """Shared bind step for segmented drivers: reorder a stored operand
+    into DOMAIN order (transposed layouts flip full operands; broadcast
+    vectors are 1-D either way), then bucket-pad it.  ``b``/``n`` are
+    domain counts (outputs x reduced length)."""
+    from repro.core.platform import pad_row_operand
+    import jax.numpy as jnp
+
+    if transposed and kind == "full":
+        arg = jnp.asarray(arg).reshape(n, b).T
+    return pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)

@@ -1,11 +1,15 @@
 """PallasBackend — the TPU execution target (pallas_call assembly).
 
 This is the launch path the kernel families used to hand-assemble
-themselves: render the spec into *Pallas kernel source* (refs, block
-specs, a sequential 1-D grid), ``SourceModule.load`` it (content
-addressed — identical renders compile once), wrap in ``pl.pallas_call``
-+ ``jax.jit``, and return a driver that pads operands to the bucketed
-block shape on the way in and slices/masks on the way out.
+themselves: render the transformed kernel IR into *Pallas kernel
+source* (refs, block specs, a sequential 1-D grid), ``SourceModule.load``
+it (content addressed — identical renders compile once), wrap in
+``pl.pallas_call`` + ``jax.jit``, and return a driver that pads
+operands to the bucketed block shape on the way in and slices/masks on
+the way out.  The IR's tiled ``rows`` axis IS the grid: block shape
+``(rows.block, lanes)``, grid length ``extent // block``; a
+``transpose_layout`` entry makes the segmented-reduction driver bind
+full operands transposed (axis=0 column reductions).
 
 TPU realization notes (see the repo's Pallas idioms):
 
@@ -31,9 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.backends.base import (Backend, ElementwiseSpec,
-                                      ReductionSpec, ScanSpec, binop_apply)
-from repro.core.platform import LANES, pad_flat_operand, pad_row_operand
+from repro.core.backends.base import Backend, bind_row_operand, binop_apply
+from repro.core.platform import LANES, pad_flat_operand
 from repro.core.templates import KernelTemplate
 
 
@@ -161,8 +164,8 @@ def {{ name }}(y_ref, off_ref, o_ref):
 ''',
 )
 
-def _with_preamble(spec, src: str) -> str:
-    return (spec.preamble + "\n" + src) if spec.preamble else src
+def _with_preamble(preamble: str, src: str) -> str:
+    return (preamble + "\n" + src) if preamble else src
 
 
 class PallasBackend(Backend):
@@ -175,92 +178,97 @@ class PallasBackend(Backend):
             "jax": jax.__version__,
         }
 
-    # -- render ----------------------------------------------------------
-    def render_elementwise(self, spec: ElementwiseSpec, block_rows: int,
-                           ncols: int | None = None) -> str:
-        """Row layout renders the same template with the lane axis widened
-        to the (bucketed) row length ``ncols`` — blocks are
-        ``(block_rows, ncols)`` row groups instead of flat lane tiles."""
-        src = _ELTWISE_TMPL.render(
-            name=spec.name,
-            in_names=[m[0] for m in spec.arg_meta],
-            out_names=list(spec.out_names),
-            scalar_names=list(spec.scalar_names),
-            loaded_vectors=list(spec.loaded_vectors),
-            body_lines=list(spec.body_lines),
-            needs_i=spec.needs_i,
-            block_rows=block_rows,
-            lanes=ncols if ncols is not None else LANES,
-        )
-        return _with_preamble(spec, src)
-
-    def render_reduction(self, spec: ReductionSpec, block_rows: int,
-                         ncols: int | None = None) -> str:
-        tmpl_kwargs = dict(
-            name=spec.name,
-            in_names=[m[0] for m in spec.arg_meta],
-            scalar_names=list(spec.scalar_names),
-            loaded_vectors=list(spec.loaded_vectors),
-            prelude_lines=list(spec.prelude_lines),
-            outs=list(spec.outs),
-            block_rows=block_rows,
-        )
-        if spec.axis is None:
-            src = _REDUCE_TMPL.render(lanes=LANES, **tmpl_kwargs)
-        else:
-            src = _ROW_REDUCE_TMPL.render(ncols=ncols, **tmpl_kwargs)
-        return _with_preamble(spec, src)
-
-    def render_scan(self, spec: ScanSpec) -> tuple[str, str]:
-        src1 = _SCAN1_TMPL.render(name=f"{spec.name}_p1", dtype=spec.dtype,
-                                  cumop=spec.cumop)
-        src2 = _SCAN2_TMPL.render(
-            name=f"{spec.name}_p2", exclusive=spec.exclusive,
-            binop_expr=binop_apply(spec.binop, "y", "off"),
-            combine=binop_apply(spec.binop, "y_ref[...]", "off"))
-        return src1, src2
+    # -- render (IR -> pallas kernel source) -----------------------------
+    def render_ir(self, kir):
+        """The tiled parallel/sequential ``rows`` axis becomes the 1-D
+        grid: the template's block shape is ``(rows.block, <lane axis
+        extent>)`` and the grid steps ``extent // block`` tiles."""
+        if kir.kind == "elementwise":
+            rows = kir.axis("rows")
+            lane_ax = kir.axes[1]
+            src = _ELTWISE_TMPL.render(
+                name=kir.name,
+                in_names=[a[0] for a in kir.args],
+                out_names=[o[0] for o in kir.outs],
+                scalar_names=list(kir.meta_get("scalar_names", ())),
+                loaded_vectors=list(kir.meta_get("loaded_vectors", ())),
+                body_lines=kir.lines("body"),
+                needs_i=kir.meta_get("needs_i", False),
+                block_rows=rows.block or rows.extent,
+                lanes=lane_ax.extent,
+            )
+            return _with_preamble(kir.meta_get("preamble", ""), src)
+        if kir.kind == "reduction":
+            rows = kir.axis("rows")
+            tmpl_kwargs = dict(
+                name=kir.name,
+                in_names=[a[0] for a in kir.args],
+                scalar_names=list(kir.meta_get("scalar_names", ())),
+                loaded_vectors=list(kir.meta_get("loaded_vectors", ())),
+                prelude_lines=kir.lines("prelude"),
+                outs=list(kir.outs),
+                block_rows=rows.block or rows.extent,
+            )
+            if kir.meta_get("layout") == "flat":
+                src = _REDUCE_TMPL.render(lanes=kir.axis("lanes").extent,
+                                          **tmpl_kwargs)
+            else:
+                src = _ROW_REDUCE_TMPL.render(ncols=kir.axis("cols").extent,
+                                              **tmpl_kwargs)
+            return _with_preamble(kir.meta_get("preamble", ""), src)
+        if kir.kind == "scan":
+            src1 = _SCAN1_TMPL.render(name=f"{kir.name}_p1",
+                                      dtype=kir.meta_get("dtype"),
+                                      cumop=kir.meta_get("cumop"))
+            binop = kir.meta_get("binop")
+            src2 = _SCAN2_TMPL.render(
+                name=f"{kir.name}_p2", exclusive=kir.meta_get("exclusive"),
+                binop_expr=binop_apply(binop, "y", "off"),
+                combine=binop_apply(binop, "y_ref[...]", "off"))
+            return src1, src2
+        raise ValueError(f"unknown IR kind {kir.kind!r}")
 
     # -- elementwise -----------------------------------------------------
-    def elementwise_driver(self, spec: ElementwiseSpec, *, bucket: int,
-                           block_rows: int) -> Callable:
+    def build_elementwise(self, kir) -> Callable:
         """The pallas_call is traced once over the static ``(bucket,
         LANES)`` shape; the element count only appears at run time
         (padding on the way in, slicing on the way out), so the driver
         is reused across the whole bucket."""
         from repro.core.rtcg import SourceModule
 
+        bucket = kir.axis("rows").extent
+        block_rows = kir.axis("rows").block
+        lanes = kir.axis("lanes").extent
         grid = bucket // block_rows
-        mod = SourceModule.load(self.render_elementwise(spec, block_rows),
-                                name=spec.name)
-        kernel = mod.get_function(f"{spec.name}_kernel")
+        mod = SourceModule.load(self.render_ir(kir), name=kir.name)
+        kernel = mod.get_function(f"{kir.name}_kernel")
 
-        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+        blk = pl.BlockSpec((block_rows, lanes), lambda r: (r, 0))
         scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
         in_specs = [scl if kind == "scalar" else blk
-                    for _, _, kind in spec.arg_meta]
-        out_shape = [jax.ShapeDtypeStruct((bucket, LANES), d)
-                     for d in spec.out_dtypes]
+                    for _, _, kind in kir.args]
+        out_shape = [jax.ShapeDtypeStruct((bucket, lanes), jnp.dtype(d))
+                     for _, d in kir.outs]
 
         call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
             in_specs=in_specs,
-            out_specs=[blk] * len(spec.out_names),
+            out_specs=[blk] * len(kir.outs),
             out_shape=out_shape,
-            interpret=spec.interpret,
+            interpret=kir.meta_get("interpret", True),
         ))
-        arg_meta = spec.arg_meta
+        arg_meta = [(n, jnp.dtype(d), k) for n, d, k in kir.args]
 
         def driver(n, flat_args):
-            padded = [pad_flat_operand(kind, name, arg, dt, n, bucket)
+            padded = [pad_flat_operand(kind, name, arg, dt, n, bucket, lanes)
                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             return [o.reshape(-1)[:n] for o in outs]
 
         return driver
 
-    def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
-                                ncols: int, block_rows: int) -> Callable:
+    def build_elementwise_rows(self, kir) -> Callable:
         """One driver per (source, batch-bucket, row-length-bucket): blocks
         are ``(block_rows, ncols)`` row groups, per-row broadcast args bind
         as ``(block_rows, 1)``, per-col as ``(1, ncols)``.  Row padding is
@@ -268,27 +276,29 @@ class PallasBackend(Backend):
         reuses this compile."""
         from repro.core.rtcg import SourceModule
 
+        brows = kir.axis("rows").extent
+        block_rows = kir.axis("rows").block
+        ncols = kir.axis("lanes").extent
         grid = brows // block_rows
-        mod = SourceModule.load(self.render_elementwise(spec, block_rows, ncols),
-                                name=spec.name)
-        kernel = mod.get_function(f"{spec.name}_kernel")
+        mod = SourceModule.load(self.render_ir(kir), name=kir.name)
+        kernel = mod.get_function(f"{kir.name}_kernel")
 
         spec_map = row_block_specs(block_rows, ncols)
-        in_specs = [spec_map[kind] for _, _, kind in spec.arg_meta]
-        out_shape = [jax.ShapeDtypeStruct((brows, ncols), d)
-                     for d in spec.out_dtypes]
+        in_specs = [spec_map[kind] for _, _, kind in kir.args]
+        out_shape = [jax.ShapeDtypeStruct((brows, ncols), jnp.dtype(d))
+                     for _, d in kir.outs]
         call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
             in_specs=in_specs,
-            out_specs=[spec_map["full"]] * len(spec.out_names),
+            out_specs=[spec_map["full"]] * len(kir.outs),
             out_shape=out_shape,
-            interpret=spec.interpret,
+            interpret=kir.meta_get("interpret", True),
         ))
-        arg_meta = spec.arg_meta
+        arg_meta = [(n, jnp.dtype(d), k) for n, d, k in kir.args]
 
         def driver(b, n, flat_args):
-            padded = [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+            padded = [bind_row_operand(kind, name, arg, dt, b, n, brows, ncols)
                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             return [o[:b, :n] for o in outs]
@@ -296,38 +306,38 @@ class PallasBackend(Backend):
         return driver
 
     # -- reduction -------------------------------------------------------
-    def reduction_driver(self, spec: ReductionSpec, *, bucket: int,
-                         block_rows: int) -> Callable:
+    def build_reduction(self, kir) -> Callable:
         """One driver per (source, bucket): the element count is a runtime
         scalar feeding the in-kernel neutral mask, so any ``n`` whose
         padded rows fit the bucket reuses this compile."""
         from repro.core.rtcg import SourceModule
 
+        bucket = kir.axis("rows").extent
+        block_rows = kir.axis("rows").block
+        lanes = kir.axis("lanes").extent
         grid = bucket // block_rows
-        mod = SourceModule.load(self.render_reduction(spec, block_rows),
-                                name=spec.name)
-        kernel = mod.get_function(f"{spec.name}_kernel")
+        mod = SourceModule.load(self.render_ir(kir), name=kir.name)
+        kernel = mod.get_function(f"{kir.name}_kernel")
 
-        blk = pl.BlockSpec((block_rows, LANES), lambda r: (r, 0))
+        blk = pl.BlockSpec((block_rows, lanes), lambda r: (r, 0))
         scl = pl.BlockSpec((1, 1), lambda r: (0, 0))
         in_specs = [scl] + [scl if kind == "scalar" else blk
-                            for _, _, kind in spec.arg_meta]
-        dtypes_out = [o["dtype"] for o in spec.outs]
+                            for _, _, kind in kir.args]
         call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
             in_specs=in_specs,
-            out_specs=[pl.BlockSpec((1, 1), lambda r: (0, 0))] * len(spec.outs),
-            out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.dtype(d))
-                       for d in dtypes_out],
-            interpret=spec.interpret,
+            out_specs=[pl.BlockSpec((1, 1), lambda r: (0, 0))] * len(kir.outs),
+            out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.dtype(o["dtype"]))
+                       for o in kir.outs],
+            interpret=kir.meta_get("interpret", True),
         ))
-        arg_meta = spec.arg_meta
-        multi = spec.multi
+        arg_meta = [(n, jnp.dtype(d), k) for n, d, k in kir.args]
+        multi = kir.meta_get("multi", False)
 
         def driver(n, flat_args):
             padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            padded += [pad_flat_operand(kind, name, arg, dt, n, bucket)
+            padded += [pad_flat_operand(kind, name, arg, dt, n, bucket, lanes)
                        for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             if multi:
@@ -336,37 +346,41 @@ class PallasBackend(Backend):
 
         return driver
 
-    def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
-                              ncols: int, block_rows: int) -> Callable:
-        """Row-segmented driver: one accumulator per row, single launch.
-        The runtime row length ``n`` masks padding columns; padded *rows*
-        compute on zeros and are sliced off the (B,)-shaped outputs."""
+    def build_reduction_rows(self, kir) -> Callable:
+        """Segmented driver: one accumulator per domain row, single
+        launch.  The runtime length ``n`` masks padding columns; padded
+        *rows* compute on zeros and are sliced off the (b,)-shaped
+        outputs.  ``kir.transposed`` (axis=0 column reductions) binds
+        full operands transposed into domain order."""
         from repro.core.rtcg import SourceModule
 
+        brows = kir.axis("rows").extent
+        block_rows = kir.axis("rows").block
+        ncols = kir.axis("cols").extent
         grid = brows // block_rows
-        mod = SourceModule.load(self.render_reduction(spec, block_rows, ncols),
-                                name=spec.name)
-        kernel = mod.get_function(f"{spec.name}_kernel")
+        mod = SourceModule.load(self.render_ir(kir), name=kir.name)
+        kernel = mod.get_function(f"{kir.name}_kernel")
 
         spec_map = row_block_specs(block_rows, ncols)
         in_specs = [spec_map["scalar"]] + [spec_map[kind]
-                                           for _, _, kind in spec.arg_meta]
-        dtypes_out = [o["dtype"] for o in spec.outs]
+                                           for _, _, kind in kir.args]
         call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
             in_specs=in_specs,
-            out_specs=[spec_map["row"]] * len(spec.outs),
-            out_shape=[jax.ShapeDtypeStruct((brows, 1), jnp.dtype(d))
-                       for d in dtypes_out],
-            interpret=spec.interpret,
+            out_specs=[spec_map["row"]] * len(kir.outs),
+            out_shape=[jax.ShapeDtypeStruct((brows, 1), jnp.dtype(o["dtype"]))
+                       for o in kir.outs],
+            interpret=kir.meta_get("interpret", True),
         ))
-        arg_meta = spec.arg_meta
-        multi = spec.multi
+        arg_meta = [(n, jnp.dtype(d), k) for n, d, k in kir.args]
+        multi = kir.meta_get("multi", False)
+        transposed = kir.transposed
 
         def driver(b, n, flat_args):
             padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            padded += [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+            padded += [bind_row_operand(kind, name, arg, dt, b, n, brows,
+                                        ncols, transposed)
                        for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             if multi:
@@ -376,20 +390,21 @@ class PallasBackend(Backend):
         return driver
 
     # -- scan ------------------------------------------------------------
-    def scan_driver(self, spec: ScanSpec, *, grid: int,
-                    block_n: int) -> Callable:
+    def build_scan(self, kir) -> Callable:
         """One driver per (source, grid bucket, block_n): padding with the
         neutral element makes the tail blocks no-ops, so any ``n`` needing
         at most ``grid`` blocks reuses this compile."""
         from repro.core.rtcg import SourceModule
 
-        bn = block_n
+        grid = kir.axis("stream.o").extent
+        bn = kir.axis("stream.i").extent
         pn = grid * bn
-        dt = jnp.dtype(spec.dtype)
+        dt = jnp.dtype(kir.meta_get("dtype"))
+        interpret = kir.meta_get("interpret", True)
 
-        src1, src2 = self.render_scan(spec)
-        k1 = SourceModule.load(src1).get_function(f"{spec.name}_p1")
-        k2 = SourceModule.load(src2).get_function(f"{spec.name}_p2")
+        src1, src2 = self.render_ir(kir)
+        k1 = SourceModule.load(src1).get_function(f"{kir.name}_p1")
+        k2 = SourceModule.load(src2).get_function(f"{kir.name}_p2")
 
         row = pl.BlockSpec((1, bn), lambda i: (i, 0))
         one = pl.BlockSpec((1, 1), lambda i: (i, 0))
@@ -397,14 +412,14 @@ class PallasBackend(Backend):
             k1, grid=(grid,), in_specs=[row], out_specs=[row, one],
             out_shape=[jax.ShapeDtypeStruct((grid, bn), dt),
                        jax.ShapeDtypeStruct((grid, 1), dt)],
-            interpret=spec.interpret)
+            interpret=interpret)
         p2 = pl.pallas_call(
             k2, grid=(grid,), in_specs=[row, one], out_specs=row,
             out_shape=jax.ShapeDtypeStruct((grid, bn), dt),
-            interpret=spec.interpret)
+            interpret=interpret)
 
-        neutral = spec.neutral
-        binop = spec.binop
+        neutral = kir.meta_get("neutral")
+        binop = kir.meta_get("binop")
 
         @jax.jit
         def core(xp):

@@ -1,11 +1,14 @@
 """XlaBackend — pure-XLA execution target (no Pallas dependency).
 
-The paper's "second toolkit": the same rendered snippets the Pallas
-backend tiles into VMEM blocks lower here to plain ``jnp`` operations
-over whole (bucketed) operands, compiled by ``jax.jit`` — masked
-segment reductions instead of grid-step accumulators, broadcast
-epilogues instead of BlockSpec binding, associative host-free scans
-instead of the two-pass blocked scan.  PyCUDA vs PyOpenCL in miniature:
+The paper's "second toolkit": the same kernel IR the Pallas backend
+tiles into VMEM blocks renders here to plain ``jnp`` operations over
+whole (bucketed) operands, compiled by ``jax.jit`` — masked segment
+reductions instead of grid-step accumulators, broadcast epilogues
+instead of BlockSpec binding, associative host-free scans instead of
+the two-pass blocked scan.  Tiled axes are ignored (there is no grid);
+only the IR's axis *extents* shape the code, which is why this backend
+is ``block_sensitive = False``.  A ``transpose_layout`` entry is
+honored the same way as on pallas: bind full operands transposed.  PyCUDA vs PyOpenCL in miniature:
 everything upstream of ``render`` (snippet translation, fusion
 planning, bucketing math, caching, autotuning) is shared verbatim;
 only the compile-and-launch step differs.
@@ -34,9 +37,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.backends.base import (Backend, ElementwiseSpec,
-                                      ReductionSpec, ScanSpec, binop_apply)
-from repro.core.platform import LANES, pad_flat_operand, pad_row_operand
+from repro.core.backends.base import Backend, bind_row_operand, binop_apply
+from repro.core.platform import LANES, pad_flat_operand
 from repro.core.templates import KernelTemplate
 
 # The XLA lowering of an elementwise spec: one function over the whole
@@ -133,6 +135,10 @@ def {{ name }}_fn(x):
 )
 
 
+def _with_preamble(preamble: str, src: str) -> str:
+    return (preamble + "\n" + src) if preamble else src
+
+
 class XlaBackend(Backend):
     name = "xla"
     block_sensitive = False  # code depends on padded shape, never block size
@@ -144,78 +150,86 @@ class XlaBackend(Backend):
             "jax": jax.__version__,
         }
 
-    # -- render ----------------------------------------------------------
-    def render_elementwise(self, spec: ElementwiseSpec, rows: int,
-                           ncols: int | None = None) -> str:
-        src = _ELTWISE_TMPL.render(
-            name=spec.name,
-            in_names=[m[0] for m in spec.arg_meta],
-            out_names=list(spec.out_names),
-            scalar_names=list(spec.scalar_names),
-            body_lines=list(spec.body_lines),
-            needs_i=spec.needs_i,
-            rows=rows,
-            lanes=ncols if ncols is not None else LANES,
-        )
-        return (spec.preamble + "\n" + src) if spec.preamble else src
-
-    def render_reduction(self, spec: ReductionSpec, rows: int,
-                         ncols: int | None = None) -> str:
-        tmpl_kwargs = dict(
-            name=spec.name,
-            in_names=[m[0] for m in spec.arg_meta],
-            scalar_names=list(spec.scalar_names),
-            prelude_lines=list(spec.prelude_lines),
-            outs=list(spec.outs),
-            rows=rows,
-        )
-        if spec.axis is None:
-            src = _REDUCE_TMPL.render(lanes=LANES, **tmpl_kwargs)
-        else:
-            src = _ROW_REDUCE_TMPL.render(ncols=ncols, **tmpl_kwargs)
-        return (spec.preamble + "\n" + src) if spec.preamble else src
-
-    def render_scan(self, spec: ScanSpec) -> str:
-        # inclusive-with-neutral: PallasBackend's carries fold the
-        # neutral into every element (identity neutrals are no-ops)
-        return _SCAN_TMPL.render(
-            name=spec.name, dtype=spec.dtype, neutral=spec.neutral,
-            exclusive=spec.exclusive,
-            inclusive_expr=binop_apply(spec.binop, f"{spec.cumop}(x)", "_nv"))
+    # -- render (IR -> jitted-jnp source) --------------------------------
+    def render_ir(self, kir) -> str:
+        """Only axis *extents* matter: the templates compute over the
+        whole padded block, so the tiled ``rows.block`` never appears
+        in the source (every tuning candidate shares one compile)."""
+        if kir.kind == "elementwise":
+            src = _ELTWISE_TMPL.render(
+                name=kir.name,
+                in_names=[a[0] for a in kir.args],
+                out_names=[o[0] for o in kir.outs],
+                scalar_names=list(kir.meta_get("scalar_names", ())),
+                body_lines=kir.lines("body"),
+                needs_i=kir.meta_get("needs_i", False),
+                rows=kir.axis("rows").extent,
+                lanes=kir.axes[1].extent,
+            )
+            return _with_preamble(kir.meta_get("preamble", ""), src)
+        if kir.kind == "reduction":
+            tmpl_kwargs = dict(
+                name=kir.name,
+                in_names=[a[0] for a in kir.args],
+                scalar_names=list(kir.meta_get("scalar_names", ())),
+                prelude_lines=kir.lines("prelude"),
+                outs=list(kir.outs),
+                rows=kir.axis("rows").extent,
+            )
+            if kir.meta_get("layout") == "flat":
+                src = _REDUCE_TMPL.render(lanes=kir.axis("lanes").extent,
+                                          **tmpl_kwargs)
+            else:
+                src = _ROW_REDUCE_TMPL.render(ncols=kir.axis("cols").extent,
+                                              **tmpl_kwargs)
+            return _with_preamble(kir.meta_get("preamble", ""), src)
+        if kir.kind == "scan":
+            # inclusive-with-neutral: PallasBackend's carries fold the
+            # neutral into every element (identity neutrals are no-ops)
+            return _SCAN_TMPL.render(
+                name=kir.name, dtype=kir.meta_get("dtype"),
+                neutral=kir.meta_get("neutral"),
+                exclusive=kir.meta_get("exclusive"),
+                inclusive_expr=binop_apply(kir.meta_get("binop"),
+                                           f"{kir.meta_get('cumop')}(x)",
+                                           "_nv"))
+        raise ValueError(f"unknown IR kind {kir.kind!r}")
 
     def _compile(self, src: str, fn_name: str, name: str) -> Callable:
         from repro.core.rtcg import SourceModule
 
         return jax.jit(SourceModule.load(src, name=name).get_function(fn_name))
 
+    @staticmethod
+    def _arg_meta(kir):
+        return [(n, jnp.dtype(d), k) for n, d, k in kir.args]
+
     # -- elementwise -----------------------------------------------------
-    def elementwise_driver(self, spec: ElementwiseSpec, *, bucket: int,
-                           block_rows: int) -> Callable:
+    def build_elementwise(self, kir) -> Callable:
         """Same bucket economics as the Pallas driver: the jitted function
         is traced once over the static ``(bucket, LANES)`` shape and the
-        runtime ``n`` only pads and slices.  ``block_rows`` does not
-        change the generated code (there are no blocks), so every tuning
-        candidate shares one compile."""
-        call = self._compile(self.render_elementwise(spec, bucket),
-                             f"{spec.name}_fn", spec.name)
-        arg_meta = spec.arg_meta
+        runtime ``n`` only pads and slices."""
+        bucket = kir.axis("rows").extent
+        lanes = kir.axis("lanes").extent
+        call = self._compile(self.render_ir(kir), f"{kir.name}_fn", kir.name)
+        arg_meta = self._arg_meta(kir)
 
         def driver(n, flat_args):
-            padded = [pad_flat_operand(kind, name, arg, dt, n, bucket)
+            padded = [pad_flat_operand(kind, name, arg, dt, n, bucket, lanes)
                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             return [o.reshape(-1)[:n] for o in outs]
 
         return driver
 
-    def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
-                                ncols: int, block_rows: int) -> Callable:
-        call = self._compile(self.render_elementwise(spec, brows, ncols),
-                             f"{spec.name}_fn", spec.name)
-        arg_meta = spec.arg_meta
+    def build_elementwise_rows(self, kir) -> Callable:
+        brows = kir.axis("rows").extent
+        ncols = kir.axis("lanes").extent
+        call = self._compile(self.render_ir(kir), f"{kir.name}_fn", kir.name)
+        arg_meta = self._arg_meta(kir)
 
         def driver(b, n, flat_args):
-            padded = [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+            padded = [bind_row_operand(kind, name, arg, dt, b, n, brows, ncols)
                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             return [o[:b, :n] for o in outs]
@@ -223,16 +237,16 @@ class XlaBackend(Backend):
         return driver
 
     # -- reduction -------------------------------------------------------
-    def reduction_driver(self, spec: ReductionSpec, *, bucket: int,
-                         block_rows: int) -> Callable:
-        call = self._compile(self.render_reduction(spec, bucket),
-                             f"{spec.name}_fn", spec.name)
-        arg_meta = spec.arg_meta
-        multi = spec.multi
+    def build_reduction(self, kir) -> Callable:
+        bucket = kir.axis("rows").extent
+        lanes = kir.axis("lanes").extent
+        call = self._compile(self.render_ir(kir), f"{kir.name}_fn", kir.name)
+        arg_meta = self._arg_meta(kir)
+        multi = kir.meta_get("multi", False)
 
         def driver(n, flat_args):
             padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            padded += [pad_flat_operand(kind, name, arg, dt, n, bucket)
+            padded += [pad_flat_operand(kind, name, arg, dt, n, bucket, lanes)
                        for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             if multi:
@@ -241,16 +255,18 @@ class XlaBackend(Backend):
 
         return driver
 
-    def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
-                              ncols: int, block_rows: int) -> Callable:
-        call = self._compile(self.render_reduction(spec, brows, ncols),
-                             f"{spec.name}_fn", spec.name)
-        arg_meta = spec.arg_meta
-        multi = spec.multi
+    def build_reduction_rows(self, kir) -> Callable:
+        brows = kir.axis("rows").extent
+        ncols = kir.axis("cols").extent
+        call = self._compile(self.render_ir(kir), f"{kir.name}_fn", kir.name)
+        arg_meta = self._arg_meta(kir)
+        multi = kir.meta_get("multi", False)
+        transposed = kir.transposed
 
         def driver(b, n, flat_args):
             padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
-            padded += [pad_row_operand(kind, name, arg, dt, b, n, brows, ncols)
+            padded += [bind_row_operand(kind, name, arg, dt, b, n, brows,
+                                        ncols, transposed)
                        for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             if multi:
@@ -260,18 +276,16 @@ class XlaBackend(Backend):
         return driver
 
     # -- scan ------------------------------------------------------------
-    def scan_driver(self, spec: ScanSpec, *, grid: int,
-                    block_n: int) -> Callable:
+    def build_scan(self, kir) -> Callable:
         """Padded to the same ``grid * block_n`` stream as the blocked
         Pallas scan (one traced shape per bucket; neutral padding keeps
         the tail inert), then one associative cumulative op."""
         import numpy as np
 
-        pn = grid * block_n
-        dt = jnp.dtype(spec.dtype)
-        call = self._compile(self.render_scan(spec), f"{spec.name}_fn",
-                             spec.name)
-        neutral = spec.neutral
+        pn = kir.axis("stream.o").extent * kir.axis("stream.i").extent
+        dt = jnp.dtype(kir.meta_get("dtype"))
+        call = self._compile(self.render_ir(kir), f"{kir.name}_fn", kir.name)
+        neutral = kir.meta_get("neutral")
 
         def driver(n, x):
             xf = jnp.ravel(jnp.asarray(x)).astype(dt)

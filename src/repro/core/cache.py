@@ -56,12 +56,18 @@ def environment_fingerprint(backend: str | None = None) -> dict:
         from repro.core.backends import active_backend_name
 
         backend = active_backend_name()
+    # lazy import (ir imports stable_hash from here): the IR schema
+    # version invalidates persisted artifacts when the lowering or the
+    # transformation vocabulary changes shape
+    from repro.core.ir import IR_SCHEMA_VERSION
+
     return {
         "jax": jax.__version__,
         "python": platform.python_version(),
         "backend": platform_name,
         "device_kind": device_kind,
         "rtcg_backend": backend.lower(),
+        "ir_schema": IR_SCHEMA_VERSION,
     }
 
 

@@ -177,11 +177,19 @@ def bucket_cols(n: int, lanes: int = LANES) -> int:
     return next_pow2(-(-max(1, int(n)) // lanes)) * lanes
 
 
-def rc_bucket(b: int, n: int, lanes: int = LANES) -> tuple:
+def rc_bucket(b: int, n: int, lanes: int = LANES,
+              transposed: bool = False) -> tuple:
     """(batch, row-length) bucket pair — the per-bucket tuning key for
     row-segmented kernels, independent of ``block_rows`` (analogue of
-    `n_bucket` for the 2-D layout)."""
-    return (next_pow2(max(1, int(b))), next_pow2(-(-max(1, int(n)) // lanes)))
+    `n_bucket` for the 2-D layout).
+
+    ``transposed=True`` appends a layout marker: axis=0 column
+    reductions run the segmented kernel over the transposed domain, so
+    their winners must never collide with axis=-1 winners for the same
+    geometry in the tuning store or breaker cells (a square (N, N)
+    operand would otherwise share a key across both layouts)."""
+    pair = (next_pow2(max(1, int(b))), next_pow2(-(-max(1, int(n)) // lanes)))
+    return pair + ("T",) if transposed else pair
 
 
 def default_batch_block(b: int, target_grid: int = 8, min_rows: int = 1,
@@ -266,12 +274,27 @@ def get_or_build(key: Any, builder: Callable[[], Callable],
     ``key`` too — the tag only labels the counter.  ``name``/``bucket``
     identify the kernel to the fault probe (the ``compile`` site fires
     *before* the builder runs, so a failed build never half-counts);
-    transient compile faults are absorbed by bounded retries."""
+    transient compile faults are absorbed by bounded retries.
+
+    ``REPRO_IR_STRICT=1`` additionally asserts the builder went through
+    the kernel-IR pipeline (`repro.core.ir.mark_rendered`) — the CI
+    IR-parity leg's proof that no legacy string path builds drivers."""
     tag = backend or _UNTAGGED
 
     def build():
-        return run_with_retries(builder, site="compile", backend=tag,
-                                family=name, bucket=bucket)
+        strict = os.environ.get("REPRO_IR_STRICT", "") not in ("", "0")
+        if strict:
+            from repro.core import ir as _ir
+            _ir.clear_rendered()
+        drv = run_with_retries(builder, site="compile", backend=tag,
+                               family=name, bucket=bucket)
+        if strict:
+            from repro.core import ir as _ir
+            if not _ir.take_rendered():
+                raise AssertionError(
+                    f"REPRO_IR_STRICT: driver {key!r} was built without "
+                    f"the kernel-IR pipeline (legacy string path)")
+        return drv
 
     return _driver_cache.get_or_create(
         key, build, on_create=lambda: _record_compile(tag, key))

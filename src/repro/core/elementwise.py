@@ -167,15 +167,24 @@ class ElementwiseKernel:
                          be_name: str) -> int:
         if block_rows:
             return block_rows
-        tuned = self._tuned.get((be_name, dispatch.n_bucket(n)))
-        return tuned or self.block_rows or dispatch.default_block_rows(n)
+        from repro.core import autotune
+        bucket = dispatch.n_bucket(n)
+        tuned = self._tuned.get((be_name, bucket))
+        return (tuned
+                or autotune.sequence_param(f"eltwise.{self.name}", be_name,
+                                           bucket, "block_rows")
+                or self.block_rows or dispatch.default_block_rows(n))
 
     def _rows_geometry(self, call_args) -> tuple[int, int]:
         return rows_geometry(call_args[self._first_vec_pos])
 
     def _call_rows(self, call_args, block_rows: int | None, be):
+        from repro.core import autotune
         b, n = self._rows_geometry(call_args)
-        br = (block_rows or self._tuned.get((be.name, dispatch.rc_bucket(b, n)))
+        bucket = dispatch.rc_bucket(b, n)
+        br = (block_rows or self._tuned.get((be.name, bucket))
+              or autotune.sequence_param(f"eltwise.{self.name}", be.name,
+                                         bucket, "block_rows")
               or self.block_rows or dispatch.default_batch_block(b))
         brows = dispatch.bucket_batch(b, br)
         ncols = dispatch.bucket_cols(n)

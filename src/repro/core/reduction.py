@@ -51,6 +51,14 @@ include `BroadcastArg`s: per-row values from earlier launches bind as
 ``(B, 1)``, per-col weights as ``(1, N)``.  ``prelude`` lists extra
 C-dialect assignment statements (hoisted common subexpressions)
 evaluated once per block before the map expressions.
+
+Column-segmented form (kernel IR, PR 7): ``axis=0`` reduces each
+*column* of a ``(B, N)`` operand to a length-N vector in one launch.
+The family reuses the row-segmented machinery unchanged by applying the
+IR's ``transpose_layout`` transformation during lowering: the kernel
+domain becomes ``(N, B)`` (every output column is a domain row), arg
+kinds swap per-row <-> per-col, and the rendered driver transposes full
+operands when binding — call sites keep passing storage-order data.
 """
 
 from __future__ import annotations
@@ -114,9 +122,10 @@ class ReductionKernel:
         self.block_rows = block_rows
         self.interpret = (not on_tpu()) if interpret is None else interpret
         self.backend = backend  # None: resolve REPRO_BACKEND per call
-        if axis not in (None, -1):
-            raise NotImplementedError("only axis=None (full) or axis=-1 "
-                                      "(row-segmented) reductions")
+        if axis not in (None, -1, 0):
+            raise NotImplementedError("only axis=None (full), axis=-1 "
+                                      "(row-segmented) or axis=0 "
+                                      "(column-segmented) reductions")
         self.axis = axis
         self.prelude = list(prelude or [])
 
@@ -132,9 +141,9 @@ class ReductionKernel:
         self.vector_args = [a for a in self.args if isinstance(a, VectorArg)]
         self.bcast_args = [a for a in self.args if isinstance(a, BroadcastArg)]
         if self.bcast_args and self.axis is None:
-            raise ValueError("BroadcastArg requires the row-segmented form "
-                             "(axis=-1); a flat reduction cannot bind per-row "
-                             "values")
+            raise ValueError("BroadcastArg requires a segmented form "
+                             "(axis=-1 or axis=0); a flat reduction cannot "
+                             "bind per-row/per-col values")
         if not self.vector_args:
             raise ValueError("reduction needs at least one vector argument")
         names = [a.name for a in self.args]
@@ -189,18 +198,37 @@ class ReductionKernel:
                          be_name: str) -> int:
         if block_rows:
             return block_rows
-        tuned = self._tuned.get((be_name, dispatch.n_bucket(n)))
-        return tuned or self.block_rows or dispatch.default_block_rows(n)
+        from repro.core import autotune
+        bucket = dispatch.n_bucket(n)
+        tuned = self._tuned.get((be_name, bucket))
+        return (tuned
+                or autotune.sequence_param(f"reduce.{self.name}", be_name,
+                                           bucket, "block_rows")
+                or self.block_rows or dispatch.default_block_rows(n))
 
     def _rows_geometry(self, call_args) -> tuple[int, int]:
         return rows_geometry(call_args[self._first_vec_pos])
 
-    def _call_rows(self, call_args, block_rows: int | None, be):
+    def _domain_geometry(self, call_args) -> tuple[int, int]:
+        """Kernel-domain (rows, cols) counts.  axis=-1 reduces each
+        storage row, so the domain is the storage geometry; axis=0
+        reduces each storage *column*, so `transpose_layout` makes every
+        output column a domain row — (B, N) storage becomes an (N, B)
+        domain.  Operands still travel in storage order; the rendered
+        driver transposes full operands when binding."""
         b, n = self._rows_geometry(call_args)
-        br = (block_rows or self._tuned.get((be.name, dispatch.rc_bucket(b, n)))
-              or self.block_rows or dispatch.default_batch_block(b))
-        brows = dispatch.bucket_batch(b, br)
-        ncols = dispatch.bucket_cols(n)
+        return (n, b) if self.axis == 0 else (b, n)
+
+    def _call_rows(self, call_args, block_rows: int | None, be):
+        from repro.core import autotune
+        tb, tn = self._domain_geometry(call_args)
+        bucket = dispatch.rc_bucket(tb, tn, transposed=(self.axis == 0))
+        br = (block_rows or self._tuned.get((be.name, bucket))
+              or autotune.sequence_param(f"reduce.{self.name}", be.name,
+                                         bucket, "block_rows")
+              or self.block_rows or dispatch.default_batch_block(tb))
+        brows = dispatch.bucket_batch(tb, br)
+        ncols = dispatch.bucket_cols(tn)
         key = ("reduce_rows", be.name, self._content_key, brows, ncols,
                br if be.block_sensitive else 0)
         drv = dispatch.get_or_build(
@@ -209,7 +237,7 @@ class ReductionKernel:
                                              ncols=ncols, block_rows=br),
             backend=be.name, name=self.name, bucket=(brows, ncols))
         out = dispatch.run_with_retries(
-            lambda: drv(b, n, call_args), site="launch", backend=be.name,
+            lambda: drv(tb, tn, call_args), site="launch", backend=be.name,
             family=self.name, bucket=(brows, ncols))
         dispatch.record_launch(be.name)
         return out
@@ -244,7 +272,7 @@ class ReductionKernel:
         br = params["block_rows"]
         vec_bytes = sum(jnp.dtype(v.jnp_dtype).itemsize for v in self.vector_args)
         if self.axis is not None:
-            b, n = self._rows_geometry(args)
+            b, n = self._domain_geometry(args)
             brows = dispatch.bucket_batch(b, br)
             ncols = dispatch.bucket_cols(n)
             return BlockCost(
@@ -281,13 +309,15 @@ class ReductionKernel:
         builder = lambda block_rows: (
             lambda *a: self(*a, block_rows=block_rows, backend=be))
         if self.axis is not None:
-            b, n = self._rows_geometry(call_args)
+            tb, tn = self._domain_geometry(call_args)
             return tune_per_bucket(
                 f"reduce.{self.name}", builder=builder, cost_fn=self.block_cost,
-                candidates=candidates or batch_block_candidates(b),
-                args=call_args, n=n, tuned=self._tuned, param="block_rows",
+                candidates=candidates or batch_block_candidates(tb),
+                args=call_args, n=tn, tuned=self._tuned, param="block_rows",
                 measure=measure, cache=cache, repeats=repeats, warmup=warmup,
-                prune_keep=prune_keep, bucket_key=dispatch.rc_bucket(b, n),
+                prune_keep=prune_keep,
+                bucket_key=dispatch.rc_bucket(tb, tn,
+                                              transposed=(self.axis == 0)),
                 signature_fn=dispatch.bucketed_signature_2d, backend=be.name)
         first = call_args[self._first_vec_pos]
         n = int(getattr(first, "size", 0)) or int(np.prod(first.shape))

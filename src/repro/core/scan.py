@@ -85,8 +85,13 @@ class ScanKernel:
     def _pick_block_n(self, n: int, block_n: int | None, be_name: str) -> int:
         if block_n:
             return block_n
-        tuned = self._tuned.get((be_name, dispatch.n_bucket(n)))
-        return tuned or self.block_n
+        from repro.core import autotune
+        bucket = dispatch.n_bucket(n)
+        tuned = self._tuned.get((be_name, bucket))
+        return (tuned
+                or autotune.sequence_param(f"scan.{self.name}", be_name,
+                                           bucket, "block_n")
+                or self.block_n)
 
     def __call__(self, x, block_n: int | None = None,
                  backend: "str | None" = None):

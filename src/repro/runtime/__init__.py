@@ -133,6 +133,16 @@ class ServingRuntime:
                     backend=be, family=family).value
 
             params = {"stable": stable}
+        elif family == "softmax.axis0":
+            stable = bool(shared.get("stable", True))
+
+            def run(be):
+                # column softmax: the kernel IR's transpose_layout domain
+                return ga.softmax(ga.RTCGArray(X), stable=stable,
+                                  axis=0).evaluate(
+                    backend=be, family=family).value
+
+            params = {"stable": stable}
         elif family == "rmsnorm":
             w = jnp.asarray(shared["w"]).astype(X.dtype)
             eps = float(shared.get("eps", 1e-6))
@@ -145,16 +155,25 @@ class ServingRuntime:
             params = {"eps": eps}
         else:
             raise ValueError(f"unknown runtime family {family!r} "
-                             "(softmax | rmsnorm)")
+                             "(softmax | softmax.axis0 | rmsnorm)")
         return self._timed(family, (b, n), str(X.dtype), params, run,
                            backend=backend, record=record)
 
     # -- direct (already-batched) calls ----------------------------------
     def softmax(self, x, stable: bool = True,
-                backend: "str | None" = None):
+                backend: "str | None" = None, axis: int = -1):
         """Routed softmax over a whole operand (any batch shape): ONE
-        2-launch row schedule, with telemetry + manifest recording."""
+        2-launch row schedule, with telemetry + manifest recording.
+        ``axis=0`` normalizes the *columns* of a 2-D operand (the kernel
+        IR's ``transpose_layout`` domain) — same 2-launch schedule,
+        routed and recorded under the ``softmax.axis0`` family."""
         X = jnp.asarray(x)
+        if axis in (0, -2) and X.ndim >= 2:
+            if X.ndim != 2:
+                raise ValueError("axis=0 softmax requires a 2-D operand")
+            out = self._run_batch("softmax.axis0", X, {"stable": stable},
+                                  backend=backend)
+            return out.reshape(X.shape).astype(X.dtype)
         rows = X.reshape(-1, X.shape[-1]) if X.ndim >= 2 else X.reshape(1, -1)
         out = self._run_batch("softmax", rows, {"stable": stable},
                               backend=backend)
@@ -237,7 +256,13 @@ class ServingRuntime:
         window timing (a quiet period flushes 5 rows, not 16), and a
         ``K'``-row flush uses exactly the driver of the
         ``next_pow2(K')`` batch bucket — so warming the pow2 ladder
-        covers every partial-flush geometry live traffic can produce."""
+        covers every partial-flush geometry live traffic can produce.
+
+        Persisted transformation sequences load *first*, so replayed
+        kernels build with the winning tiled/transposed schedules — the
+        zero-compile-on-replay property covers the transformed drivers,
+        not their untuned defaults."""
+        self.manifest.load_sequences()
 
         def run_entry(entry):
             geometry = tuple(int(d) for d in entry["geometry"])
@@ -270,7 +295,8 @@ class ServingRuntime:
             "backend": self.backend,
             "executor": self.executor.stats(),
             "router": self.router.stats(),
-            "manifest": {"entries": len(self.manifest)},
+            "manifest": {"entries": len(self.manifest),
+                         "sequences": len(self.manifest.sequences())},
             "dispatch": dispatch.stats(),
             "degradations": dispatch.degradation_counts(),
             "breaker": self.router.breaker.stats(),

@@ -19,6 +19,17 @@ serves its first real request with ``dispatch.compile_count`` flat.
 Entries are deduplicated per ``(family, bucket, dtype, backend,
 params)``; the document is merged read-modify-write (`DiskCache.update`)
 so concurrent runtimes append without clobbering each other.
+
+Transformation sequences (kernel IR, DESIGN.md §11): alongside the
+replay entries the manifest persists the winning IR transformation
+sequence per ``(tune name, backend, bucket)`` — fed by the
+`autotune.WINNER_HOOKS` fan-out while listening.  ``load_sequences()``
+(called by ``runtime.warmup()`` before replay) seeds the in-process
+`autotune.SEQUENCE_STORE` from the document, so a fresh process replays
+*transformed* kernels — the same tiled/transposed schedules the tuner
+picked — and the zero-compile-on-replay property covers them too.
+Sequences are a separate document section; they never count as replay
+entries.
 """
 
 from __future__ import annotations
@@ -38,7 +49,7 @@ DOC_KEY = "manifest-v1"
 MAX_OBSERVED_KEYS = 512
 
 
-def _sane_doc(doc) -> tuple[dict, list]:
+def _sane_doc(doc) -> tuple[dict, list, dict]:
     """Best-effort view of a persisted manifest document: a corrupt file
     already reads as ``{}`` (DiskCache quarantines it), but a well-formed
     JSON of the wrong *shape* (hand-edited, version drift) must not kill
@@ -46,15 +57,19 @@ def _sane_doc(doc) -> tuple[dict, list]:
     non-dict entry values are dropped.  Malformed-but-dict entries are
     kept — `replay` reports them per entry in its ``errors`` list."""
     if not isinstance(doc, dict):
-        return {}, []
+        return {}, [], {}
     entries = doc.get("entries", {})
     if not isinstance(entries, dict):
         entries = {}
     observed = doc.get("observed_keys", [])
     if not isinstance(observed, list):
         observed = []
+    sequences = doc.get("sequences", {})
+    if not isinstance(sequences, dict):
+        sequences = {}
     return ({k: v for k, v in entries.items() if isinstance(v, dict)},
-            list(observed))
+            list(observed),
+            {k: v for k, v in sequences.items() if isinstance(v, dict)})
 
 
 def entry_key(family: str, geometry: tuple, dtype: str, backend: str,
@@ -75,9 +90,10 @@ class WarmStartManifest:
         self.cache = cache if cache is not None else DiskCache(NAMESPACE)
         self.doc_key = doc_key
         self._lock = threading.Lock()
-        entries, observed = _sane_doc(self.cache.get(self.doc_key))
+        entries, observed, sequences = _sane_doc(self.cache.get(self.doc_key))
         self._entries: dict = entries
         self._observed: list = observed
+        self._sequences: dict = sequences
         self._listening = False
 
     # -- recording -------------------------------------------------------
@@ -107,28 +123,104 @@ class WarmStartManifest:
             self._observed.append(repr(key))
             del self._observed[:-MAX_OBSERVED_KEYS]
 
+    # -- transformation sequences (kernel IR) -----------------------------
+    @staticmethod
+    def _sequence_key(name: str, backend: "str | None", bucket: Any) -> str:
+        b = list(bucket) if isinstance(bucket, (list, tuple)) else bucket
+        return stable_hash([name, backend or "", repr(b)])[:16]
+
+    def record_sequence(self, name: str, backend: "str | None", bucket: Any,
+                        sequence, seconds: "float | None" = None) -> bool:
+        """Persist a winning transformation sequence per ``(name,
+        backend, bucket)``; returns True when the cell was new or the
+        sequence changed.  Never counts toward ``len(self)``."""
+        rec = {
+            "name": name,
+            "backend": backend,
+            "bucket": (list(bucket) if isinstance(bucket, (list, tuple))
+                       else bucket),
+            "sequence": [[op, dict(params)] for op, params in sequence],
+            "seconds": seconds,
+        }
+        sk = self._sequence_key(name, backend, bucket)
+        with self._lock:
+            prev = self._sequences.get(sk)
+            if prev is not None and prev.get("sequence") == rec["sequence"]:
+                return False
+            self._sequences[sk] = rec
+        self._persist()
+        return True
+
+    def sequences(self) -> list[dict]:
+        with self._lock:
+            return [dict(r) for r in self._sequences.values()]
+
+    def load_sequences(self) -> int:
+        """Seed the in-process `autotune.SEQUENCE_STORE` from the
+        persisted document (``runtime.warmup()`` calls this before
+        replay, so replayed kernels build with their winning
+        transformation chains); returns the count loaded."""
+        from repro.core import autotune
+
+        entries, observed, sequences = _sane_doc(self.cache.get(self.doc_key))
+        with self._lock:
+            self._sequences = sequences
+            records = [dict(r) for r in sequences.values()]
+        loaded = 0
+        for rec in records:
+            seq = rec.get("sequence") or []
+            try:
+                autotune.record_sequence(
+                    rec["name"], rec.get("backend"),
+                    tuple(rec["bucket"]) if isinstance(rec.get("bucket"), list)
+                    else rec.get("bucket"),
+                    [(op, dict(params)) for op, params in seq])
+                loaded += 1
+            except Exception:  # a malformed record must not kill startup
+                continue
+        return loaded
+
+    def _on_winner(self, name: str, backend: "str | None", bucket: Any,
+                   seconds: float, sequence: "tuple | None" = None) -> None:
+        """`autotune.WINNER_HOOKS` listener: persist the winning
+        transformation sequence alongside the replay entries."""
+        if sequence:
+            self.record_sequence(name, backend, bucket, sequence,
+                                 seconds=float(seconds))
+
     def start_listening(self) -> None:
         if not self._listening:
             self._listening = True
             dispatch.add_compile_listener(self.observe_compile)
+            from repro.core import autotune
+            autotune.WINNER_HOOKS.append(self._on_winner)
 
     def stop_listening(self) -> None:
         if self._listening:
             self._listening = False
             dispatch.remove_compile_listener(self.observe_compile)
+            from repro.core import autotune
+            try:
+                autotune.WINNER_HOOKS.remove(self._on_winner)
+            except ValueError:
+                pass
 
     def _persist(self) -> None:
         with self._lock:
             entries = dict(self._entries)
             observed = list(self._observed)
+            sequences = {k: dict(v) for k, v in self._sequences.items()}
 
         def merge(doc):
-            prev_entries, prev_observed = _sane_doc(doc)
+            prev_entries, prev_observed, prev_sequences = _sane_doc(doc)
             merged = dict(prev_entries)
             merged.update(entries)
             seen = list(dict.fromkeys(prev_observed + observed))
+            merged_seq = dict(prev_sequences)
+            merged_seq.update(sequences)
             return {"entries": merged,
-                    "observed_keys": seen[-MAX_OBSERVED_KEYS:]}
+                    "observed_keys": seen[-MAX_OBSERVED_KEYS:],
+                    "sequences": merged_seq}
 
         self.cache.update(self.doc_key, merge, default={})
 
@@ -140,18 +232,21 @@ class WarmStartManifest:
     def reload(self) -> int:
         """Re-read the persisted document (a fresh process's first step);
         returns the entry count."""
-        entries, observed = _sane_doc(self.cache.get(self.doc_key))
+        entries, observed, sequences = _sane_doc(self.cache.get(self.doc_key))
         with self._lock:
             self._entries = entries
             self._observed = observed
+            self._sequences = sequences
             return len(self._entries)
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
             self._observed.clear()
+            self._sequences.clear()
         self.cache.update(self.doc_key, lambda _:
-                          {"entries": {}, "observed_keys": []}, default={})
+                          {"entries": {}, "observed_keys": [],
+                           "sequences": {}}, default={})
 
     def __len__(self) -> int:
         with self._lock:

@@ -67,9 +67,12 @@ def _install_winner_hook() -> None:
 
 
 def _seed_routers_from_winner(name: str, backend: "str | None", bucket: Any,
-                              seconds: float) -> None:
+                              seconds: float,
+                              sequence: "tuple | None" = None) -> None:
     """`autotune.tune_per_bucket` winner hook: a tuned kernel's best
-    measured score is a latency prior for its (backend, bucket)."""
+    measured score is a latency prior for its (backend, bucket).  The
+    winning transformation sequence rides along for manifest listeners;
+    the router only needs the score."""
     if not backend:
         return
     nb = tuple(bucket) if isinstance(bucket, tuple) else (int(bucket),)

@@ -1,0 +1,162 @@
+"""axis=0 column reductions (kernel IR `transpose_layout`, DESIGN.md §11).
+
+Covers: ``.sum/.max/.mean(axis=0)`` over 2-D operands through the lazy
+planner on BOTH backends with exact launch counts, parity sweeps across
+batch sizes x bucket-boundary row lengths, axis=0 softmax staying the
+2-launch wave+epilogue schedule (stable included), the ``transposed``
+bucket key separating axis=0 winners from axis=-1 winners, mixed
+axis=0/axis=-1 graphs scheduling into separate waves, and the serving
+runtime's ``softmax(..., axis=0)`` family.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.core.array as ga
+from repro.core import dispatch
+
+rng = np.random.default_rng(11)
+
+BOUNDARY_NS = (1023, 1024, 1025)
+BATCHES = (1, 7, 32)
+
+
+@pytest.fixture(scope="module", params=["pallas", "xla"], autouse=True)
+def rtcg_backend(request):
+    """Column reductions are a layout transformation on the SAME IR both
+    backends render — every parity/launch assertion must hold on pallas
+    and xla alike."""
+    import os
+
+    old = os.environ.get("REPRO_BACKEND")
+    os.environ["REPRO_BACKEND"] = request.param
+    yield request.param
+    if old is None:
+        os.environ.pop("REPRO_BACKEND", None)
+    else:
+        os.environ["REPRO_BACKEND"] = old
+
+
+def _launches(fn):
+    with dispatch.count_launches() as c:
+        out = fn()
+    return out, c.delta
+
+
+# -------------------------------------------------- parity + launches
+@pytest.mark.parametrize("B", BATCHES)
+@pytest.mark.parametrize("n", BOUNDARY_NS)
+def test_col_reduce_shapes_and_values(B, n):
+    """sum/max over axis=0: one launch each, (N,)-shaped, numpy parity.
+    The domain is transposed (N independent outputs reduce over B), the
+    storage is not — `transpose_layout` bridges the two at bind time."""
+    x = rng.standard_normal((B, n)).astype(np.float32)
+    X = ga.to_gpu(x)
+    s = X.sum(axis=0)
+    assert s.shape == (n,)
+    got, delta = _launches(lambda: s.value)
+    assert delta == 1
+    np.testing.assert_allclose(np.asarray(got), x.sum(0), atol=1e-2)
+    mx, delta = _launches(lambda: X.max(axis=0).value)
+    assert delta == 1
+    np.testing.assert_allclose(np.asarray(mx), x.max(0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("B", BATCHES)
+@pytest.mark.parametrize("n", BOUNDARY_NS)
+def test_col_mean_parity(B, n):
+    x = rng.standard_normal((B, n)).astype(np.float32)
+    m, delta = _launches(lambda: ga.to_gpu(x).mean(axis=0).value)
+    assert delta == 1
+    np.testing.assert_allclose(np.asarray(m), x.mean(0), atol=1e-3)
+
+
+def test_axis_minus_two_aliases_axis0():
+    x = rng.standard_normal((5, 33)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ga.to_gpu(x).sum(axis=-2).value), x.sum(0), atol=1e-3)
+
+
+@pytest.mark.parametrize("stable", [False, True])
+@pytest.mark.parametrize("B", BATCHES)
+@pytest.mark.parametrize("n", BOUNDARY_NS)
+def test_axis0_softmax_exactly_two_launches(B, n, stable):
+    """Softmax over columns keeps the acceptance schedule: ONE column
+    wave (max + shifted-exp sum chained in-kernel when stable) + ONE
+    fused epilogue."""
+    x = (rng.standard_normal((B, n)) * 4).astype(np.float32)
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=0))
+    sm, delta = _launches(
+        lambda: ga.softmax(ga.to_gpu(x), stable=stable, axis=0).value)
+    assert delta == 2
+    np.testing.assert_allclose(np.asarray(sm), ref, atol=1e-5)
+
+
+def test_axis0_epilogue_broadcast_orientation():
+    """An axis=0 reduce consumed by a 2-D epilogue binds as a per-COLUMN
+    broadcast: x - x.mean(axis=0) must center every column."""
+    x = rng.standard_normal((9, 257)).astype(np.float32)
+    X = ga.to_gpu(x)
+    out, delta = _launches(lambda: (X - X.mean(axis=0)).value)
+    assert delta == 2
+    np.testing.assert_allclose(np.asarray(out), x - x.mean(0), atol=1e-3)
+
+
+def test_mixed_axes_schedule_separate_waves():
+    """axis=-1 and axis=0 reduces over the same operand cannot share a
+    wave (different domains): planned together they cost one wave EACH,
+    and both roots still evaluate correctly."""
+    x = rng.standard_normal((8, 64)).astype(np.float32)
+    X = ga.to_gpu(x)
+    rowsum, colsum = X.sum(axis=-1), X.sum(axis=0)
+    sched = ga.plan_many([rowsum, colsum])
+    assert len(sched.steps) == 2
+    (r, delta_r) = _launches(lambda: rowsum.value)
+    (c, delta_c) = _launches(lambda: colsum.value)
+    assert delta_r == 1 and delta_c == 1
+    np.testing.assert_allclose(np.asarray(r), x.sum(-1), atol=1e-2)
+    np.testing.assert_allclose(np.asarray(c), x.sum(0), atol=1e-2)
+
+
+# ------------------------------------------------------ bucket identity
+def test_transposed_bucket_key_never_collides():
+    """Satellite 6: the dispatch bucket for a transposed (axis=0) domain
+    carries a layout marker, so an axis=0 winner tuned at (b, n) can
+    never be replayed onto the axis=-1 kernel of the same geometry."""
+    for b, n in [(8, 1024), (32, 1023), (1, 7)]:
+        plain = dispatch.rc_bucket(b, n)
+        transposed = dispatch.rc_bucket(b, n, transposed=True)
+        assert transposed != plain
+        assert transposed[:2] == plain
+        assert dispatch.rc_bucket(b, n, transposed=True) == transposed
+
+
+def test_axis0_driver_reuse_within_bucket():
+    """Two different (B, N) geometries sharing a bucket pair share the
+    axis=0 driver — the second evaluation compiles nothing."""
+    a = rng.standard_normal((10, 900)).astype(np.float32)
+    b = rng.standard_normal((12, 1000)).astype(np.float32)
+    ga.to_gpu(a).sum(axis=0).value  # warm the bucket
+    with dispatch.count_compiles() as cc:
+        got = ga.to_gpu(b).sum(axis=0).value
+    assert cc.delta == 0
+    np.testing.assert_allclose(np.asarray(got), b.sum(0), atol=1e-2)
+
+
+# ------------------------------------------------------ serving runtime
+def test_runtime_softmax_axis0(rtcg_backend, tmp_path):
+    from repro.core.cache import DiskCache
+    from repro.runtime import ServingRuntime
+    from repro.runtime.manifest import WarmStartManifest
+
+    manifest = WarmStartManifest(cache=DiskCache("runtime_manifest",
+                                                 root=tmp_path))
+    rt = ServingRuntime(backend=rtcg_backend, manifest=manifest)
+    x = rng.standard_normal((6, 40)).astype(np.float32)
+    got = rt.softmax(x, axis=0)
+    ref = np.asarray(jax.nn.softmax(jnp.asarray(x), axis=0))
+    np.testing.assert_allclose(np.asarray(got), ref, atol=1e-5)
+    with pytest.raises(ValueError):
+        rt.softmax(np.zeros((2, 3, 4), np.float32), axis=0)

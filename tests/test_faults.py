@@ -258,9 +258,9 @@ def test_ladder_eager_floor():
 def test_planner_contract_errors_still_raise():
     """The ladder handles *execution* failures; structurally invalid
     expressions must keep raising their planner errors."""
-    a = ga.RTCGArray(np.random.RandomState(6).randn(4, 64).astype("f4"))
+    a = ga.RTCGArray(np.random.RandomState(6).randn(2, 4, 64).astype("f4"))
     with pytest.raises(NotImplementedError):
-        a.sum(axis=0)  # only axis=None / axis=-1 are fusable
+        a.sum(axis=1)  # middle axes are not fusable (only None / -1 / 0)
 
 
 @pytest.mark.parametrize("broken", BACKENDS)

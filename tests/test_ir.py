@@ -1,0 +1,240 @@
+"""Kernel IR tests (DESIGN.md §11) — lowering, transformations, renders.
+
+Covers: golden IR→source renders for softmax- and rmsnorm-shaped
+fixtures on BOTH backends (the refactor's byte-identity contract),
+transformation algebra (purity, tile∘split commutation on distinct
+axes, idempotent tags, transpose_layout involution), content
+addressability (cache-key stability and distinctness, transform-log
+recording), winner-sequence replay via `ir.apply_sequence`, the
+``REPRO_IR_STRICT=1`` dispatch assertion, and the IR schema version in
+`cache.environment_fingerprint()`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cache, dispatch, ir
+from repro.core.elementwise import ElementwiseKernel
+from repro.core.platform import BroadcastArg, VectorArg
+from repro.core.reduction import ReductionKernel
+
+
+# ------------------------------------------------------------ fixtures
+def softmax_wave_kernel():
+    """The planner's stable-softmax row wave: multi-accumulator rowmax +
+    shifted-exp rowsum with in-wave ``_acc0`` chaining."""
+    return ReductionKernel(
+        [np.float32, np.float32], ["-3.4028234663852886e+38", "0"],
+        ["fmaxf(a,b)", "a+b"], ["x[i]", "expf(x[i] - _acc0)"],
+        "float *x", name="softmax_wave", axis=-1)
+
+
+def softmax_epi_kernel():
+    """The softmax epilogue: 2-D row layout with a per-row broadcast."""
+    return ElementwiseKernel(
+        [BroadcastArg(np.float32, "r0", "row"), VectorArg(np.float32, "x"),
+         VectorArg(np.float32, "out")],
+        "out[i] = expf(x[i]) / r0", name="softmax_epi", layout="rows")
+
+
+def rmsnorm_epi_kernel():
+    """The rmsnorm epilogue: per-row rms + per-col weight broadcasts."""
+    return ElementwiseKernel(
+        [BroadcastArg(np.float32, "r0", "row"),
+         BroadcastArg(np.float32, "w", "col"),
+         VectorArg(np.float32, "x"), VectorArg(np.float32, "out")],
+        "out[i] = x[i] / sqrtf(r0 + 1e-6f) * w", name="rmsnorm_epi",
+        layout="rows")
+
+
+# --------------------------------------------------- golden renders
+# IR→source goldens at (block_rows=8, ncols=1024).  These pin the
+# render byte-for-byte: any IR/lowering change that alters generated
+# source must be deliberate (and bump IR_SCHEMA_VERSION).
+GOLDEN_WAVE_PALLAS = '''
+def softmax_wave_kernel(_n_ref, x_ref, o0_ref, o1_ref):
+    _n = _n_ref[0, 0]
+    _col = jax.lax.broadcasted_iota(jnp.int32, (8, 1024), 1)
+    x = x_ref[...]
+    _mapped0 = jnp.asarray(x).astype(jnp.float32)
+    _mapped0 = jnp.where(_col < _n, _mapped0, jnp.asarray(-3.4028234663852886e+38, jnp.float32))
+    _acc0 = jnp.max(_mapped0, axis=1, keepdims=True)
+    o0_ref[...] = _acc0
+    _mapped1 = jnp.asarray(jnp.exp(x - _acc0)).astype(jnp.float32)
+    _mapped1 = jnp.where(_col < _n, _mapped1, jnp.asarray(0, jnp.float32))
+    _acc1 = jnp.sum(_mapped1, axis=1, keepdims=True)
+    o1_ref[...] = _acc1
+'''
+
+GOLDEN_WAVE_XLA = '''
+def softmax_wave_fn(_n_ref, x):
+    _n = _n_ref[0, 0]
+    _col = jax.lax.broadcasted_iota(jnp.int32, (8, 1024), 1)
+    _mapped0 = jnp.asarray(x).astype(jnp.float32)
+    _mapped0 = jnp.where(_col < _n, _mapped0, jnp.asarray(-3.4028234663852886e+38, jnp.float32))
+    _acc0 = jnp.max(_mapped0, axis=1, keepdims=True)
+    _mapped1 = jnp.asarray(jnp.exp(x - _acc0)).astype(jnp.float32)
+    _mapped1 = jnp.where(_col < _n, _mapped1, jnp.asarray(0, jnp.float32))
+    _acc1 = jnp.sum(_mapped1, axis=1, keepdims=True)
+    return (_acc0, _acc1, )'''
+
+GOLDEN_EPI_PALLAS = '''
+def softmax_epi_kernel(r0_ref, x_ref, out_ref, out_out_ref):
+    _BLK = (8, 1024)
+    r0 = r0_ref[...]
+    x = x_ref[...]
+    out = jnp.broadcast_to(jnp.asarray(jnp.exp(x) / r0), _BLK).astype(jnp.float32)
+    out_out_ref[...] = out
+'''
+
+GOLDEN_EPI_XLA = '''
+def softmax_epi_fn(r0, x, out):
+    _BLK = (8, 1024)
+    out = jnp.broadcast_to(jnp.asarray(jnp.exp(x) / r0), _BLK).astype(jnp.float32)
+    return (out, )'''
+
+GOLDEN_RMS_PALLAS = '''
+def rmsnorm_epi_kernel(r0_ref, w_ref, x_ref, out_ref, out_out_ref):
+    _BLK = (8, 1024)
+    r0 = r0_ref[...]
+    w = w_ref[...]
+    x = x_ref[...]
+    out = jnp.broadcast_to(jnp.asarray(x / jnp.sqrt(r0 + 1e-6) * w), _BLK).astype(jnp.float32)
+    out_out_ref[...] = out
+'''
+
+GOLDEN_RMS_XLA = '''
+def rmsnorm_epi_fn(r0, w, x, out):
+    _BLK = (8, 1024)
+    out = jnp.broadcast_to(jnp.asarray(x / jnp.sqrt(r0 + 1e-6) * w), _BLK).astype(jnp.float32)
+    return (out, )'''
+
+GOLDENS = {
+    ("wave", "pallas"): GOLDEN_WAVE_PALLAS,
+    ("wave", "xla"): GOLDEN_WAVE_XLA,
+    ("epi", "pallas"): GOLDEN_EPI_PALLAS,
+    ("epi", "xla"): GOLDEN_EPI_XLA,
+    ("rms", "pallas"): GOLDEN_RMS_PALLAS,
+    ("rms", "xla"): GOLDEN_RMS_XLA,
+}
+FIXTURES = {"wave": softmax_wave_kernel, "epi": softmax_epi_kernel,
+            "rms": rmsnorm_epi_kernel}
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+@pytest.mark.parametrize("fixture", sorted(FIXTURES))
+def test_golden_render(fixture, backend):
+    src = FIXTURES[fixture]().render(8, 1024, backend=backend)
+    assert src == GOLDENS[(fixture, backend)]
+
+
+# ----------------------------------------------- transformation algebra
+def _eltwise_ir(rows=64, lanes=128):
+    return ir.lower_elementwise(softmax_epi_kernel().spec,
+                                rows=rows, lanes=lanes, layout="rows")
+
+
+def test_transformations_are_pure():
+    base = _eltwise_ir()
+    tiled = ir.tile(base, "rows", 8)
+    assert tiled is not base
+    assert base.transform_log == ()               # input untouched
+    assert base.axis("rows").block is None
+    assert tiled.axis("rows").block == 8
+    assert tiled.transform_log == (
+        ("tile", (("axis", "rows"), ("block", 8))),)
+
+
+def test_tile_split_commute_structurally():
+    """tile and split on DISTINCT axes commute: the IRs are structurally
+    identical while their transformation chains stay distinguishable."""
+    base = _eltwise_ir(rows=64, lanes=256)
+    a = ir.split(ir.tile(base, "rows", 8), "lanes", 64)
+    b = ir.tile(ir.split(base, "lanes", 64), "rows", 8)
+    assert a.structural_token() == b.structural_token()
+    assert a.transform_log != b.transform_log
+    assert a.cache_token() != b.cache_token()
+    assert a.axis("lanes.o").extent == 4 and a.axis("lanes.i").extent == 64
+
+
+def test_tag_is_idempotent():
+    base = _eltwise_ir()
+    once = ir.tag_parallel(base, "rows")
+    twice = ir.tag_parallel(once, "rows")
+    assert twice is once                          # no-op returns the input
+    assert once.axis("rows").tag == "parallel"
+    assert len(once.transform_log) == 1
+
+
+def test_transpose_layout_swaps_kinds_and_is_involutive():
+    base = ir.lower_reduction(softmax_wave_kernel().spec, rows=8, cols=1024,
+                              layout="rows")
+    t = ir.transpose_layout(base)
+    kinds = {n: k for n, _, k in base.args}
+    tkinds = {n: k for n, _, k in t.args}
+    assert kinds["x"] == "full" and tkinds["x"] == "full"
+    assert t.transposed and not base.transposed
+    back = ir.transpose_layout(t)
+    assert not back.transposed
+    assert back.structural_token() == base.structural_token()
+    assert len(back.transform_log) == 2           # the chain remembers
+
+
+def test_broadcast_kinds_swap_under_transpose():
+    base = ir.lower_elementwise(rmsnorm_epi_kernel().spec,
+                                rows=8, lanes=1024, layout="rows")
+    t = ir.transpose_layout(base)
+    kinds = {n: k for n, _, k in t.args}
+    assert kinds["r0"] == "col" and kinds["w"] == "row"
+
+
+def test_cache_key_stability_and_distinctness():
+    base = _eltwise_ir()
+    k1 = ir.tile(base, "rows", 8).cache_key()
+    k2 = ir.tile(base, "rows", 8).cache_key()
+    k3 = ir.tile(base, "rows", 16).cache_key()
+    assert k1 == k2
+    assert k1 != k3
+    assert ir.transpose_layout(base).cache_key() != base.cache_key()
+
+
+def test_apply_sequence_replays_winner_chains():
+    from repro.core import autotune
+
+    base = ir.lower_reduction(softmax_wave_kernel().spec, rows=8, cols=1024,
+                              layout="rows")
+    seq = autotune.sequence_for("block_rows", 16, transposed=True)
+    replayed = ir.apply_sequence(base, seq)
+    manual = ir.tile(ir.transpose_layout(base), "rows", 16)
+    assert replayed.cache_token() == manual.cache_token()
+    assert replayed.transposed and replayed.axis("rows").block == 16
+
+
+def test_describe_includes_domain_and_transforms():
+    kir = ir.tile(ir.tag_parallel(_eltwise_ir(), "rows"), "rows", 8)
+    text = kir.describe()
+    assert "axis rows" in text and "tag=parallel" in text
+    assert "tile(axis=rows, block=8)" in text
+
+
+# ----------------------------------------------------------- strict mode
+def test_ir_strict_accepts_ir_built_drivers(monkeypatch):
+    monkeypatch.setenv("REPRO_IR_STRICT", "1")
+    kern = ElementwiseKernel("float *z, float *x", "z[i] = x[i] + 1",
+                             name="strict_probe")
+    x = np.arange(300, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(kern(np.empty_like(x), x)), x + 1)
+
+
+def test_ir_strict_rejects_legacy_string_builders(monkeypatch):
+    monkeypatch.setenv("REPRO_IR_STRICT", "1")
+    with pytest.raises(AssertionError, match="REPRO_IR_STRICT"):
+        dispatch.get_or_build(("legacy_probe", "none", "k"),
+                              lambda: (lambda *a: None), backend="pallas",
+                              name="legacy_probe", bucket=(1,))
+
+
+# ----------------------------------------------------- environment tie-in
+def test_environment_fingerprint_carries_ir_schema():
+    fp = cache.environment_fingerprint()
+    assert fp["ir_schema"] == ir.IR_SCHEMA_VERSION
