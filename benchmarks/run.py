@@ -17,6 +17,9 @@
 #   chaos   — bench_chaos:       PR 6 fault tolerance — availability + p50
 #             under injected faults, fault-free ladder overhead,
 #             serving with one backend fully dead
+#   fleet   — bench_fleet:       PR 8 supervised fleet — availability at
+#             0/1 injected worker kills, zero-compile warm restart,
+#             explicit shed under 2x overload
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
 #
@@ -112,9 +115,9 @@ def main() -> None:
         faults.install_env_plan(args.chaos)
 
     from benchmarks import (bench_chaos, bench_copperhead, bench_dgfem,
-                            bench_elementwise, bench_filterbank, bench_model,
-                            bench_nn, bench_rmsnorm, bench_serving,
-                            bench_softmax)
+                            bench_elementwise, bench_filterbank, bench_fleet,
+                            bench_model, bench_nn, bench_rmsnorm,
+                            bench_serving, bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
     from repro.core import dispatch
@@ -144,6 +147,7 @@ def main() -> None:
         "rmsnorm": lambda repeats: bench_rmsnorm.run(repeats=repeats, **rmsnorm_kwargs),
         "serving": lambda repeats: bench_serving.run(repeats=repeats, **serving_kwargs),
         "chaos": lambda repeats: bench_chaos.run(repeats=repeats, **serving_kwargs),
+        "fleet": lambda repeats: bench_fleet.run(repeats=repeats, **serving_kwargs),
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }

@@ -16,9 +16,15 @@ import json
 import os
 import tempfile
 import threading
+import time
 from collections import OrderedDict
 from pathlib import Path
 from typing import Any, Callable
+
+try:  # POSIX advisory locks for cross-process read-modify-write merges
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: thread-locked only
+    fcntl = None
 
 
 def _default_cache_dir() -> Path:
@@ -114,6 +120,7 @@ class DiskCache:
         self._lock = threading.Lock()
         self._update_lock = threading.Lock()
         self._mem: dict[str, Any] = {}
+        self.lock_timeouts = 0  # cross-process flock fallbacks (update)
 
     def _path(self, key: str) -> Path:
         return self.root / (key + ".json")
@@ -177,18 +184,76 @@ class DiskCache:
             except OSError:
                 pass
 
+    def _read_disk(self, key: str, default: Any = None) -> Any:
+        """Read ``key`` straight from disk, bypassing the per-process
+        memo — another *process* may have rewritten the file since this
+        one last read it, so read-modify-write merges must never trust
+        ``_mem``."""
+        p = self._path(key)
+        if not p.exists():
+            return default
+        try:
+            if _fault_hook is not None:
+                _fault_hook("cache.read", None, key, None, None)
+            val = json.loads(p.read_text())
+        except (json.JSONDecodeError, ValueError):
+            self._quarantine(p)
+            return default
+        except Exception:  # noqa: BLE001 - OSError or an injected read fault
+            return default
+        with self._lock:
+            self._mem[key] = val
+        return val
+
     def update(self, key: str, fn: Callable[[Any], Any],
-               default: Any = None) -> Any:
-        """Read-modify-write under a dedicated lock: ``fn(current)`` maps
-        the stored value (or ``default`` when absent) to the new one,
-        which is persisted and returned.  Serializes *threads* of one
-        process; cross-process writers still race benignly (last atomic
-        rename wins) — acceptable for append-mostly documents like the
-        serving runtime's warm-start manifest (DESIGN.md §9.3)."""
+               default: Any = None, lock_timeout: float = 5.0) -> Any:
+        """Read-modify-write: ``fn(current)`` maps the stored value (or
+        ``default`` when absent) to the new one, which is persisted and
+        returned.
+
+        Safe across *processes*, not just threads (PR 8): the merge runs
+        under an advisory ``fcntl.flock`` on a ``<key>.lock`` sidecar
+        (the data file itself is replaced atomically, so it cannot be
+        the lock target), and the current value is re-read from disk
+        inside the lock — N fleet workers appending to one manifest
+        document through here lose nothing.  If the lock cannot be
+        acquired within ``lock_timeout`` seconds (a peer died holding
+        it, an NFS mount without lock support), the merge proceeds
+        unlocked — degraded last-atomic-rename-wins, the pre-PR-8
+        behavior — and ``lock_timeouts`` counts the fallback."""
         with self._update_lock:
-            val = fn(self.get(key, default))
-            self.put(key, val)
-            return val
+            lockf = None
+            locked = False
+            if fcntl is not None:
+                try:
+                    lockf = open(self._path(key).with_suffix(".lock"), "a+")
+                except OSError:
+                    lockf = None
+                if lockf is not None:
+                    deadline = time.monotonic() + lock_timeout
+                    while True:
+                        try:
+                            fcntl.flock(lockf.fileno(),
+                                        fcntl.LOCK_EX | fcntl.LOCK_NB)
+                            locked = True
+                            break
+                        except OSError:
+                            if time.monotonic() >= deadline:
+                                self.lock_timeouts += 1
+                                break
+                            time.sleep(0.002)
+            try:
+                val = fn(self._read_disk(key, default))
+                self.put(key, val)
+                return val
+            finally:
+                if lockf is not None:
+                    if locked:
+                        try:
+                            fcntl.flock(lockf.fileno(), fcntl.LOCK_UN)
+                        except OSError:  # pragma: no cover
+                            pass
+                    lockf.close()
 
     def __contains__(self, key: str) -> bool:
         with self._lock:

@@ -465,3 +465,30 @@ def stats() -> dict:
     s["launches_by_backend"] = launch_counts()
     s["degradations"] = degradation_counts()
     return s
+
+
+def stats_snapshot() -> dict:
+    """JSON-able `stats()` view for cross-process aggregation (PR 8):
+    every value is a plain int or a str->int dict, so a fleet worker can
+    ship it over a pipe and the dispatcher can `merge_stats` N of them
+    into one fleet-level view."""
+    return stats()
+
+
+def merge_stats(snapshots: "list[dict]") -> dict:
+    """Fold per-process `stats_snapshot()` dicts into one aggregate:
+    counters (hits/misses/evictions/compiles/launches, the by-backend
+    and degradation maps) sum across processes; ``size``/``maxsize``
+    sum too — the fleet's total cached-driver footprint."""
+    out: dict = {}
+    for snap in snapshots:
+        if not isinstance(snap, dict):
+            continue
+        for k, v in snap.items():
+            if isinstance(v, dict):
+                sub = out.setdefault(k, {})
+                for kk, vv in v.items():
+                    sub[kk] = sub.get(kk, 0) + vv
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[k] = out.get(k, 0) + v
+    return out

@@ -13,6 +13,16 @@ PR 5 adds the serving-runtime path (DESIGN.md §9):
   * ``--coalesce K`` demos cross-request micro-batching: K threads each
     submit one softmax row and the executor flushes them as a single
     ``(K, N)`` schedule — 2 launches total instead of ``2·K``.
+
+PR 8 adds the supervised-fleet path (DESIGN.md §12):
+
+  * ``--fleet N`` serves the sampling-softmax traffic through a
+    `repro.runtime.ServingFleet` of N worker *processes* instead of the
+    in-process runtime — bounded admission, heartbeat supervision,
+    crash restart with backoff, at-most-once re-dispatch;
+  * ``--fleet-kill`` additionally kills one worker mid-traffic (a
+    deterministic ``worker.kill`` fault on its 2nd dispatch group) to
+    demo that availability stays 1.0 through a process death.
 """
 
 from __future__ import annotations
@@ -57,6 +67,46 @@ def coalesce_demo(runtime, k: int, n: int) -> None:
           f"{ex['launches_per_request']:.2f} launches/request)")
 
 
+def fleet_demo(n_workers: int, k: int, n: int, kill: bool = False) -> None:
+    """K softmax requests over an N-worker process fleet; optionally one
+    injected worker death mid-traffic (availability must stay 1.0)."""
+    import tempfile
+
+    from repro.runtime import ServingFleet
+    from repro.runtime.supervisor import BackoffPolicy
+
+    chaos = {}
+    if kill:
+        # every first-incarnation worker carries the bomb; restarted
+        # incarnations are clean, so single-file dispatch + a fast
+        # restart backoff keeps the re-dispatch budget comfortable
+        chaos = dict(
+            chaos_rules=[{"site": "worker.kill", "index": 2, "times": 1}],
+            chaos_incarnations=[1], group_max=1, max_outstanding=1)
+    rng = np.random.default_rng(0)
+    rows = [rng.standard_normal(n).astype(np.float32) for _ in range(k)]
+    with ServingFleet(workers=n_workers, backend="xla", max_batch=8,
+                      max_redispatch=5,
+                      backoff=BackoffPolicy(base=0.01, cap=0.2),
+                      cache_dir=tempfile.mkdtemp(prefix="serve-fleet-"),
+                      **chaos) as fleet:
+        fleet.wait_ready(timeout=300)
+        t0 = time.time()
+        futs = [fleet.submit_softmax(r, deadline=120) for r in rows]
+        ok = 0
+        for r, f in zip(rows, futs):
+            out = np.asarray(f.result(timeout=180))
+            ok += bool(np.allclose(out.sum(), 1.0, atol=1e-4))
+        dt = time.time() - t0
+        fs = fleet.fleet_stats()
+        print(f"fleet demo: {ok}/{k} served over {n_workers} workers "
+              f"in {dt:.2f}s (availability {ok / k:.3f}); "
+              f"{sum(fs['deaths'].values())} worker death(s), "
+              f"{fs['redispatched']} re-dispatched, "
+              f"{fs['starts'] - fs['workers']} restart(s), "
+              f"{fs['shed']} shed")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -71,6 +121,12 @@ def main(argv=None):
                          "runtime (backend auto-router + manifest)")
     ap.add_argument("--coalesce", type=int, default=0, metavar="K",
                     help="also run the K-request coalescing demo")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="also serve the request wave through an N-worker "
+                         "supervised process fleet (DESIGN.md §12)")
+    ap.add_argument("--fleet-kill", action="store_true",
+                    help="with --fleet: kill one worker mid-traffic and "
+                         "show availability staying 1.0")
     args = ap.parse_args(argv)
 
     runtime = None
@@ -113,6 +169,9 @@ def main(argv=None):
 
     if args.coalesce:
         coalesce_demo(runtime, args.coalesce, int(cfg.vocab_size))
+    if args.fleet:
+        fleet_demo(args.fleet, k=max(args.requests, 8),
+                   n=min(int(cfg.vocab_size), 4096), kill=args.fleet_kill)
     if runtime is not None:
         st = runtime.stats()
         print("runtime.stats(): routes:", st["router"]["routes"],

@@ -261,7 +261,13 @@ class ServingRuntime:
         Persisted transformation sequences load *first*, so replayed
         kernels build with the winning tiled/transposed schedules — the
         zero-compile-on-replay property covers the transformed drivers,
-        not their untuned defaults."""
+        not their untuned defaults.
+
+        Fleet router telemetry (PR 8) imports first as well: cells this
+        process has never measured adopt the fleet's merged EMAs, so a
+        restarted worker routes like its predecessors from request one
+        instead of re-learning pallas-vs-xla from priors."""
+        adopted = self.router.import_state(self.manifest.load_router_state())
         self.manifest.load_sequences()
 
         def run_entry(entry):
@@ -287,7 +293,20 @@ class ServingRuntime:
                                 jnp.zeros((b, geometry[-1]), dtype), shared,
                                 backend=entry["backend"], record=False)
 
-        return self.manifest.replay(run_entry)
+        report = self.manifest.replay(run_entry)
+        report["router_cells_adopted"] = adopted
+        return report
+
+    def sync_router(self) -> dict:
+        """Two-way router-telemetry sync with the fleet manifest (PR 8):
+        publish this process's measured EMAs (flock-merged,
+        observation-weighted), then adopt merged cells this process has
+        not measured itself.  Workers call this on the supervisor's
+        ``sync`` control op and at drain; `close()` publishes one final
+        time."""
+        self.manifest.record_router_state(self.router.export_state())
+        adopted = self.router.import_state(self.manifest.load_router_state())
+        return {"adopted": adopted}
 
     def stats(self) -> dict:
         """One JSON-able snapshot across all three pieces + dispatch."""
@@ -303,11 +322,24 @@ class ServingRuntime:
             "faults": faults.stats(),
         }
 
+    def stats_snapshot(self) -> dict:
+        """Wire-safe `stats()` for cross-process aggregation (PR 8): the
+        same document round-tripped through JSON so every leaf is a
+        plain int/float/str — a fleet worker ships this over its pipe
+        and the dispatcher folds N of them via `merge_stats`."""
+        import json
+
+        return json.loads(json.dumps(self.stats(), default=str))
+
     def flush(self, wait: bool = True) -> None:
         self.executor.flush(wait=wait)
 
     def close(self) -> None:
         self.executor.close()
+        try:
+            self.manifest.record_router_state(self.router.export_state())
+        except Exception:
+            pass  # telemetry publish must never block shutdown
         self.manifest.stop_listening()
 
 
@@ -350,10 +382,83 @@ def stats() -> dict:
     return default_runtime().stats()
 
 
+def stats_snapshot(rt: "ServingRuntime | None" = None) -> dict:
+    """JSON-safe per-process stats document (the default runtime's, or
+    an explicit one) — the unit `merge_stats` aggregates."""
+    return (rt if rt is not None else default_runtime()).stats_snapshot()
+
+
+#: keys that are configuration or shared state, not per-process counters:
+#: aggregate by max, never by sum
+_MERGE_MAX_KEYS = frozenset({
+    "max_coalesce", "maxsize", "entries", "sequences", "window_s",
+    "max_batch", "threshold", "cooldown_s", "active_plans", "seed",
+    "tracked_cells", "pending",
+})
+#: router latency tables: merge by min (the best estimate any worker
+#: measured), never by sum
+_MERGE_MIN_TABLES = frozenset({"ema_ms", "priors_ms"})
+
+
+def _fold_stats(dst: dict, src: dict) -> None:
+    for k, v in src.items():
+        if isinstance(v, dict):
+            sub = dst.setdefault(k, {})
+            if not isinstance(sub, dict):
+                continue
+            if k in _MERGE_MIN_TABLES:
+                for kk, vv in v.items():
+                    cur = sub.get(kk)
+                    sub[kk] = vv if cur is None else min(cur, vv)
+            else:
+                _fold_stats(sub, v)
+        elif isinstance(v, bool):
+            dst.setdefault(k, v)
+        elif isinstance(v, (int, float)):
+            if k in _MERGE_MAX_KEYS:
+                dst[k] = max(dst.get(k, v), v)
+            else:
+                dst[k] = dst.get(k, 0) + v
+        else:
+            dst.setdefault(k, v)
+
+
+def merge_stats(snapshots: "list[dict]") -> dict:
+    """Aggregate per-worker `stats_snapshot()` documents into ONE
+    fleet-level view (PR 8): counters (requests, flushes, launches,
+    retries, degradations, failovers, route counts, fault injections)
+    sum across workers; shared-state sizes (manifest entries) and
+    configuration knobs take the max; router latency tables take the
+    elementwise min (the best estimate any worker measured); realized
+    ratios (coalesce factor, launches/request) are recomputed from the
+    summed counters so the fleet view is self-consistent."""
+    merged: dict = {}
+    folded = 0
+    for snap in snapshots:
+        if not isinstance(snap, dict):
+            continue
+        _fold_stats(merged, snap)
+        folded += 1
+    ex = merged.get("executor")
+    if isinstance(ex, dict):
+        req, fl = ex.get("requests", 0), ex.get("flushes", 0)
+        ex["coalesce_factor"] = (req / fl) if fl else 0.0
+        ex["launches_per_request"] = \
+            (ex.get("launches", 0) / req) if req else 0.0
+    merged["workers_merged"] = folded
+    return merged
+
+
+from repro.runtime.fleet import FleetOverloadError, ServingFleet  # noqa: E402
+from repro.runtime.supervisor import (BackoffPolicy,  # noqa: E402
+                                      CrashLoopBreaker, Supervisor)
+
 __all__ = [
     "ServingRuntime", "CoalescingExecutor", "RuntimeFuture",
     "BackendRouter", "CircuitBreaker", "WarmStartManifest", "bucket_for",
     "default_runtime", "set_default_runtime", "default_router",
     "set_default_router", "default_breaker", "set_default_breaker",
-    "faults", "warmup", "stats",
+    "faults", "warmup", "stats", "stats_snapshot", "merge_stats",
+    "ServingFleet", "FleetOverloadError", "BackoffPolicy",
+    "CrashLoopBreaker", "Supervisor",
 ]

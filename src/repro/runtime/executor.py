@@ -81,7 +81,7 @@ class RuntimeFuture:
 
 class _Batch:
     __slots__ = ("family", "shared", "deadline", "rows", "posts", "futures",
-                 "seqs", "deadlines")
+                 "seqs", "deadlines", "budgets", "submits")
 
     def __init__(self, family: str, shared: dict, deadline: float):
         self.family = family
@@ -92,6 +92,8 @@ class _Batch:
         self.futures: list[RuntimeFuture] = []
         self.seqs: list[int] = []       # executor-wide request sequence ids
         self.deadlines: list = []       # per-request absolute deadlines
+        self.budgets: list = []         # the raw deadline= seconds (report)
+        self.submits: list = []         # submit timestamps (elapsed report)
 
 
 class CoalescingExecutor:
@@ -158,8 +160,11 @@ class CoalescingExecutor:
             batch.posts.append(post)
             batch.futures.append(fut)
             batch.seqs.append(self._seq)
+            now = time.monotonic()
             batch.deadlines.append(
-                None if deadline is None else time.monotonic() + deadline)
+                None if deadline is None else now + deadline)
+            batch.budgets.append(deadline)
+            batch.submits.append(now)
             self._seq += 1
             self._requests += 1
             self._ensure_thread()
@@ -241,12 +246,23 @@ class CoalescingExecutor:
         for seq in batch.seqs:
             faults.maybe_fail("executor.row", family=batch.family, index=seq)
 
+    def _deadline_error(self, batch: _Batch, i: int) -> TimeoutError:
+        """Elapsed-vs-budget timeout report: the deadline bounds the
+        request's TOTAL time since submit — flush wait + failed-flush
+        time + every retry backoff — not just the retry loop."""
+        elapsed = time.monotonic() - batch.submits[i]
+        return TimeoutError(
+            f"request deadline exceeded: {elapsed:.3f}s elapsed of "
+            f"{batch.budgets[i]:.3f}s budget (family={batch.family!r}, "
+            f"row_length={int(batch.rows[i].shape[0])})")
+
     def _retry_rows(self, batch: _Batch, batch_err: BaseException) -> None:
         """Re-run a failed flush one row at a time: ``retry_max`` + 1
-        attempts per row with exponential backoff, each row's budget
-        clipped by its own deadline.  A row that never succeeds fails
-        only its own future (seeded with the batch error if nothing
-        more specific happened)."""
+        attempts per row with exponential backoff, each row's TOTAL
+        budget (from submit) bounded by its own deadline — backoff
+        sleeps are clipped so they can never overshoot it.  A row that
+        never succeeds fails only its own future (seeded with the batch
+        error if nothing more specific happened)."""
         from repro.runtime import faults
 
         with self._cv:
@@ -260,16 +276,23 @@ class CoalescingExecutor:
             seq, dl, post = batch.seqs[i], batch.deadlines[i], batch.posts[i]
             last: BaseException = batch_err
             for k in range(attempts):
-                if dl is not None and time.monotonic() >= dl:
-                    last = TimeoutError(
-                        f"request deadline exceeded during retry "
-                        f"(family={batch.family!r}, "
-                        f"row_length={int(batch.rows[i].shape[0])})")
+                now = time.monotonic()
+                if dl is not None and now >= dl:
+                    last = self._deadline_error(batch, i)
                     break
                 if k:
                     with self._cv:
                         self._row_retries += 1
-                    time.sleep(min(0.0005 * (2 ** k), 0.05))
+                    delay = min(0.0005 * (2 ** k), 0.05)
+                    if dl is not None:
+                        # never sleep past the deadline: the remaining
+                        # budget caps the backoff, and an exhausted
+                        # budget times out instead of attempting late
+                        delay = min(delay, max(0.0, dl - now))
+                    time.sleep(delay)
+                    if dl is not None and time.monotonic() >= dl:
+                        last = self._deadline_error(batch, i)
+                        break
                 try:
                     faults.maybe_fail("executor.row", family=batch.family,
                                       index=seq)

@@ -11,7 +11,10 @@ those failures can be produced on demand and *reproducibly*.
 This module is that switchboard:
 
   * `FaultRule` matches a named **site** (``compile``, ``launch``,
-    ``cache.read``, ``cache.write``, ``executor.row``) optionally
+    ``cache.read``, ``cache.write``, ``executor.row``, and the
+    process-level ``worker.kill`` / ``worker.hang`` / ``worker.slow``
+    / ``worker.reject`` probed by fleet workers — see `worker_fault`)
+    optionally
     narrowed by backend, family substring, bucket, or request index,
     and fires either deterministically (``count``: the first N matching
     probes) or probabilistically (``probability``, drawn from the
@@ -45,7 +48,13 @@ from dataclasses import dataclass, field
 from repro.core import cache as _cache
 from repro.core import dispatch as _dispatch
 
-SITES = ("compile", "launch", "cache.read", "cache.write", "executor.row")
+SITES = ("compile", "launch", "cache.read", "cache.write", "executor.row",
+         "worker.kill", "worker.hang", "worker.slow", "worker.reject")
+
+#: how long a ``worker.slow`` fire stalls the worker (straggler
+#: injection — long enough to trip the dispatcher's hedge timer, short
+#: enough that tests don't crawl); override with REPRO_CHAOS_SLOW_S
+WORKER_SLOW_S = float(os.environ.get("REPRO_CHAOS_SLOW_S", "0.25"))
 
 
 class InjectedFault(RuntimeError):
@@ -201,6 +210,43 @@ def maybe_fail(site: str, backend: "str | None" = None,
         return
     for plan in tuple(_ACTIVE):
         plan.check(site, backend, family, bucket, index)
+
+
+def worker_fault(family: "str | None" = None, index: "int | None" = None,
+                 backend: "str | None" = None,
+                 bucket: "tuple | None" = None) -> None:
+    """Probe the process-level ``worker.*`` sites and PERFORM the
+    matched failure mode — called by a fleet worker once at startup
+    (``index=0``) and once per received request group (PR 8):
+
+      * ``worker.kill``  — hard process death (``os._exit``): no
+        cleanup, no goodbye message, exactly what a segfaulting driver
+        or an OOM kill looks like to the supervisor;
+      * ``worker.hang``  — the handler sleeps past any plausible
+        heartbeat budget: the process stays alive but stops beating,
+        exercising the supervisor's hang detector;
+      * ``worker.slow``  — stalls `WORKER_SLOW_S` then serves normally:
+        a straggler, exercising dispatcher hedging;
+      * ``worker.reject`` — raises `InjectedFault` for the caller to
+        convert into an error reply: a sick-but-responsive worker.
+
+    Only ``worker.reject`` propagates; the first three never return
+    control in a way the caller must handle."""
+    import time as _time
+
+    try:
+        maybe_fail("worker.kill", backend, family, bucket, index)
+    except InjectedFault:
+        os._exit(17)
+    try:
+        maybe_fail("worker.hang", backend, family, bucket, index)
+    except InjectedFault:
+        _time.sleep(3600.0)
+    try:
+        maybe_fail("worker.slow", backend, family, bucket, index)
+    except InjectedFault:
+        _time.sleep(WORKER_SLOW_S)
+    maybe_fail("worker.reject", backend, family, bucket, index)
 
 
 def active_plans() -> tuple:

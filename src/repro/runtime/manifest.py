@@ -49,15 +49,17 @@ DOC_KEY = "manifest-v1"
 MAX_OBSERVED_KEYS = 512
 
 
-def _sane_doc(doc) -> tuple[dict, list, dict]:
+def _sane_doc(doc) -> tuple[dict, list, dict, dict]:
     """Best-effort view of a persisted manifest document: a corrupt file
     already reads as ``{}`` (DiskCache quarantines it), but a well-formed
     JSON of the wrong *shape* (hand-edited, version drift) must not kill
     the runtime either.  Non-dict docs/entry-maps collapse to empty;
     non-dict entry values are dropped.  Malformed-but-dict entries are
-    kept — `replay` reports them per entry in its ``errors`` list."""
+    kept — `replay` reports them per entry in its ``errors`` list.
+    The fourth element is the fleet's merged router-telemetry section
+    (PR 8) — same tolerance rules."""
     if not isinstance(doc, dict):
-        return {}, [], {}
+        return {}, [], {}, {}
     entries = doc.get("entries", {})
     if not isinstance(entries, dict):
         entries = {}
@@ -67,9 +69,13 @@ def _sane_doc(doc) -> tuple[dict, list, dict]:
     sequences = doc.get("sequences", {})
     if not isinstance(sequences, dict):
         sequences = {}
+    router = doc.get("router", {})
+    if not isinstance(router, dict):
+        router = {}
     return ({k: v for k, v in entries.items() if isinstance(v, dict)},
             list(observed),
-            {k: v for k, v in sequences.items() if isinstance(v, dict)})
+            {k: v for k, v in sequences.items() if isinstance(v, dict)},
+            router)
 
 
 def entry_key(family: str, geometry: tuple, dtype: str, backend: str,
@@ -90,10 +96,12 @@ class WarmStartManifest:
         self.cache = cache if cache is not None else DiskCache(NAMESPACE)
         self.doc_key = doc_key
         self._lock = threading.Lock()
-        entries, observed, sequences = _sane_doc(self.cache.get(self.doc_key))
+        entries, observed, sequences, router = \
+            _sane_doc(self.cache.get(self.doc_key))
         self._entries: dict = entries
         self._observed: list = observed
         self._sequences: dict = sequences
+        self._router: dict = router
         self._listening = False
 
     # -- recording -------------------------------------------------------
@@ -162,7 +170,8 @@ class WarmStartManifest:
         transformation chains); returns the count loaded."""
         from repro.core import autotune
 
-        entries, observed, sequences = _sane_doc(self.cache.get(self.doc_key))
+        entries, observed, sequences, router = \
+            _sane_doc(self.cache.get(self.doc_key))
         with self._lock:
             self._sequences = sequences
             records = [dict(r) for r in sequences.values()]
@@ -205,6 +214,41 @@ class WarmStartManifest:
             except ValueError:
                 pass
 
+    # -- fleet router telemetry (PR 8) ------------------------------------
+    def record_router_state(self, state: "dict | None") -> None:
+        """Merge one worker's `BackendRouter.export_state()` into the
+        shared document's ``router`` section.  The merge itself runs
+        inside `DiskCache.update`'s cross-process flock, so N workers
+        publishing concurrently converge on one table — EMA cells
+        observation-weighted, priors by min — instead of clobbering
+        each other."""
+        from repro.runtime.router import merge_router_states
+
+        if not state or not (state.get("cells") or state.get("priors")):
+            return
+
+        def merge(doc):
+            entries, observed, sequences, router = _sane_doc(doc)
+            merged_router = merge_router_states(router, state)
+            with self._lock:
+                self._router = merged_router
+            return {"entries": entries,
+                    "observed_keys": observed[-MAX_OBSERVED_KEYS:],
+                    "sequences": sequences,
+                    "router": merged_router}
+
+        self.cache.update(self.doc_key, merge, default={})
+
+    def load_router_state(self) -> dict:
+        """Fresh-from-disk read of the fleet's merged router section —
+        `ServingRuntime.warmup()` imports it so a restarted worker
+        starts from the fleet's converged routing table."""
+        entries, observed, sequences, router = \
+            _sane_doc(self.cache._read_disk(self.doc_key))
+        with self._lock:
+            self._router = router
+        return dict(router)
+
     def _persist(self) -> None:
         with self._lock:
             entries = dict(self._entries)
@@ -212,7 +256,8 @@ class WarmStartManifest:
             sequences = {k: dict(v) for k, v in self._sequences.items()}
 
         def merge(doc):
-            prev_entries, prev_observed, prev_sequences = _sane_doc(doc)
+            prev_entries, prev_observed, prev_sequences, prev_router = \
+                _sane_doc(doc)
             merged = dict(prev_entries)
             merged.update(entries)
             seen = list(dict.fromkeys(prev_observed + observed))
@@ -220,7 +265,8 @@ class WarmStartManifest:
             merged_seq.update(sequences)
             return {"entries": merged,
                     "observed_keys": seen[-MAX_OBSERVED_KEYS:],
-                    "sequences": merged_seq}
+                    "sequences": merged_seq,
+                    "router": prev_router}
 
         self.cache.update(self.doc_key, merge, default={})
 
@@ -232,11 +278,13 @@ class WarmStartManifest:
     def reload(self) -> int:
         """Re-read the persisted document (a fresh process's first step);
         returns the entry count."""
-        entries, observed, sequences = _sane_doc(self.cache.get(self.doc_key))
+        entries, observed, sequences, router = \
+            _sane_doc(self.cache.get(self.doc_key))
         with self._lock:
             self._entries = entries
             self._observed = observed
             self._sequences = sequences
+            self._router = router
             return len(self._entries)
 
     def clear(self) -> None:
@@ -244,9 +292,10 @@ class WarmStartManifest:
             self._entries.clear()
             self._observed.clear()
             self._sequences.clear()
+            self._router = {}
         self.cache.update(self.doc_key, lambda _:
                           {"entries": {}, "observed_keys": [],
-                           "sequences": {}}, default={})
+                           "sequences": {}, "router": {}}, default={})
 
     def __len__(self) -> int:
         with self._lock:

@@ -80,6 +80,49 @@ def _seed_routers_from_winner(name: str, backend: "str | None", bucket: Any,
         router.seed_prior(backend, nb, float(seconds))
 
 
+def merge_router_states(a: "dict | None", b: "dict | None") -> dict:
+    """Merge two `BackendRouter.export_state` documents (PR 8): EMA
+    cells present in both merge observation-weighted (the worker with
+    more samples dominates) and their counts sum; priors merge by min.
+    Pure function — the manifest's file-locked read-modify-write calls
+    it with (persisted, incoming)."""
+    a = a if isinstance(a, dict) else {}
+    b = b if isinstance(b, dict) else {}
+    cells = {k: dict(v) for k, v in (a.get("cells") or {}).items()
+             if isinstance(v, dict)}
+    for k, rec in (b.get("cells") or {}).items():
+        if not isinstance(rec, dict):
+            continue
+        cur = cells.get(k)
+        if cur is None:
+            cells[k] = dict(rec)
+            continue
+        try:
+            oa = max(0, int(cur.get("obs", 0)))
+            ob = max(0, int(rec.get("obs", 0)))
+            ea, eb = float(cur.get("ema", 0.0)), float(rec.get("ema", 0.0))
+        except (TypeError, ValueError):
+            continue
+        w = oa + ob
+        merged = dict(rec)
+        merged["ema"] = (ea * oa + eb * ob) / w if w else min(ea, eb)
+        merged["obs"] = w
+        cells[k] = merged
+    priors = {k: dict(v) for k, v in (a.get("priors") or {}).items()
+              if isinstance(v, dict)}
+    for k, rec in (b.get("priors") or {}).items():
+        if not isinstance(rec, dict):
+            continue
+        cur = priors.get(k)
+        try:
+            secs = float(rec.get("seconds", 0.0))
+        except (TypeError, ValueError):
+            continue
+        if cur is None or secs < float(cur.get("seconds", secs)):
+            priors[k] = dict(rec)
+    return {"cells": cells, "priors": priors}
+
+
 class CircuitBreaker:
     """Per-``(family, backend, bucket)`` failure breaker (PR 6,
     DESIGN.md §10).
@@ -325,6 +368,58 @@ class BackendRouter:
         if cc.delta == 0 and dispatch.degradation_total() == d0:
             self.observe(family, be, bucket, time.perf_counter() - t0)
         return out
+
+    # -- cross-process state (PR 8) --------------------------------------
+    def export_state(self) -> dict:
+        """JSON-able snapshot of the learned tables — EMA cells with
+        their observation counts, plus the seeded priors — in the wire
+        format `WarmStartManifest.record_router_state` merges and
+        `import_state` consumes.  Buckets serialize as lists (they may
+        carry the ``"T"`` transposed marker, which is JSON-fine)."""
+        with self._lock:
+            cells = {}
+            for (fam, be, bucket), ema in self._ema.items():
+                key = f"{fam}|{be}|{'x'.join(map(str, bucket))}"
+                cells[key] = {"family": fam, "backend": be,
+                              "bucket": list(bucket), "ema": float(ema),
+                              "obs": int(self._obs.get((fam, be, bucket), 0))}
+            priors = {f"{be}|{'x'.join(map(str, bucket))}":
+                      {"backend": be, "bucket": list(bucket),
+                       "seconds": float(v)}
+                      for (be, bucket), v in self._prior.items()}
+            return {"cells": cells, "priors": priors}
+
+    def import_state(self, state: "dict | None") -> int:
+        """Adopt another process's exported tables: cells this router
+        has never measured take the imported EMA *and* observation
+        count — a restarted fleet worker starts from the fleet's
+        converged routing table instead of re-exploring every backend —
+        while locally-measured cells are kept (live data beats a
+        snapshot).  Priors merge by min.  Returns cells adopted."""
+        if not isinstance(state, dict):
+            return 0
+        adopted = 0
+        with self._lock:
+            for rec in (state.get("cells") or {}).values():
+                try:
+                    k = (rec["family"], rec["backend"],
+                         tuple(rec["bucket"]))
+                    ema, obs = float(rec["ema"]), int(rec.get("obs", 1))
+                except (KeyError, TypeError, ValueError):
+                    continue
+                if self._obs.get(k, 0) == 0:
+                    self._ema[k] = ema
+                    self._obs[k] = max(1, obs)
+                    adopted += 1
+            for rec in (state.get("priors") or {}).values():
+                try:
+                    pk = (rec["backend"], tuple(rec["bucket"]))
+                    secs = float(rec["seconds"])
+                except (KeyError, TypeError, ValueError):
+                    continue
+                cur = self._prior.get(pk)
+                self._prior[pk] = secs if cur is None else min(cur, secs)
+        return adopted
 
     # -- introspection ---------------------------------------------------
     def stats(self) -> dict:

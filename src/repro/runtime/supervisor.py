@@ -1,0 +1,237 @@
+"""Fleet supervision policy — restart backoff, crash-loop breaker, and
+the monitor loop (PR 8; contract in DESIGN.md §12).
+
+`repro.runtime.fleet.ServingFleet` owns worker *processes*; this module
+owns the *decisions* about them, factored out so every policy is a pure
+state machine testable with an injected clock, no processes required:
+
+  * `BackoffPolicy` — restart delay after the Nth consecutive death:
+    ``min(cap, base * 2**(n-1))``.  A worker that dies once restarts
+    almost immediately; one that keeps dying backs off exponentially so
+    a broken host doesn't burn CPU fork-looping.
+  * `CrashLoopBreaker` — distinguishes "died" from "dies every time":
+    K deaths in a row, each before ``min_uptime`` of service, open the
+    breaker and stop restarts entirely for ``cooldown`` seconds; then a
+    single **half-open probe** restart is allowed.  The probe surviving
+    ``min_uptime`` closes the breaker (normal restarts resume); the
+    probe dying fast re-opens it.  Identical shape to the routing
+    breaker (DESIGN.md §10) one level up the stack: there a *backend*
+    is quarantined, here a *worker incarnation* is.
+  * `Supervisor` — the monitor thread: per tick it detects worker
+    crashes (process no longer alive), hangs (heartbeat silence past
+    ``hb_timeout`` — the process is alive but its serving loop is
+    stuck, so it is killed and handled as a death), and startup stalls
+    (no ``ready`` within ``start_timeout``); asks the fleet to
+    re-dispatch the dead worker's in-flight requests; and schedules the
+    restart through the two policies above.  Hedge sweeps ride the same
+    tick.
+
+Every timestamped method takes ``now=None`` (defaulting to
+``time.monotonic()``) so the unit tests drive the state machines with a
+fake clock instead of sleeping.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+
+class BackoffPolicy:
+    """Exponential restart backoff: ``delay(n) = min(cap, base*2**(n-1))``
+    seconds after the Nth consecutive death (n >= 1).  ``reset`` is
+    implicit — the fleet passes the slot's consecutive-death count,
+    which it zeroes after a healthy run."""
+
+    def __init__(self, base: float = 0.05, cap: float = 2.0):
+        if base <= 0 or cap < base:
+            raise ValueError("need 0 < base <= cap")
+        self.base = float(base)
+        self.cap = float(cap)
+
+    def delay(self, deaths: int) -> float:
+        if deaths <= 0:
+            return 0.0
+        return min(self.cap, self.base * (2.0 ** (deaths - 1)))
+
+    def schedule(self, upto: int) -> list[float]:
+        """The first ``upto`` delays — what the backoff tests assert."""
+        return [self.delay(n) for n in range(1, upto + 1)]
+
+
+class CrashLoopBreaker:
+    """Per-worker-slot crash-loop circuit breaker.
+
+    States: ``closed`` (restarts flow, through backoff), ``open`` (no
+    restarts until ``cooldown`` elapses), ``half_open`` (exactly one
+    probe restart is out; its fate decides the next state).  A death is
+    *rapid* when the incarnation served less than ``min_uptime``
+    seconds; ``threshold`` consecutive rapid deaths open the breaker.
+    """
+
+    def __init__(self, threshold: int = 3, min_uptime: float = 1.0,
+                 cooldown: float = 5.0):
+        if threshold < 1:
+            raise ValueError("threshold must be >= 1")
+        self.threshold = int(threshold)
+        self.min_uptime = float(min_uptime)
+        self.cooldown = float(cooldown)
+        self.state = "closed"
+        self.rapid_deaths = 0
+        self.total_deaths = 0
+        self.opened_at: "float | None" = None
+        self._started_at: "float | None" = None
+        self._lock = threading.Lock()
+
+    def _now(self, now):
+        return time.monotonic() if now is None else float(now)
+
+    def record_start(self, now: "float | None" = None) -> None:
+        with self._lock:
+            self._started_at = self._now(now)
+
+    def record_death(self, now: "float | None" = None) -> bool:
+        """Account one death; returns True when THIS death opened (or
+        re-opened) the breaker."""
+        now = self._now(now)
+        with self._lock:
+            self.total_deaths += 1
+            uptime = (now - self._started_at
+                      if self._started_at is not None else 0.0)
+            rapid = uptime < self.min_uptime
+            if self.state == "half_open":
+                # the probe's fate: a healthy stretch would have closed
+                # us via note_healthy; dying rapid re-opens immediately
+                if rapid:
+                    self.state = "open"
+                    self.opened_at = now
+                    return True
+                self.state = "closed"
+                self.rapid_deaths = 1 if rapid else 0
+                return False
+            if rapid:
+                self.rapid_deaths += 1
+                if self.state == "closed" and \
+                        self.rapid_deaths >= self.threshold:
+                    self.state = "open"
+                    self.opened_at = now
+                    return True
+            else:
+                self.rapid_deaths = 0
+            return False
+
+    def note_healthy(self, now: "float | None" = None) -> None:
+        """The running incarnation has served ``min_uptime`` — a
+        half-open probe succeeding closes the breaker; in any state the
+        rapid-death run is broken."""
+        with self._lock:
+            self.rapid_deaths = 0
+            if self.state == "half_open":
+                self.state = "closed"
+                self.opened_at = None
+
+    def allow_restart(self, now: "float | None" = None) -> bool:
+        """May the supervisor start a new incarnation right now?  In
+        ``open`` state, the cooldown elapsing transitions to
+        ``half_open`` and admits exactly one probe."""
+        now = self._now(now)
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if self.state == "open":
+                if self.opened_at is not None and \
+                        now - self.opened_at >= self.cooldown:
+                    self.state = "half_open"
+                    return True
+                return False
+            return False  # half_open: the one probe is already out
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"state": self.state,
+                    "rapid_deaths": self.rapid_deaths,
+                    "total_deaths": self.total_deaths,
+                    "threshold": self.threshold,
+                    "min_uptime": self.min_uptime,
+                    "cooldown_s": self.cooldown}
+
+
+class Supervisor:
+    """The fleet's monitor thread.  Owns no policy of its own — per
+    tick it reads each worker slot's observable state (process
+    liveness, last heartbeat, readiness) and drives the fleet's
+    handlers: ``_handle_death`` (re-dispatch + backoff/breaker
+    scheduling), ``_start_worker`` (when a scheduled restart comes due
+    and the slot's breaker admits it), and ``_hedge_sweep``.
+    """
+
+    def __init__(self, fleet, tick: float = 0.05):
+        self.fleet = fleet
+        self.tick = float(tick)
+        self._stop = threading.Event()
+        self._thread: "threading.Thread | None" = None
+        self.ticks = 0
+
+    def start(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="repro-fleet-supervisor", daemon=True)
+            self._thread.start()
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout=timeout)
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.tick):
+            try:
+                self.poll()
+            except Exception:  # a monitor hiccup must not kill the fleet
+                pass
+
+    def poll(self, now: "float | None" = None) -> None:
+        """One monitoring pass — public so tests can step it without
+        the thread."""
+        now = time.monotonic() if now is None else now
+        self.ticks += 1
+        for slot in self.fleet._slots:
+            with slot.lock:
+                proc = slot.proc
+                alive = proc is not None and proc.is_alive()
+                ready = slot.ready
+                last_hb = slot.last_hb
+                started = slot.started_at
+                stopping = slot.stopping
+            if proc is None:
+                # dead slot: restart if one is scheduled, due, and the
+                # slot's crash-loop breaker admits it
+                if slot.wants_restart and not self.fleet._closing and \
+                        now >= slot.restart_at and \
+                        slot.breaker.allow_restart(now):
+                    self.fleet._start_worker(slot)
+                continue
+            if not alive:
+                self.fleet._handle_death(
+                    slot, cause=("stop" if stopping else "crash"), now=now)
+                continue
+            if ready:
+                if now - last_hb > self.fleet.hb_timeout and not stopping:
+                    # alive but silent: a wedged serving loop.  Kill it
+                    # and let the death path redispatch + restart.
+                    self.fleet._kill_worker(slot)
+                    self.fleet._handle_death(slot, cause="hang", now=now)
+                    continue
+                if now - started >= slot.breaker.min_uptime:
+                    slot.breaker.note_healthy(now)
+                    with slot.lock:
+                        slot.deaths = 0
+            elif not stopping and \
+                    now - started > self.fleet.start_timeout:
+                self.fleet._kill_worker(slot)
+                self.fleet._handle_death(slot, cause="start_timeout",
+                                         now=now)
+                continue
+        self.fleet._hedge_sweep(now)

@@ -9,6 +9,7 @@ race-free.  These tests hammer exactly those two surfaces.
 """
 
 import threading
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -17,7 +18,7 @@ import jax.numpy as jnp
 
 import repro.core.array as ga
 from repro.core import dispatch
-from repro.core.cache import LRUCache
+from repro.core.cache import DiskCache, LRUCache
 
 rng = np.random.default_rng(17)
 
@@ -195,3 +196,54 @@ def test_count_compiles_counts_real_driver_builds():
     with dispatch.count_compiles() as warm:
         ga.softmax(ga.RTCGArray(x), stable=True).evaluate(backend="pallas")
     assert warm.delta == 0
+
+
+# -- cross-process DiskCache.update (PR 8) ------------------------------
+
+_INCREMENT_SNIPPET = """
+import sys
+from pathlib import Path
+from repro.core.cache import DiskCache
+
+root, n = Path(sys.argv[1]), int(sys.argv[2])
+cache = DiskCache("xproc", root=root)
+for _ in range(n):
+    cache.update("counter", lambda v: int(v or 0) + 1, default=0)
+print(cache.get("counter"))
+"""
+
+
+def test_diskcache_update_is_cross_process_safe(tmp_path):
+    """Two processes each fold N increments into one document through
+    `DiskCache.update`; the advisory flock around the read-modify-write
+    merge means no increment is ever lost (pre-PR-8 the merge only
+    serialized threads, and concurrent processes raced read-vs-rename)."""
+    import os
+    import subprocess
+    import sys
+
+    n = 40
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str((Path(__file__).parent.parent / "src"))
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _INCREMENT_SNIPPET, str(tmp_path), str(n)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for _ in range(2)]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, f"increment process failed:\n{err[-2000:]}"
+    final = DiskCache("xproc", root=tmp_path).get("counter")
+    assert final == 2 * n, f"lost {2 * n - final} updates across processes"
+
+
+def test_diskcache_update_rereads_disk_not_memo(tmp_path):
+    """`update` must merge against the *persisted* value: a second
+    DiskCache instance (a stand-in for another process) bumps the
+    document, and the first instance's next update sees that bump even
+    though its in-memory memo is stale."""
+    a = DiskCache("memo", root=tmp_path)
+    b = DiskCache("memo", root=tmp_path)
+    a.update("k", lambda v: int(v or 0) + 1, default=0)   # a's memo: 1
+    b.update("k", lambda v: int(v or 0) + 10, default=0)  # disk: 11
+    assert a.update("k", lambda v: int(v or 0) + 1, default=0) == 12

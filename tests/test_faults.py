@@ -377,6 +377,31 @@ def test_deadline_bounds_retry_budget(tmp_path):
     rt.close()
 
 
+def test_deadline_bounds_total_budget_including_backoff(tmp_path, monkeypatch):
+    """The deadline caps the request's TOTAL time — with a huge retry
+    allowance and a persistently failing row, the backoff ladder (which
+    alone would sleep for seconds) is clipped at the budget, and the
+    TimeoutError reports elapsed vs budget."""
+    monkeypatch.setenv("REPRO_RETRY_MAX", "200")
+    rt = _fresh_runtime(tmp_path, K=1, window=0.01)
+    row = _rows(K=1, N=256, seed=13)[0]
+    budget = 0.25
+    with FaultPlan([FaultRule(site="executor.row", family="softmax")]):
+        t0 = time.monotonic()
+        fut = rt.submit_softmax(row, deadline=budget)
+        with pytest.raises(TimeoutError) as ei:
+            fut.result(timeout=60)
+        elapsed = time.monotonic() - t0
+    # 200 retries x up-to-50ms backoff would be ~10s unbounded; the
+    # budget-clipped ladder must stop within the deadline plus slack
+    # for the in-flight attempt it cannot preempt
+    assert elapsed < budget + 1.0, f"deadline overshot: {elapsed:.2f}s"
+    msg = str(ei.value)
+    assert "budget" in msg and f"{budget:.3f}" in msg and "elapsed" in msg
+    assert "softmax" in msg and "256" in msg
+    rt.close()
+
+
 def test_future_timeout_message_has_context(tmp_path):
     rt = _fresh_runtime(tmp_path, K=4, window=60.0)  # window never expires
     fut = rt.submit_softmax(_rows(K=1, N=333, seed=11)[0])
