@@ -1,0 +1,242 @@
+"""Continuous-batching decode benchmarks (PR 9) -> BENCH_decode.json.
+
+Four claims, one suite (DESIGN.md §13):
+
+  * **ragged vs per-length-bucket flush** — K mixed-length sampler rows
+    through ONE ragged ``softmax.cdf`` flush (2 launches, padded only to
+    the batch max) vs the pre-ragged executor behaviour of one flush per
+    distinct length (2 launches each).  Acceptance: >= 1.5x at K=16.
+  * **Poisson decode throughput** — open-loop request arrivals
+    (`poisson_arrivals`) into a `ContinuousEngine` at capacity
+    K in {1, 4, 16}.  Wall-clock tokens/s is emitted but NOT gated: on
+    the interpret-mode CPU host a batch-K forward costs ~K batch-1
+    forwards, so wall clock cannot show step amortization (same reason
+    bench_serving refuses to gate auto-vs-pinned wall clock).  The
+    gated, machine-portable metric is *occupancy* — tokens decoded per
+    engine step over capacity: near 1.0 means requests genuinely share
+    steps, i.e. work-per-step scales near-linearly with K while the
+    step's launch schedule stays at 2.
+  * **launches per step == 2** — hard-asserted on BOTH backends: a
+    steady-state decode step launches exactly the ragged sampler pair,
+    nothing else.
+  * **warm-restart decode compiles nothing** — a fresh process replaying
+    the recorded manifest serves the same decode traffic with zero
+    generated-driver compiles (hard-asserted; jit re-traces are host
+    Python, not driver builds).
+
+Rows marked ``gate=True`` participate in the ``--compare`` gate.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import emit, poisson_arrivals, timeit
+from repro import runtime as rtm
+from repro.core import dispatch
+from repro.core.cache import DiskCache
+
+DEFAULT_CAPS = (1, 4, 16)
+BACKENDS = ("pallas", "xla")
+# mixed lengths straddling the 1024-col bucket edge; 8 distinct values
+# so the per-length-bucket baseline pays 8 separate flushes at K=16
+MIXED_LENS = (1023, 1024, 1025, 512, 700, 900, 33, 256)
+
+
+def _fresh_runtime(K: int, tmp_ns: str, backend: str = "auto",
+                   root=None) -> rtm.ServingRuntime:
+    import tempfile
+    from pathlib import Path
+
+    root = Path(root) if root else Path(tempfile.mkdtemp(prefix="bench-dec-"))
+    return rtm.ServingRuntime(
+        backend=backend, window=0.25, max_batch=K,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(cache=DiskCache(tmp_ns, root=root)))
+
+
+# ------------------------------------------------ ragged vs length buckets
+def _ragged_vs_buckets(K: int, repeats: int, rng) -> None:
+    lens = [MIXED_LENS[i % len(MIXED_LENS)] for i in range(K)]
+    rows = [rng.standard_normal(L).astype(np.float32) for L in lens]
+    rt = _fresh_runtime(K, f"bench_decode_rb_{K}")
+
+    def submit_all(ragged: bool):
+        futs = [rt.submit_softmax(r, ragged=ragged) for r in rows]
+        rt.flush()
+        return [f.result(timeout=300) for f in futs]
+
+    # correctness + launch schedule outside the timed window
+    import jax.numpy as jnp
+
+    for ragged in (False, True):
+        for out, r in zip(submit_all(ragged), rows):
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(jax.nn.softmax(jnp.asarray(r))),
+                atol=1e-5)
+    with dispatch.count_launches() as cb:
+        submit_all(False)
+    t_bucket = timeit(lambda: submit_all(False), repeats=repeats, warmup=1)
+    n_buckets = len(set(lens))
+    emit(f"decode.k{K}.sampler.per_length_bucket", t_bucket,
+         f"{cb.delta} launches ({n_buckets} length buckets x 2)",
+         kernels_launched=cb.delta, requests=K, requests_per_s=K / t_bucket)
+
+    with dispatch.count_launches() as cr:
+        submit_all(True)
+    t_ragged = timeit(lambda: submit_all(True), repeats=repeats, warmup=1)
+    assert cr.delta == 2, (
+        f"ragged flush launched {cr.delta} kernels ({cr.by_backend}), "
+        "expected the 2-launch wave+epilogue pair")
+    emit(f"decode.k{K}.sampler.ragged", t_ragged,
+         f"{cr.delta} launches for {K} mixed-length rows "
+         f"(vs {cb.delta} bucketed)",
+         kernels_launched=cr.delta, requests=K, gate=True,
+         speedup=t_bucket / t_ragged, requests_per_s=K / t_ragged)
+    rt.close()
+
+
+# ----------------------------------------------- Poisson decode throughput
+def _model():
+    from repro.configs.registry import get_config
+    from repro.models.schema import init_params
+
+    cfg = get_config("internlm2-1.8b", smoke=True).replace(
+        dtype="float32", attention_impl="naive")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _drive(eng, prompts, arrivals, max_new: int,
+           temperature: float) -> float:
+    """Open-loop: submit each prompt at its Poisson offset, step the
+    engine whenever work is live; -> busy seconds (arrival idle gaps,
+    where the engine has nothing to decode, are excluded so tokens/s
+    measures decode cost, not traffic sparsity)."""
+    t0 = time.perf_counter()
+    busy = 0.0
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < len(prompts) and arrivals[i] <= now:
+            eng.submit(prompts[i], max_new=max_new)
+            i += 1
+        if eng._pending or eng._live_slots():
+            s0 = time.perf_counter()
+            eng.step(temperature=temperature)
+            busy += time.perf_counter() - s0
+        elif i < len(prompts):
+            time.sleep(max(0.0, arrivals[i] - (time.perf_counter() - t0)))
+        else:
+            return busy
+
+
+def _poisson_throughput(cfg, params, caps, rng) -> None:
+    from repro.serving.engine import ContinuousEngine
+
+    max_new = 8
+    tok_s = {}
+    for K in caps:
+        n_req = 2 * K
+        prompts = [rng.integers(1, cfg.vocab_size, size=int(L)).astype(np.int32)
+                   for L in rng.integers(3, 12, size=n_req)]
+        arrivals = poisson_arrivals(n_req, rate_hz=200.0, seed=K)
+        rt = _fresh_runtime(max(K, 2), f"bench_decode_poisson_{K}",
+                            backend="pallas")
+        eng = ContinuousEngine(cfg, params, capacity=K, max_len=64,
+                               runtime=rt, max_pending=n_req + 1)
+        # pay the jit traces + driver builds outside the measured run
+        # (admit/decode jits are per-instance, so warm THIS engine)
+        warm_id = eng.submit(prompts[0], max_new=2)
+        eng.run(temperature=0.7)
+        steps0 = eng.stats()["steps"]
+
+        busy = _drive(eng, prompts, arrivals, max_new, temperature=0.7)
+        measured = [r for r in eng.done if r.request_id != warm_id]
+        toks = sum(r.tokens.shape[0] for r in measured)
+        assert len(measured) == n_req, eng.stats()
+        steps = eng.stats()["steps"] - steps0
+        tokens_per_step = toks / steps
+        occupancy = tokens_per_step / K
+        tok_s[K] = toks / busy
+        scale = tok_s[K] / tok_s[caps[0]] if caps[0] in tok_s else 1.0
+        emit(f"decode.poisson.k{K}", busy / max(toks, 1),
+             f"{toks} tokens / {steps} steps ({tokens_per_step:.1f} per "
+             f"step; occupancy {occupancy:.2f}); {tok_s[K]:.0f} tok/s",
+             tokens=toks, steps=steps, tokens_per_s=tok_s[K], capacity=K,
+             requests=n_req, tokens_per_step=tokens_per_step,
+             scaling_vs_k1=scale, gate=True, speedup=occupancy)
+        rt.close()
+
+
+# ------------------------------------- per-step launch budget + warm start
+def _launch_budget(cfg, params, rng) -> None:
+    from repro.serving.engine import ContinuousEngine
+
+    for be in BACKENDS:
+        rt = _fresh_runtime(4, f"bench_decode_steps_{be}", backend=be)
+        eng = ContinuousEngine(cfg, params, capacity=3, max_len=48,
+                               runtime=rt)
+        for L in (5, 9, 3):
+            eng.submit(rng.integers(1, cfg.vocab_size, size=int(L))
+                       .astype(np.int32), max_new=6)
+        eng.step(temperature=0.7)       # admission step pays the builds
+        with dispatch.count_launches() as c:
+            eng.step(temperature=0.7)
+        assert c.delta == 2, (
+            f"steady decode step on {be} launched {c.delta} "
+            f"({c.by_backend}), expected 2")
+        emit(f"decode.step_launches.{be}", 0.0,
+             f"2 launches/step for 3 live mixed-length requests",
+             kernels_launched=c.delta, backend=be, gate=True,
+             speedup=1.0)
+        rt.close()
+
+
+def _warm_restart(cfg, params, rng) -> None:
+    import tempfile
+    from pathlib import Path
+
+    from repro.serving.engine import ContinuousEngine
+
+    root = Path(tempfile.mkdtemp(prefix="bench-dec-warm-"))
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(L)).astype(np.int32)
+               for L in (5, 9, 3)]
+
+    def serve(rt):
+        eng = ContinuousEngine(cfg, params, capacity=3, max_len=48,
+                               runtime=rt)
+        for p in prompts:
+            eng.submit(p, max_new=4)
+        eng.run(temperature=0.7)
+        return eng
+
+    rt = _fresh_runtime(4, "bench_decode_warm", root=root)
+    with dispatch.count_compiles() as cold:
+        serve(rt)
+    rt.close()
+
+    dispatch.clear()
+    rt2 = _fresh_runtime(4, "bench_decode_warm", root=root)
+    warm = rt2.warmup()
+    with dispatch.count_compiles() as replay:
+        serve(rt2)
+    rt2.close()
+    assert replay.delta == 0, (
+        f"decode warm restart leaked {replay.delta} compiles "
+        f"({replay.by_backend}) after {warm['replayed']} manifest replays")
+    emit("decode.warmstart", 0.0,
+         f"cold {cold.delta} compiles; warmup {warm['compiles']}; replay 0",
+         cold_compiles=cold.delta, warmup_compiles=warm["compiles"],
+         replay_compiles=replay.delta, manifest_entries=warm["entries"])
+
+
+def run(repeats: int = 3, caps=DEFAULT_CAPS, **_ignored) -> None:
+    rng = np.random.default_rng(29)
+    _ragged_vs_buckets(16, repeats, rng)
+    cfg, params = _model()
+    _poisson_throughput(cfg, params, tuple(int(k) for k in caps), rng)
+    _launch_budget(cfg, params, rng)
+    _warm_restart(cfg, params, rng)

@@ -32,3 +32,16 @@ def emit(name: str, seconds: float, derived: str = "", **extra) -> None:
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def poisson_arrivals(n: int, rate_hz: float, seed: int = 0) -> list[float]:
+    """``n`` arrival offsets (seconds from t=0) of a Poisson process.
+
+    Inter-arrival gaps are Exponential(rate); the decode benchmark and
+    the CI smoke share this so "open-loop traffic at R req/s" means the
+    same thing in both places.  Deterministic per seed.
+    """
+    import numpy as np
+
+    gaps = np.random.default_rng(seed).exponential(1.0 / rate_hz, size=n)
+    return list(np.cumsum(gaps))

@@ -20,6 +20,9 @@
 #   fleet   — bench_fleet:       PR 8 supervised fleet — availability at
 #             0/1 injected worker kills, zero-compile warm restart,
 #             explicit shed under 2x overload
+#   decode  — bench_decode:      PR 9 continuous batching — ragged vs
+#             per-length-bucket sampler flush, Poisson decode tokens/s
+#             at capacity 1/4/16, 2-launch step budget, warm restart
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
 #
@@ -114,9 +117,9 @@ def main() -> None:
         from repro.runtime import faults
         faults.install_env_plan(args.chaos)
 
-    from benchmarks import (bench_chaos, bench_copperhead, bench_dgfem,
-                            bench_elementwise, bench_filterbank, bench_fleet,
-                            bench_model, bench_nn, bench_rmsnorm,
+    from benchmarks import (bench_chaos, bench_copperhead, bench_decode,
+                            bench_dgfem, bench_elementwise, bench_filterbank,
+                            bench_fleet, bench_model, bench_nn, bench_rmsnorm,
                             bench_serving, bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
@@ -148,6 +151,7 @@ def main() -> None:
         "serving": lambda repeats: bench_serving.run(repeats=repeats, **serving_kwargs),
         "chaos": lambda repeats: bench_chaos.run(repeats=repeats, **serving_kwargs),
         "fleet": lambda repeats: bench_fleet.run(repeats=repeats, **serving_kwargs),
+        "decode": bench_decode.run,
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }

@@ -182,3 +182,42 @@ if __name__ == "__main__":
               f"{ok / len(rows):.3f}) with {sum(fs['deaths'].values())} "
               f"worker death(s), {fs['redispatched']} re-dispatched, "
               f"{fs['starts'] - fs['workers']} restart(s)")
+
+    # 7. Continuous-batching decode (PR 9, DESIGN.md §13): requests join
+    #    and leave the live decode batch EVERY step.  Each request leases
+    #    a slot of one fixed-shape device KV cache (RequestsCache pool:
+    #    admit / evict / explicit shed), prompts of any length prefill as
+    #    one (1, max_len) row scattered into the slot, and every step's
+    #    mixed-length sampler rows coalesce into ONE *ragged*
+    #    softmax.cdf flush — 2 generated launches per step, whatever the
+    #    occupancy, with the inverse-CDF cumsum fused into the epilogue.
+    import jax
+    from pathlib import Path
+    from repro.configs.registry import get_config
+    from repro.core.cache import DiskCache
+    from repro.models.schema import init_params
+    from repro.serving.engine import ContinuousEngine
+
+    cfg = get_config("internlm2-1.8b", smoke=True).replace(
+        dtype="float32", attention_impl="naive")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rt = runtime.ServingRuntime(
+        backend="auto", window=0.25, max_batch=8,
+        router=runtime.BackendRouter(),
+        manifest=runtime.WarmStartManifest(cache=DiskCache(
+            "quickstart_decode",
+            root=Path(tempfile.mkdtemp(prefix="quickstart-decode-")))))
+    eng = ContinuousEngine(cfg, params, capacity=3, max_len=48, runtime=rt)
+    for L, m in ((5, 6), (9, 4), (3, 5), (7, 3), (2, 4)):   # 5 requests, 3 slots
+        eng.submit(rng.integers(1, cfg.vocab_size, size=L).astype(np.int32),
+                   max_new=m)
+    eng.step(temperature=0.7)            # admission step pays the builds
+    with dispatch.count_launches() as c:
+        eng.step(temperature=0.7)        # steady state: the ragged pair
+    results = eng.run(temperature=0.7)   # slots recycle as requests finish
+    st = eng.stats()
+    print(f"continuous decode: {len(results)} requests "
+          f"({st['tokens_generated']} tokens) through "
+          f"{st['kv']['capacity']} KV slots "
+          f"in {st['steps']} steps; {c.delta} launches/steady-step")
+    rt.close()

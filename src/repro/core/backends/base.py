@@ -182,13 +182,17 @@ class Backend(abc.ABC):
         return drv
 
     def elementwise_rows_driver(self, spec: ElementwiseSpec, *, brows: int,
-                                ncols: int, block_rows: int) -> Callable:
+                                ncols: int, block_rows: int,
+                                ragged: bool = False) -> Callable:
         """Compile one row-layout driver: ``driver(b, n, flat_args) ->
-        [(b, n) outputs]`` serving every ``(B, N)`` in the bucket pair."""
+        [(b, n) outputs]`` serving every ``(B, N)`` in the bucket pair.
+        ``ragged=True`` adds a leading per-row length operand; the
+        driver gains ``row_lens=`` and masks each row's stores at its
+        own length (padding beyond it reads as zeros)."""
         from repro.core import ir
 
         kir = ir.lower_elementwise(spec, rows=brows, lanes=ncols,
-                                   layout="rows")
+                                   layout="rows", ragged=ragged)
         kir = ir.tag_parallel(kir, "rows")
         kir = ir.tile(kir, "rows", block_rows)
         drv = self.build_elementwise_rows(kir)
@@ -210,7 +214,8 @@ class Backend(abc.ABC):
         return drv
 
     def reduction_rows_driver(self, spec: ReductionSpec, *, brows: int,
-                              ncols: int, block_rows: int) -> Callable:
+                              ncols: int, block_rows: int,
+                              ragged: bool = False) -> Callable:
         """Compile one segmented driver: ``driver(b, n, flat_args)``
         returning (b,)-shaped outputs (tuple when ``spec.multi``).
 
@@ -218,11 +223,18 @@ class Backend(abc.ABC):
         reduced length).  For ``spec.axis == 0`` the domain is the
         transpose of the stored arrays, so ``transpose_layout`` joins
         the chain: arg kinds swap row<->col and the driver binds full
-        operands transposed."""
+        operands transposed.  ``ragged=True`` replaces the shared
+        runtime ``n`` scalar with a per-row length vector (the driver
+        gains ``row_lens=``); rows layout only, and incompatible with
+        the transposed axis=0 form (lengths segment the reduced axis,
+        which axis=0 stores as rows)."""
         from repro.core import ir
 
+        if ragged and spec.axis == 0:
+            raise ValueError("ragged reduction is axis=-1 only "
+                             "(axis=0 reduces across the stored rows)")
         kir = ir.lower_reduction(spec, rows=brows, cols=ncols,
-                                 layout="rows")
+                                 layout="rows", ragged=ragged)
         if spec.axis == 0:
             kir = ir.transpose_layout(kir)
         kir = ir.tag_parallel(kir, "rows")

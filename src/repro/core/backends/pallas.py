@@ -36,7 +36,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.backends.base import Backend, bind_row_operand, binop_apply
-from repro.core.platform import LANES, pad_flat_operand
+from repro.core.platform import LANES, pad_flat_operand, pad_row_operand
 from repro.core.templates import KernelTemplate
 
 
@@ -53,7 +53,7 @@ def row_block_specs(block_rows: int, ncols: int) -> dict:
 _ELTWISE_TMPL = KernelTemplate(
     "eltwise",
     '''
-def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in out_names %}{{ o }}_out_ref{{ ", " if not loop.last }}{% endfor %}):
+def {{ name }}_kernel({% if ragged %}_n_ref, {% endif %}{% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in out_names %}{{ o }}_out_ref{{ ", " if not loop.last }}{% endfor %}):
 {% for s in scalar_names %}
     {{ s }} = {{ s }}_ref[0, 0]
 {% endfor %}
@@ -61,6 +61,10 @@ def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o i
     _row = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 0)
     _col = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
     i = (pl.program_id(0) * {{ block_rows }} + _row) * {{ lanes }} + _col
+{% endif %}
+{% if ragged %}
+    _n = _n_ref[...]
+    _rcol = jax.lax.broadcasted_iota(jnp.int32, ({{ block_rows }}, {{ lanes }}), 1)
 {% endif %}
     _BLK = ({{ block_rows }}, {{ lanes }})
 {% for v in loaded_vectors %}
@@ -70,7 +74,11 @@ def {{ name }}_kernel({% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o i
     {{ line }}
 {% endfor %}
 {% for o in out_names %}
+{% if ragged %}
+    {{ o }}_out_ref[...] = jnp.where(_rcol < _n, {{ o }}, jnp.zeros_like({{ o }}))
+{% else %}
     {{ o }}_out_ref[...] = {{ o }}
+{% endif %}
 {% endfor %}
 ''',
 )
@@ -112,7 +120,11 @@ _ROW_REDUCE_TMPL = KernelTemplate(
     "row_reduction",
     '''
 def {{ name }}_kernel(_n_ref, {% for a in in_names %}{{ a }}_ref, {% endfor %}{% for o in outs %}o{{ loop.index0 }}_ref{{ ", " if not loop.last }}{% endfor %}):
+{% if ragged %}
+    _n = _n_ref[...]
+{% else %}
     _n = _n_ref[0, 0]
+{% endif %}
 {% for s in scalar_names %}
     {{ s }} = {{ s }}_ref[0, 0]
 {% endfor %}
@@ -194,6 +206,7 @@ class PallasBackend(Backend):
                 loaded_vectors=list(kir.meta_get("loaded_vectors", ())),
                 body_lines=kir.lines("body"),
                 needs_i=kir.meta_get("needs_i", False),
+                ragged=kir.meta_get("ragged", False),
                 block_rows=rows.block or rows.extent,
                 lanes=lane_ax.extent,
             )
@@ -214,6 +227,8 @@ class PallasBackend(Backend):
                                           **tmpl_kwargs)
             else:
                 src = _ROW_REDUCE_TMPL.render(ncols=kir.axis("cols").extent,
+                                              ragged=kir.meta_get("ragged",
+                                                                  False),
                                               **tmpl_kwargs)
             return _with_preamble(kir.meta_get("preamble", ""), src)
         if kir.kind == "scan":
@@ -284,7 +299,9 @@ class PallasBackend(Backend):
         kernel = mod.get_function(f"{kir.name}_kernel")
 
         spec_map = row_block_specs(block_rows, ncols)
-        in_specs = [spec_map[kind] for _, _, kind in kir.args]
+        ragged = bool(kir.meta_get("ragged", False))
+        in_specs = ([spec_map["row"]] if ragged else []) + \
+            [spec_map[kind] for _, _, kind in kir.args]
         out_shape = [jax.ShapeDtypeStruct((brows, ncols), jnp.dtype(d))
                      for _, d in kir.outs]
         call = jax.jit(pl.pallas_call(
@@ -297,9 +314,15 @@ class PallasBackend(Backend):
         ))
         arg_meta = [(n, jnp.dtype(d), k) for n, d, k in kir.args]
 
-        def driver(b, n, flat_args):
-            padded = [bind_row_operand(kind, name, arg, dt, b, n, brows, ncols)
-                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+        def driver(b, n, flat_args, row_lens=None):
+            padded = []
+            if ragged:
+                lens = jnp.asarray(row_lens, jnp.int32).reshape(-1)
+                padded.append(pad_row_operand("row", "_n", lens, jnp.int32,
+                                              b, n, brows, ncols))
+            padded += [bind_row_operand(kind, name, arg, dt, b, n, brows,
+                                        ncols)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             return [o[:b, :n] for o in outs]
 
@@ -362,8 +385,9 @@ class PallasBackend(Backend):
         kernel = mod.get_function(f"{kir.name}_kernel")
 
         spec_map = row_block_specs(block_rows, ncols)
-        in_specs = [spec_map["scalar"]] + [spec_map[kind]
-                                           for _, _, kind in kir.args]
+        ragged = bool(kir.meta_get("ragged", False))
+        in_specs = [spec_map["row" if ragged else "scalar"]] + \
+            [spec_map[kind] for _, _, kind in kir.args]
         call = jax.jit(pl.pallas_call(
             kernel,
             grid=(grid,),
@@ -377,8 +401,14 @@ class PallasBackend(Backend):
         multi = kir.meta_get("multi", False)
         transposed = kir.transposed
 
-        def driver(b, n, flat_args):
-            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+        def driver(b, n, flat_args, row_lens=None):
+            if ragged:
+                lens = jnp.asarray(row_lens, jnp.int32).reshape(-1)
+                # padded rows bind length 0 -> fully neutral-masked
+                padded = [pad_row_operand("row", "_n", lens, jnp.int32,
+                                          b, n, brows, ncols)]
+            else:
+                padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
             padded += [bind_row_operand(kind, name, arg, dt, b, n, brows,
                                         ncols, transposed)
                        for (name, dt, kind), arg in zip(arg_meta, flat_args)]

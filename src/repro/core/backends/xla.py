@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.backends.base import Backend, bind_row_operand, binop_apply
-from repro.core.platform import LANES, pad_flat_operand
+from repro.core.platform import LANES, pad_flat_operand, pad_row_operand
 from repro.core.templates import KernelTemplate
 
 # The XLA lowering of an elementwise spec: one function over the whole
@@ -49,7 +49,7 @@ from repro.core.templates import KernelTemplate
 _ELTWISE_TMPL = KernelTemplate(
     "xla_eltwise",
     '''
-def {{ name }}_fn({% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% endfor %}):
+def {{ name }}_fn({% if ragged %}_n_ref, {% endif %}{% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% endfor %}):
 {% for s in scalar_names %}
     {{ s }} = {{ s }}[0, 0]
 {% endfor %}
@@ -58,10 +58,19 @@ def {{ name }}_fn({% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% en
     _col = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ lanes }}), 1)
     i = _row * {{ lanes }} + _col
 {% endif %}
+{% if ragged %}
+    _n = _n_ref
+    _rcol = jax.lax.broadcasted_iota(jnp.int32, ({{ rows }}, {{ lanes }}), 1)
+{% endif %}
     _BLK = ({{ rows }}, {{ lanes }})
 {% for line in body_lines %}
     {{ line }}
 {% endfor %}
+{% if ragged %}
+{% for o in out_names %}
+    {{ o }} = jnp.where(_rcol < _n, {{ o }}, jnp.zeros_like({{ o }}))
+{% endfor %}
+{% endif %}
     return ({% for o in out_names %}{{ o }}, {% endfor %})
 ''',
 )
@@ -99,7 +108,11 @@ _ROW_REDUCE_TMPL = KernelTemplate(
     "xla_row_reduction",
     '''
 def {{ name }}_fn(_n_ref, {% for a in in_names %}{{ a }}{{ ", " if not loop.last }}{% endfor %}):
+{% if ragged %}
+    _n = _n_ref
+{% else %}
     _n = _n_ref[0, 0]
+{% endif %}
 {% for s in scalar_names %}
     {{ s }} = {{ s }}[0, 0]
 {% endfor %}
@@ -163,6 +176,7 @@ class XlaBackend(Backend):
                 scalar_names=list(kir.meta_get("scalar_names", ())),
                 body_lines=kir.lines("body"),
                 needs_i=kir.meta_get("needs_i", False),
+                ragged=kir.meta_get("ragged", False),
                 rows=kir.axis("rows").extent,
                 lanes=kir.axes[1].extent,
             )
@@ -181,6 +195,8 @@ class XlaBackend(Backend):
                                           **tmpl_kwargs)
             else:
                 src = _ROW_REDUCE_TMPL.render(ncols=kir.axis("cols").extent,
+                                              ragged=kir.meta_get("ragged",
+                                                                  False),
                                               **tmpl_kwargs)
             return _with_preamble(kir.meta_get("preamble", ""), src)
         if kir.kind == "scan":
@@ -227,10 +243,17 @@ class XlaBackend(Backend):
         ncols = kir.axis("lanes").extent
         call = self._compile(self.render_ir(kir), f"{kir.name}_fn", kir.name)
         arg_meta = self._arg_meta(kir)
+        ragged = bool(kir.meta_get("ragged", False))
 
-        def driver(b, n, flat_args):
-            padded = [bind_row_operand(kind, name, arg, dt, b, n, brows, ncols)
-                      for (name, dt, kind), arg in zip(arg_meta, flat_args)]
+        def driver(b, n, flat_args, row_lens=None):
+            padded = []
+            if ragged:
+                lens = jnp.asarray(row_lens, jnp.int32).reshape(-1)
+                padded.append(pad_row_operand("row", "_n", lens, jnp.int32,
+                                              b, n, brows, ncols))
+            padded += [bind_row_operand(kind, name, arg, dt, b, n, brows,
+                                        ncols)
+                       for (name, dt, kind), arg in zip(arg_meta, flat_args)]
             outs = call(*padded)
             return [o[:b, :n] for o in outs]
 
@@ -262,9 +285,16 @@ class XlaBackend(Backend):
         arg_meta = self._arg_meta(kir)
         multi = kir.meta_get("multi", False)
         transposed = kir.transposed
+        ragged = bool(kir.meta_get("ragged", False))
 
-        def driver(b, n, flat_args):
-            padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
+        def driver(b, n, flat_args, row_lens=None):
+            if ragged:
+                lens = jnp.asarray(row_lens, jnp.int32).reshape(-1)
+                # padded rows bind length 0 -> fully neutral-masked
+                padded = [pad_row_operand("row", "_n", lens, jnp.int32,
+                                          b, n, brows, ncols)]
+            else:
+                padded = [jnp.full((1, 1), n, dtype=jnp.int32)]
             padded += [bind_row_operand(kind, name, arg, dt, b, n, brows,
                                         ncols, transposed)
                        for (name, dt, kind), arg in zip(arg_meta, flat_args)]

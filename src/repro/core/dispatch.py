@@ -178,7 +178,7 @@ def bucket_cols(n: int, lanes: int = LANES) -> int:
 
 
 def rc_bucket(b: int, n: int, lanes: int = LANES,
-              transposed: bool = False) -> tuple:
+              transposed: bool = False, ragged: bool = False) -> tuple:
     """(batch, row-length) bucket pair — the per-bucket tuning key for
     row-segmented kernels, independent of ``block_rows`` (analogue of
     `n_bucket` for the 2-D layout).
@@ -187,9 +187,18 @@ def rc_bucket(b: int, n: int, lanes: int = LANES,
     reductions run the segmented kernel over the transposed domain, so
     their winners must never collide with axis=-1 winners for the same
     geometry in the tuning store or breaker cells (a square (N, N)
-    operand would otherwise share a key across both layouts)."""
+    operand would otherwise share a key across both layouts).
+
+    ``ragged=True`` appends an ``"R"`` marker: ragged row-segmented
+    kernels carry a per-row length operand and mask differently from
+    the dense form, so their tuning winners / router EMA cells /
+    breaker cells must never collide with same-geometry dense ones."""
     pair = (next_pow2(max(1, int(b))), next_pow2(-(-max(1, int(n)) // lanes)))
-    return pair + ("T",) if transposed else pair
+    if transposed:
+        pair = pair + ("T",)
+    if ragged:
+        pair = pair + ("R",)
+    return pair
 
 
 def default_batch_block(b: int, target_grid: int = 8, min_rows: int = 1,

@@ -178,10 +178,12 @@ class ElementwiseKernel:
     def _rows_geometry(self, call_args) -> tuple[int, int]:
         return rows_geometry(call_args[self._first_vec_pos])
 
-    def _call_rows(self, call_args, block_rows: int | None, be):
+    def _call_rows(self, call_args, block_rows: int | None, be,
+                   row_lens=None):
         from repro.core import autotune
+        ragged = row_lens is not None
         b, n = self._rows_geometry(call_args)
-        bucket = dispatch.rc_bucket(b, n)
+        bucket = dispatch.rc_bucket(b, n, ragged=ragged)
         br = (block_rows or self._tuned.get((be.name, bucket))
               or autotune.sequence_param(f"eltwise.{self.name}", be.name,
                                          bucket, "block_rows")
@@ -190,14 +192,22 @@ class ElementwiseKernel:
         ncols = dispatch.bucket_cols(n)
         key = ("eltwise_rows", be.name, self._content_key, brows, ncols,
                br if be.block_sensitive else 0)
+        if ragged:  # dense keys stay byte-identical
+            key = key + ("R",)
+        site_bucket = (brows, ncols, "R") if ragged else (brows, ncols)
         drv = dispatch.get_or_build(
             key,
             lambda: be.elementwise_rows_driver(self.spec, brows=brows,
-                                               ncols=ncols, block_rows=br),
-            backend=be.name, name=self.name, bucket=(brows, ncols))
+                                               ncols=ncols, block_rows=br,
+                                               ragged=ragged),
+            backend=be.name, name=self.name, bucket=site_bucket)
+        if ragged:
+            run = lambda: drv(b, n, call_args, row_lens)
+        else:
+            run = lambda: drv(b, n, call_args)
         outs = dispatch.run_with_retries(
-            lambda: drv(b, n, call_args), site="launch", backend=be.name,
-            family=self.name, bucket=(brows, ncols))
+            run, site="launch", backend=be.name,
+            family=self.name, bucket=site_bucket)
         # each output takes the shape of its template argument
         outs = [o.reshape(call_args[p].shape)
                 for o, p in zip(outs, self._out_positions)]
@@ -205,10 +215,14 @@ class ElementwiseKernel:
         return outs[0] if len(outs) == 1 else tuple(outs)
 
     def __call__(self, *call_args, block_rows: int | None = None,
-                 backend: "str | None" = None):
+                 backend: "str | None" = None, row_lens=None):
         be = backends.get_backend(backend or self.backend)
+        if row_lens is not None and self.layout != "rows":
+            raise ValueError("row_lens= requires layout='rows' "
+                             "(per-row masking needs the 2-D layout)")
         if self.layout == "rows":
-            return self._call_rows(call_args, block_rows, be)
+            return self._call_rows(call_args, block_rows, be,
+                                   row_lens=row_lens)
         first_vec = call_args[self._first_vec_pos]
         shape = first_vec.shape
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(shape))

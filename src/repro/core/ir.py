@@ -182,46 +182,62 @@ def _arg_tuple(arg_meta) -> tuple:
 
 # ----------------------------------------------------------- lowerings
 def lower_elementwise(spec, *, rows: int, lanes: int,
-                      layout: str = "flat") -> KernelIR:
+                      layout: str = "flat", ragged: bool = False) -> KernelIR:
     """ElementwiseSpec -> IR.  ``layout='flat'`` is a lane tiling of a
     1-D stream; ``'rows'`` is the row-segmented (B, N) form where the
-    lane axis spans one whole (bucketed) row."""
+    lane axis spans one whole (bucketed) row.  ``ragged`` (rows layout
+    only) adds a per-row runtime length operand ``_n`` masking each
+    row's stores independently; the key is absent from dense IR so
+    every pre-ragged token and render stays byte-identical."""
     stmts = tuple(Statement("body", ln) for ln in spec.body_lines)
     outs = tuple((o, str(d)) for o, d in zip(spec.out_names, spec.out_dtypes))
+    meta = {
+        "layout": layout, "needs_i": bool(spec.needs_i),
+        "scalar_names": tuple(spec.scalar_names),
+        "loaded_vectors": tuple(spec.loaded_vectors),
+        "preamble": spec.preamble, "interpret": bool(spec.interpret),
+    }
+    if ragged:
+        if layout != "rows":
+            raise ValueError("ragged elementwise requires layout='rows'")
+        meta["ragged"] = True
     return KernelIR(
         kind="elementwise", name=spec.name,
         axes=(Axis("rows", int(rows)), Axis("lanes", int(lanes))),
         args=_arg_tuple(spec.arg_meta),
         statements=stmts, outs=outs,
-        meta=_meta_tuple({
-            "layout": layout, "needs_i": bool(spec.needs_i),
-            "scalar_names": tuple(spec.scalar_names),
-            "loaded_vectors": tuple(spec.loaded_vectors),
-            "preamble": spec.preamble, "interpret": bool(spec.interpret),
-        }))
+        meta=_meta_tuple(meta))
 
 
 def lower_reduction(spec, *, rows: int, cols: int,
-                    layout: str = "flat") -> KernelIR:
+                    layout: str = "flat", ragged: bool = False) -> KernelIR:
     """ReductionSpec -> IR.  Flat: both axes sweep the masked stream
     (rows axis is the sequential grid accumulation).  Rows: the rows
-    axis is the independent output axis, ``cols`` the reduced one."""
+    axis is the independent output axis, ``cols`` the reduced one.
+    ``ragged`` (rows layout only) masks each row on a per-row runtime
+    length vector instead of one shared ``n`` scalar; dense IR carries
+    no key, keeping every pre-ragged token byte-identical."""
     stmts = tuple(Statement("prelude", ln) for ln in spec.prelude_lines)
     axes = (Axis("rows", int(rows),
                  tag="sequential" if layout == "flat" else "parallel"),
             Axis("lanes" if layout == "flat" else "cols", int(cols),
                  tag="reduction"))
+    meta = {
+        "layout": layout, "multi": bool(spec.multi),
+        "axis": repr(spec.axis),
+        "scalar_names": tuple(spec.scalar_names),
+        "loaded_vectors": tuple(spec.loaded_vectors),
+        "preamble": spec.preamble, "interpret": bool(spec.interpret),
+    }
+    if ragged:
+        if layout != "rows":
+            raise ValueError("ragged reduction requires layout='rows'")
+        meta["ragged"] = True
     return KernelIR(
         kind="reduction", name=spec.name,
         axes=axes, args=_arg_tuple(spec.arg_meta),
         statements=stmts, outs=tuple(dict(o) for o in spec.outs),
-        meta=_meta_tuple({
-            "layout": layout, "multi": bool(spec.multi),
-            "axis": repr(spec.axis),
-            "scalar_names": tuple(spec.scalar_names),
-            "loaded_vectors": tuple(spec.loaded_vectors),
-            "preamble": spec.preamble, "interpret": bool(spec.interpret),
-        }))
+        meta=_meta_tuple(meta))
 
 
 def lower_scan(spec, *, n: int) -> KernelIR:

@@ -219,10 +219,13 @@ class ReductionKernel:
         b, n = self._rows_geometry(call_args)
         return (n, b) if self.axis == 0 else (b, n)
 
-    def _call_rows(self, call_args, block_rows: int | None, be):
+    def _call_rows(self, call_args, block_rows: int | None, be,
+                   row_lens=None):
         from repro.core import autotune
+        ragged = row_lens is not None
         tb, tn = self._domain_geometry(call_args)
-        bucket = dispatch.rc_bucket(tb, tn, transposed=(self.axis == 0))
+        bucket = dispatch.rc_bucket(tb, tn, transposed=(self.axis == 0),
+                                    ragged=ragged)
         br = (block_rows or self._tuned.get((be.name, bucket))
               or autotune.sequence_param(f"reduce.{self.name}", be.name,
                                          bucket, "block_rows")
@@ -231,22 +234,34 @@ class ReductionKernel:
         ncols = dispatch.bucket_cols(tn)
         key = ("reduce_rows", be.name, self._content_key, brows, ncols,
                br if be.block_sensitive else 0)
+        site_bucket = (brows, ncols, "R") if ragged else (brows, ncols)
+        if ragged:
+            key = key + ("R",)   # dense keys stay byte-identical
         drv = dispatch.get_or_build(
             key,
             lambda: be.reduction_rows_driver(self.spec, brows=brows,
-                                             ncols=ncols, block_rows=br),
-            backend=be.name, name=self.name, bucket=(brows, ncols))
+                                             ncols=ncols, block_rows=br,
+                                             ragged=ragged),
+            backend=be.name, name=self.name, bucket=site_bucket)
+        if ragged:
+            run = lambda: drv(tb, tn, call_args, row_lens)
+        else:
+            run = lambda: drv(tb, tn, call_args)
         out = dispatch.run_with_retries(
-            lambda: drv(tb, tn, call_args), site="launch", backend=be.name,
-            family=self.name, bucket=(brows, ncols))
+            run, site="launch", backend=be.name,
+            family=self.name, bucket=site_bucket)
         dispatch.record_launch(be.name)
         return out
 
     def __call__(self, *call_args, block_rows: int | None = None,
-                 backend: "str | None" = None):
+                 backend: "str | None" = None, row_lens=None):
         be = backends.get_backend(backend or self.backend)
+        if row_lens is not None and self.axis is None:
+            raise ValueError("row_lens requires the row-segmented form "
+                             "(axis=-1)")
         if self.axis is not None:
-            return self._call_rows(call_args, block_rows, be)
+            return self._call_rows(call_args, block_rows, be,
+                                   row_lens=row_lens)
         first_vec = call_args[self._first_vec_pos]
         n = int(getattr(first_vec, "size", 0)) or int(np.prod(first_vec.shape))
         br = self._pick_block_rows(n, block_rows, be.name)

@@ -34,6 +34,9 @@ C_FUNC_MAP = {
     "rsqrtf": "jax.lax.rsqrt", "rsqrt": "jax.lax.rsqrt",
     "floorf": "jnp.floor", "ceilf": "jnp.ceil",
     "erff": "jax.lax.erf", "sigmoid": "jax.nn.sigmoid",
+    # row-wise inclusive prefix sum (last-axis): the sampler's
+    # inverse-CDF epilogue fuses into the ragged flush through this
+    "cumsumf": "(lambda _v: jnp.cumsum(_v, axis=-1))",
 }
 
 _DECL_RE = re.compile(r"^\s*(?:const\s+)?(?:float|double|int|long|unsigned\s+int|bool)\s+(\w+)\s*=")

@@ -12,6 +12,35 @@ from jax import lax
 from repro.configs.base import ModelConfig
 
 
+def _resolve_tracer_type() -> type:
+    """Version-compat ``Tracer`` lookup: ``jax.core.Tracer`` has moved
+    between releases (``jax.core`` re-exports shrink over time; newer
+    trees keep it under ``jax._src.core``, some expose
+    ``jax.extend.core``).  Resolved once at import — the concrete-vs-
+    traced test sits on decode hot paths."""
+    core = getattr(jax, "core", None)
+    t = getattr(core, "Tracer", None) if core is not None else None
+    if isinstance(t, type):
+        return t
+    try:  # pragma: no cover - exercised only on jax trees without jax.core.Tracer
+        from jax.extend import core as _xcore
+        if isinstance(getattr(_xcore, "Tracer", None), type):
+            return _xcore.Tracer
+    except ImportError:
+        pass
+    from jax._src import core as _score  # pragma: no cover
+    return _score.Tracer  # pragma: no cover
+
+
+_TRACER_TYPE = _resolve_tracer_type()
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is an abstract value inside a jax trace (so RTCG
+    host paths must fall back to jax ops)."""
+    return isinstance(x, _TRACER_TYPE)
+
+
 def norm(cfg: ModelConfig, p: dict, name: str, x, *, use_pallas: bool = False,
          use_rtcg: bool = False):
     w = p[name]
@@ -21,7 +50,7 @@ def norm(cfg: ModelConfig, p: dict, name: str, x, *, use_pallas: bool = False,
         var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
         y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
         return (y * w + p[name + "_b"]).astype(x.dtype)
-    if use_rtcg and not isinstance(x, jax.core.Tracer):
+    if use_rtcg and not is_tracer(x):
         return rtcg_rmsnorm(x, w, eps=cfg.norm_eps)
     if use_pallas:
         from repro.kernels.rmsnorm.ops import rmsnorm as pallas_rms
@@ -100,7 +129,7 @@ def fused_softmax(x, *, stable: bool = True, backend: str | None = None):
     backend per shape bucket from latency telemetry and records the
     call into the warm-start manifest — see DESIGN.md §9.2.
     """
-    if isinstance(x, jax.core.Tracer):
+    if is_tracer(x):
         return jax.nn.softmax(x, axis=-1)
     if getattr(x, "ndim", 0) == 0:
         return jax.nn.softmax(x, axis=-1)

@@ -92,6 +92,11 @@ class ServingRuntime:
     def _timed(self, family: str, geometry: tuple, dtype: str, params: dict,
                run, backend: "str | None" = None, record: bool = True):
         bucket = bucket_for(geometry)
+        if params.get("ragged"):
+            # ragged flushes mask per-row lengths inside the kernel —
+            # their latency profile (and tuned winners) must not share
+            # EMA cells with the dense drivers of the same geometry
+            bucket = bucket + ("R",)
         be = self._resolve(family, bucket, backend)
         d0 = dispatch.degradation_total()
         t0 = time.perf_counter()
@@ -117,12 +122,23 @@ class ServingRuntime:
         return out
 
     def _run_batch(self, family: str, X, shared: dict,
-                   backend: "str | None" = None, record: bool = True):
+                   backend: "str | None" = None, record: bool = True,
+                   row_lens=None):
         """Run one fused row schedule over a stacked ``(K, N)`` operand —
-        the executor's flush target and the warmup replayer."""
+        the executor's flush target and the warmup replayer.  With
+        ``row_lens`` (one int32 length per row) the schedule runs the
+        *ragged* kernel pair: each row is masked to its own length
+        inside the kernels, so mixed-length requests padded to the
+        bucket max still flush as ONE 2-launch schedule."""
         import repro.core.array as ga
 
         b, n = int(X.shape[0]), int(X.shape[-1])
+        if row_lens is not None:
+            return self._run_ragged(family, X, shared, row_lens,
+                                    backend=backend, record=record)
+        if family == "softmax.cdf":
+            raise ValueError("family 'softmax.cdf' is ragged-only "
+                             "(pass row_lens=)")
         if family == "softmax":
             stable = bool(shared.get("stable", True))
 
@@ -156,6 +172,59 @@ class ServingRuntime:
         else:
             raise ValueError(f"unknown runtime family {family!r} "
                              "(softmax | softmax.axis0 | rmsnorm)")
+        return self._timed(family, (b, n), str(X.dtype), params, run,
+                           backend=backend, record=record)
+
+    def _run_ragged(self, family: str, X, shared: dict, row_lens,
+                    backend: "str | None" = None, record: bool = True):
+        """One *ragged* 2-launch flush: a row-segmented reduction wave
+        whose first operand is the per-row ``(B,)`` int32 length vector,
+        plus a fused 2-D epilogue masked to the same lengths.  Rows
+        shorter than the bucket width contribute only their own
+        elements; the padding columns come back zeroed.
+
+        Families: ``softmax`` (probabilities), ``softmax.cdf`` (the
+        sampler epilogue — the inverse-CDF cumulative sum fuses into
+        the SAME epilogue launch via ``cumsumf``, so K sampler rows add
+        zero launches over K softmax rows), ``rmsnorm`` (sum-of-squares
+        wave normalized by each row's true length)."""
+        b, n = int(X.shape[0]), int(X.shape[-1])
+        X = jnp.asarray(X)
+        lens = jnp.asarray(row_lens, jnp.int32).reshape(-1)
+        if int(lens.shape[0]) != b:
+            raise ValueError(f"row_lens has {int(lens.shape[0])} entries "
+                             f"for {b} rows")
+        if family in ("softmax", "softmax.cdf"):
+            wave, epilogue = _ragged_kernels(family)
+            X32 = X.astype(jnp.float32)
+
+            def run(be):
+                r0, r1 = wave(X32, backend=be, row_lens=lens)
+                return epilogue(r0, r1, X32, X32, backend=be, row_lens=lens)
+
+            params = {"ragged": True, "stable": True}
+        elif family == "rmsnorm":
+            wave, epilogue = _ragged_kernels("rmsnorm")
+            w = jnp.asarray(shared["w"]).astype(jnp.float32).reshape(-1)
+            eps = float(shared.get("eps", 1e-6))
+            # bind the shared weight at the flush width: row i reads
+            # w[:len_i] (columns align), and masked columns never read w
+            if int(w.shape[0]) >= n:
+                w = w[:n]
+            else:
+                w = jnp.pad(w, (0, n - int(w.shape[0])), constant_values=1.0)
+            X32 = X.astype(jnp.float32)
+            L = lens.astype(jnp.float32)  # true-length mean, not bucket mean
+
+            def run(be):
+                r0 = wave(X32, backend=be, row_lens=lens)
+                return epilogue(r0, L, w, eps, X32, X32, backend=be,
+                                row_lens=lens)
+
+            params = {"ragged": True, "eps": eps}
+        else:
+            raise ValueError(f"unknown ragged family {family!r} "
+                             "(softmax | softmax.cdf | rmsnorm)")
         return self._timed(family, (b, n), str(X.dtype), params, run,
                            backend=backend, record=record)
 
@@ -213,36 +282,43 @@ class ServingRuntime:
 
     # -- coalescing single-row submissions -------------------------------
     def submit_softmax(self, row, stable: bool = True,
-                       deadline: "float | None" = None) -> RuntimeFuture:
+                       deadline: "float | None" = None,
+                       ragged: bool = False) -> RuntimeFuture:
         """Queue one softmax row; same-bucket rows inside the window
         flush as ONE ``(K, N)`` 2-launch schedule.  ``deadline``
         (seconds) bounds this request's retry budget after a failed
-        flush (PR 6 poison isolation)."""
+        flush (PR 6 poison isolation).  With ``ragged=True`` the row
+        coalesces with *any* length (rows pad to the flush max and the
+        kernels mask per-row), so mixed-length traffic still batches."""
         return self.executor.submit("softmax", row,
                                     shared={"stable": stable},
                                     key_extra=(bool(stable),),
-                                    deadline=deadline)
+                                    deadline=deadline, ragged=ragged)
 
     def submit_rmsnorm(self, row, w, eps: float = 1e-6,
-                       deadline: "float | None" = None) -> RuntimeFuture:
+                       deadline: "float | None" = None,
+                       ragged: bool = False) -> RuntimeFuture:
         """Queue one rmsnorm row; coalesces with rows sharing the SAME
         weight vector (identity) and eps."""
         return self.executor.submit(
             "rmsnorm", jnp.asarray(row).astype(jnp.float32),
             shared={"w": w, "eps": eps}, key_extra=(id(w), float(eps)),
-            deadline=deadline)
+            deadline=deadline, ragged=ragged)
 
     def submit_sample(self, logits_row, key, temperature: float = 1.0,
                       deadline: "float | None" = None) -> RuntimeFuture:
-        """Queue one sampler request: the row joins the stable-softmax
-        micro-batch (scaled by its temperature at submit so the batch
-        stays homogeneous); the per-request categorical draw runs as a
-        post-step on this request's probability row."""
+        """Queue one sampler request: the row joins the ragged
+        ``softmax.cdf`` micro-batch (scaled by its temperature at
+        submit so the batch stays homogeneous) — mixed vocab/logit
+        lengths coalesce into ONE flush, and the inverse-CDF cumsum
+        runs fused inside the flush's epilogue launch.  The per-request
+        post-step is a single host ``searchsorted`` on this request's
+        CDF row."""
         row = jnp.asarray(logits_row) / float(max(temperature, 1e-8))
         return self.executor.submit(
-            "softmax", row, shared={"stable": True}, key_extra=(True,),
-            post=lambda probs_row: int(_draw(np.asarray(probs_row), key)),
-            deadline=deadline)
+            "softmax.cdf", row, shared={}, key_extra=(True,),
+            post=lambda cdf_row: int(_draw_cdf(np.asarray(cdf_row), key)),
+            deadline=deadline, ragged=True)
 
     # -- lifecycle / introspection ---------------------------------------
     def warmup(self) -> dict:
@@ -284,14 +360,21 @@ class ServingRuntime:
             while p < geometry[0]:   # pow2 sub-bucket ladder
                 batches.append(p)
                 p *= 2
+            ragged = bool(params.get("ragged"))
             for b in batches:
                 if b * geometry[-1] <= 1:
                     continue  # a 1-element operand cannot plan a row
                     # reduction (it binds as a scalar leaf) — live
                     # traffic can't produce this driver either
+                # ragged entries replay with synthetic full-length rows:
+                # the driver is length-agnostic (lengths are a runtime
+                # operand), so any mix warms the same compiled pair
+                lens = (jnp.full((b,), geometry[-1], jnp.int32)
+                        if ragged else None)
                 self._run_batch(entry["family"],
                                 jnp.zeros((b, geometry[-1]), dtype), shared,
-                                backend=entry["backend"], record=False)
+                                backend=entry["backend"], record=False,
+                                row_lens=lens)
 
         report = self.manifest.replay(run_entry)
         report["router_cells_adopted"] = adopted
@@ -341,6 +424,73 @@ class ServingRuntime:
         except Exception:
             pass  # telemetry publish must never block shutdown
         self.manifest.stop_listening()
+
+
+_RAGGED_LOCK = threading.Lock()
+_RAGGED_KERNELS: dict = {}
+
+
+def _ragged_kernels(family: str):
+    """Module-cached (wave, epilogue) kernel pair for one ragged family.
+
+    Built once per process and shared by every runtime instance — the
+    kernel objects only *describe* the computation; compiled drivers
+    live in the process-wide dispatch LRU keyed per backend/bucket, so
+    sharing the family objects costs nothing and keeps content keys
+    stable across runtimes (one driver serves them all)."""
+    from repro.core.elementwise import ElementwiseKernel
+    from repro.core.platform import BroadcastArg, ScalarArg, VectorArg
+    from repro.core.reduction import ReductionKernel
+
+    with _RAGGED_LOCK:
+        pair = _RAGGED_KERNELS.get(family)
+        if pair is not None:
+            return pair
+        f32 = jnp.float32
+        if family in ("softmax", "softmax.cdf"):
+            wave = _RAGGED_KERNELS.get("_softmax_wave")
+            if wave is None:
+                # stable two-accumulator wave: row max + shifted exp sum
+                wave = ReductionKernel(
+                    [f32, f32], ["-3.4e38", "0"],
+                    ["fmaxf(a, b)", "a + b"],
+                    ["x[i]", "expf(x[i] - _acc0)"],
+                    "float *x", axis=-1, name="ragged_softmax_wave")
+                _RAGGED_KERNELS["_softmax_wave"] = wave
+            op = ("out[i] = cumsumf(expf(x[i] - r0) / r1)"
+                  if family == "softmax.cdf"
+                  else "out[i] = expf(x[i] - r0) / r1")
+            epilogue = ElementwiseKernel(
+                [BroadcastArg(f32, "r0", "row"), BroadcastArg(f32, "r1", "row"),
+                 VectorArg(f32, "x"), VectorArg(f32, "out")],
+                op, name=f"ragged_{family.replace('.', '_')}_epi",
+                layout="rows")
+        elif family == "rmsnorm":
+            wave = ReductionKernel(
+                f32, "0", "a + b", "x[i] * x[i]",
+                "float *x", axis=-1, name="ragged_rmsnorm_wave")
+            epilogue = ElementwiseKernel(
+                [BroadcastArg(f32, "r0", "row"), BroadcastArg(f32, "L", "row"),
+                 BroadcastArg(f32, "w", "col"), ScalarArg(f32, "eps"),
+                 VectorArg(f32, "x"), VectorArg(f32, "out")],
+                "out[i] = x[i] / sqrtf(r0 / L + eps) * w[i]",
+                name="ragged_rmsnorm_epi", layout="rows")
+        else:
+            raise ValueError(f"unknown ragged family {family!r}")
+        pair = (wave, epilogue)
+        _RAGGED_KERNELS[family] = pair
+        return pair
+
+
+def _draw_cdf(cdf_row: np.ndarray, key) -> int:
+    """Categorical draw from one *cumulative* probability row (the
+    fused ``softmax.cdf`` epilogue output): the cumsum already ran on
+    device inside the flush, so the host post-step is a single
+    ``searchsorted`` — no per-request ``np.cumsum`` over the vocab."""
+    cum = np.asarray(cdf_row, np.float64)
+    u = float(jax.random.uniform(key, ())) * cum[-1]
+    return min(int(np.searchsorted(cum, u, side="right")),
+               cum.shape[-1] - 1)
 
 
 def _draw(probs_row: np.ndarray, key) -> int:
@@ -450,6 +600,7 @@ def merge_stats(snapshots: "list[dict]") -> dict:
 
 
 from repro.runtime.fleet import FleetOverloadError, ServingFleet  # noqa: E402
+from repro.runtime.kvcache import RequestsCache  # noqa: E402
 from repro.runtime.supervisor import (BackoffPolicy,  # noqa: E402
                                       CrashLoopBreaker, Supervisor)
 
@@ -459,6 +610,6 @@ __all__ = [
     "default_runtime", "set_default_runtime", "default_router",
     "set_default_router", "default_breaker", "set_default_breaker",
     "faults", "warmup", "stats", "stats_snapshot", "merge_stats",
-    "ServingFleet", "FleetOverloadError", "BackoffPolicy",
+    "ServingFleet", "FleetOverloadError", "RequestsCache", "BackoffPolicy",
     "CrashLoopBreaker", "Supervisor",
 ]

@@ -81,12 +81,14 @@ class RuntimeFuture:
 
 class _Batch:
     __slots__ = ("family", "shared", "deadline", "rows", "posts", "futures",
-                 "seqs", "deadlines", "budgets", "submits")
+                 "seqs", "deadlines", "budgets", "submits", "ragged")
 
-    def __init__(self, family: str, shared: dict, deadline: float):
+    def __init__(self, family: str, shared: dict, deadline: float,
+                 ragged: bool = False):
         self.family = family
         self.shared = shared
         self.deadline = deadline
+        self.ragged = ragged            # rows may differ in length
         self.rows: list = []
         self.posts: list = []
         self.futures: list[RuntimeFuture] = []
@@ -94,6 +96,17 @@ class _Batch:
         self.deadlines: list = []       # per-request absolute deadlines
         self.budgets: list = []         # the raw deadline= seconds (report)
         self.submits: list = []         # submit timestamps (elapsed report)
+
+    def absorb(self, other: "_Batch", limit: int) -> int:
+        """Move up to ``limit`` queued requests from ``other`` into this
+        batch (FIFO) — the flush-window drain.  Returns rows moved."""
+        take = max(0, min(limit, len(other.rows)))
+        for name in ("rows", "posts", "futures", "seqs", "deadlines",
+                     "budgets", "submits"):
+            src = getattr(other, name)
+            getattr(self, name).extend(src[:take])
+            del src[:take]
+        return take
 
 
 class CoalescingExecutor:
@@ -129,25 +142,37 @@ class CoalescingExecutor:
         self._isolated_rows = 0       # rows re-run individually
         self._row_retries = 0         # individual row attempts beyond first
         self._row_failures = 0        # futures failed after isolation
+        self._window_flushes = 0      # flushed below max_batch (window/close)
+        self._full_flushes = 0        # flushed at max_batch
+        self._drained_rows = 0        # rows pulled into a due batch at flush
 
     # -- submission ------------------------------------------------------
     def submit(self, family: str, row, *, shared: "dict | None" = None,
                key_extra: tuple = (), post: "Callable | None" = None,
-               deadline: "float | None" = None) -> RuntimeFuture:
+               deadline: "float | None" = None,
+               ragged: bool = False) -> RuntimeFuture:
         """Queue one row for ``family``; rows sharing the coalescing key
         ``(family, len(row), dtype, *key_extra)`` inside one window
         flush as a single ``(K, N)`` schedule.  ``post(row_result)``
         runs on this request's slice of the batch output (the sampler's
         per-request categorical draw).  ``deadline`` (seconds from now)
         bounds this request's share of any per-row retry budget after a
-        failed flush — it does not cancel a healthy in-flight batch."""
+        failed flush — it does not cancel a healthy in-flight batch.
+
+        ``ragged`` drops the row *length* from the coalescing key: any
+        mix of lengths forms ONE batch, padded at flush time to the
+        longest row and executed through the runtime's ragged kernel
+        pair (each row masked to its true length in-kernel); this
+        request's future resolves with exactly its own ``len(row)``
+        prefix of the output."""
         row = jnp.asarray(row)
         if row.ndim != 1:
             raise ValueError(
                 f"submit coalesces single rows; got shape {row.shape} "
                 "(batched operands go through the runtime directly)")
         fut = RuntimeFuture(family, int(row.shape[0]))
-        key = (family, int(row.shape[0]), str(row.dtype)) + tuple(key_extra)
+        lkey = "R" if ragged else int(row.shape[0])
+        key = (family, lkey, str(row.dtype)) + tuple(key_extra)
         with self._cv:
             if self._closed:
                 raise RuntimeError("executor is closed")
@@ -155,7 +180,7 @@ class CoalescingExecutor:
             if batch is None:
                 batch = self._batches[key] = _Batch(
                     family, dict(shared or {}),
-                    time.monotonic() + self.window)
+                    time.monotonic() + self.window, ragged=ragged)
             batch.rows.append(row)
             batch.posts.append(post)
             batch.futures.append(fut)
@@ -197,30 +222,60 @@ class CoalescingExecutor:
                             b.deadline for b in self._batches.values()) - now)
                     self._cv.wait(timeout)
                     continue
-                batches = [self._batches.pop(k) for k in due]
+                batches = [(k, self._batches.pop(k)) for k in due]
                 self._inflight += len(batches)
-                self._inflight_batches.extend(batches)
+                self._inflight_batches.extend(b for _, b in batches)
             try:
-                for b in batches:
+                for k, b in batches:
+                    self._drain_into(k, b)
                     self._flush_batch(b)
             finally:
                 with self._cv:
                     self._inflight -= len(batches)
-                    for b in batches:
+                    for _, b in batches:
                         try:
                             self._inflight_batches.remove(b)
                         except ValueError:
                             pass
                     self._cv.notify_all()
 
+    def _drain_into(self, key, batch: _Batch) -> None:
+        """Flush-window fix: between this batch going due and its flush
+        actually starting (earlier batches in the same due wave flush
+        first), same-key rows keep arriving and used to wait out a whole
+        fresh window.  Pull them into the due batch up to ``max_batch``
+        so a continuous request stream rides the earliest flush."""
+        with self._cv:
+            queued = self._batches.get(key)
+            if queued is None:
+                return
+            moved = batch.absorb(queued, self.max_batch - len(batch.rows))
+            self._drained_rows += moved
+            if not queued.rows:
+                del self._batches[key]
+
     def _flush_batch(self, batch: _Batch) -> None:
         try:
             self._probe_rows(batch)  # injected poison fails the flush here
-            X = jnp.stack(batch.rows)
+            lens = None
+            if batch.ragged:
+                lens = [int(r.shape[0]) for r in batch.rows]
+                width = max(lens)
+                X = jnp.stack([
+                    r if int(r.shape[0]) == width
+                    else jnp.pad(r, (0, width - int(r.shape[0])))
+                    for r in batch.rows])
+            else:
+                X = jnp.stack(batch.rows)
             with dispatch.count_launches() as c:
-                out = self._runtime._run_batch(batch.family, X, batch.shared)
+                out = self._runtime._run_batch(batch.family, X, batch.shared,
+                                               row_lens=lens)
             with self._cv:
                 self._flushes += 1
+                if len(batch.rows) >= self.max_batch:
+                    self._full_flushes += 1
+                else:
+                    self._window_flushes += 1
                 self._launches += c.delta
                 self._max_coalesce = max(self._max_coalesce, len(batch.rows))
         except BaseException as e:  # noqa: BLE001 - batch failed: isolate
@@ -230,10 +285,13 @@ class CoalescingExecutor:
             self._retry_rows(batch, e)
             return
         # scatter results; a failing per-request post step (e.g. a bad
-        # sampler key) fails ONLY its own future, never co-batched ones
+        # sampler key) fails ONLY its own future, never co-batched ones.
+        # Ragged rows resolve with their true-length prefix (the padding
+        # columns are masked to zero in-kernel and carry no information).
         for i, (fut, post) in enumerate(zip(batch.futures, batch.posts)):
             try:
-                fut._set(post(out[i]) if post is not None else out[i])
+                row_out = out[i] if lens is None else out[i][:lens[i]]
+                fut._set(post(row_out) if post is not None else row_out)
             except BaseException as e:  # noqa: BLE001
                 fut._set_error(e)
 
@@ -297,9 +355,12 @@ class CoalescingExecutor:
                     faults.maybe_fail("executor.row", family=batch.family,
                                       index=seq)
                     row = batch.rows[i].reshape(1, -1)
+                    # a lone ragged row needs no padding: its true
+                    # length IS the operand width
+                    lens = [int(row.shape[-1])] if batch.ragged else None
                     with dispatch.count_launches() as c:
                         out = self._runtime._run_batch(
-                            batch.family, row, batch.shared)
+                            batch.family, row, batch.shared, row_lens=lens)
                     with self._cv:
                         self._launches += c.delta
                     fut._set(post(out[0]) if post is not None else out[0])
@@ -374,6 +435,9 @@ class CoalescingExecutor:
                                          if self._requests else 0.0),
                 "window_s": self.window,
                 "max_batch": self.max_batch,
+                "window_flushes": self._window_flushes,
+                "full_flushes": self._full_flushes,
+                "drained_rows": self._drained_rows,
                 "batch_retries": self._batch_retries,
                 "isolated_rows": self._isolated_rows,
                 "row_retries": self._row_retries,

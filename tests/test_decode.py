@@ -1,0 +1,260 @@
+"""Continuous-batching decode tests (PR 9) — the `RequestsCache` slot
+pool, the token-granular `ContinuousEngine`, the executor's flush-window
+drain, and the version-tolerant tracer shim.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import runtime as rtm
+from repro.configs.registry import get_config
+from repro.core import dispatch
+from repro.core.cache import DiskCache
+from repro.models.layers import is_tracer
+from repro.models.schema import init_params
+from repro.runtime.kvcache import RequestsCache
+from repro.serving.engine import ContinuousEngine, Engine
+
+rng = np.random.default_rng(23)
+
+
+# ------------------------------------------------------- RequestsCache
+def test_kvcache_admit_release_cycle():
+    kv = RequestsCache(2)
+    s0 = kv.admit("a", 5)
+    s1 = kv.admit("b", 9)
+    assert {s0, s1} == {0, 1}
+    with pytest.raises(rtm.FleetOverloadError):
+        kv.admit("c", 3)
+    assert kv.stats()["shed"] == 1
+    assert kv.release("a") == s0
+    # freed slot leases again
+    assert kv.admit("c", 3) == s0
+    assert kv.live() == sorted(["c", "b"], key=lambda r: kv.slot_of(r))
+    st = kv.stats()
+    assert st["admitted"] == 3 and st["released"] == 1 and st["live"] == 2
+
+
+def test_kvcache_deadline_eviction():
+    t = [100.0]
+    kv = RequestsCache(2, clock=lambda: t[0])
+    kv.admit("a", 4, deadline=5.0)
+    kv.admit("b", 4)             # no deadline: never expires
+    assert kv.expired() == []
+    t[0] = 106.0
+    assert kv.expired() == ["a"]
+    kv.evict("a", expired=True)
+    st = kv.stats()
+    assert st["evicted"] == 1 and st["expired"] == 1
+    assert kv.expired() == []    # reclaimed leases drop out
+    with pytest.raises(KeyError):
+        kv.release("a")
+
+
+def test_kvcache_double_admit_rejected():
+    kv = RequestsCache(2)
+    kv.admit("a", 1)
+    with pytest.raises(ValueError):
+        kv.admit("a", 1)
+
+
+# -------------------------------------------------- continuous engine
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("internlm2-1.8b", smoke=True).replace(
+        dtype="float32", attention_impl="naive")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompt(cfg, L):
+    return rng.integers(1, cfg.vocab_size, size=L).astype(np.int32)
+
+
+def test_continuous_matches_static_greedy(model):
+    """One request through the continuous engine decodes the exact same
+    greedy tokens as the static-batch engine."""
+    cfg, params = model
+    prompt = _prompt(cfg, 6)
+    ref = Engine(cfg, params, max_len=32).generate(prompt[None], 5)
+    eng = ContinuousEngine(cfg, params, capacity=2, max_len=32)
+    eng.submit(prompt, max_new=5)
+    res = eng.run()
+    assert np.array_equal(np.asarray(ref.tokens[0]), res[0].tokens)
+
+
+def test_requests_join_and_leave_every_step(model):
+    """More requests than capacity, mixed prompt lengths and mixed
+    max_new: slots recycle mid-stream and every request completes with
+    exactly its own token budget."""
+    cfg, params = model
+    eng = ContinuousEngine(cfg, params, capacity=2, max_len=48)
+    lens = [5, 9, 3, 7, 2]
+    budgets = [4, 2, 5, 3, 4]
+    rids = [eng.submit(_prompt(cfg, L), max_new=m)
+            for L, m in zip(lens, budgets)]
+    res = eng.run()
+    assert len(res) == len(rids)
+    for rid, L, m in zip(rids, lens, budgets):
+        r = eng.result_for(rid)
+        assert r is not None and r.prompt_len == L
+        assert r.tokens.shape == (m,)
+    st = eng.stats()
+    assert st["kv"]["admitted"] == 5 and st["kv"]["live"] == 0
+    # continuous batching actually overlapped requests: fewer steps than
+    # the sum of sequential budgets
+    assert st["steps"] < sum(budgets)
+
+
+def test_decode_step_is_two_launches_with_runtime(model, tmp_path):
+    """The hard per-step launch budget: one uniform decode step over a
+    live batch (decode jit + ONE ragged sampler flush) = 2 generated
+    launches, regardless of how many requests are live."""
+    cfg, params = model
+    rt = rtm.ServingRuntime(
+        backend="pallas", window=0.25, max_batch=8,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("decode_manifest", root=tmp_path)))
+    try:
+        eng = ContinuousEngine(cfg, params, capacity=3, max_len=48,
+                               runtime=rt)
+        for L in (5, 9, 3):
+            eng.submit(_prompt(cfg, L), max_new=4)
+        eng.step(temperature=0.7)   # admission step (pays jit + builds)
+        with dispatch.count_launches() as c:
+            eng.step(temperature=0.7)
+        assert c.delta == 2, c.by_backend
+        eng.run(temperature=0.7)
+        assert len(eng.done) == 3
+    finally:
+        rt.close()
+
+
+def test_deadline_evicts_mid_decode(model):
+    cfg, params = model
+    eng = ContinuousEngine(cfg, params, capacity=2, max_len=48)
+    rid = eng.submit(_prompt(cfg, 4), max_new=1000, deadline=0.0)
+    eng.step()                   # admits + samples one token
+    time.sleep(0.01)
+    eng.step()                   # deadline passed: evicted before decode
+    assert rid in eng.evicted_ids
+    r = eng.result_for(rid)
+    assert r is not None and r.tokens.shape[0] >= 1
+    assert eng.stats()["kv"]["expired"] == 1
+
+
+def test_pending_queue_sheds(model):
+    cfg, params = model
+    eng = ContinuousEngine(cfg, params, capacity=1, max_len=32,
+                           max_pending=2)
+    eng.submit(_prompt(cfg, 3))
+    eng.submit(_prompt(cfg, 3))
+    with pytest.raises(rtm.FleetOverloadError):
+        eng.submit(_prompt(cfg, 3))
+    assert eng.stats()["pending_shed"] == 1
+
+
+def test_rejects_non_attention_archs(model):
+    cfg = get_config("rwkv6-7b", smoke=True).replace(dtype="float32")
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params=None, capacity=1, max_len=8)
+
+
+# --------------------------------------------- executor window drain
+@pytest.fixture
+def rt(tmp_path):
+    r = rtm.ServingRuntime(
+        backend="pallas", window=0.25, max_batch=4,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("drain_manifest", root=tmp_path)))
+    yield r
+    r.close()
+
+
+def test_flush_classification_counters(rt):
+    """stats() separates full flushes (hit max_batch) from window/flush
+    flushes (timer or explicit flush drained a partial batch)."""
+    N = 256
+    rows = [rng.standard_normal(N).astype(np.float32) for _ in range(4)]
+    futs = [rt.submit_softmax(r) for r in rows]       # max_batch=4: full
+    [f.result(timeout=60) for f in futs]
+    f = rt.submit_softmax(rows[0])                    # partial, forced
+    rt.flush()
+    f.result(timeout=60)
+    ex = rt.executor.stats()
+    assert ex["full_flushes"] == 1
+    assert ex["window_flushes"] == 1
+    assert ex["flushes"] == 2
+
+
+def test_due_batch_drains_queued_rows(rt):
+    """Satellite fix: rows arriving while an earlier batch flushes are
+    pulled into their due batch at flush time (up to max_batch) instead
+    of waiting out a fresh window."""
+    ex = rt.executor
+    N = 128
+    row = rng.standard_normal(N).astype(np.float32)
+    release = threading.Event()
+
+    def slow_post(r):
+        release.wait(timeout=60)
+        return 0
+
+    # batch A (slow post holds the worker inside its flush long enough
+    # for B's stragglers to queue), batch B due at the same time
+    fa = ex.submit("softmax", row, shared={"stable": True},
+                   key_extra=(True,), post=slow_post)
+    fb1 = ex.submit("softmax", rng.standard_normal(2 * N).astype(np.float32),
+                    shared={"stable": True}, key_extra=(True,))
+    rt.flush(wait=False)         # both batches go due now
+    # worker is stuck in A's post; this row lands in a NEW forming batch
+    # under B's key and must be drained into B when B flushes
+    time.sleep(0.05)
+    fb2 = ex.submit("softmax", rng.standard_normal(2 * N).astype(np.float32),
+                    shared={"stable": True}, key_extra=(True,))
+    release.set()
+    assert fb1.result(timeout=60) is not None
+    assert fb2.result(timeout=60) is not None
+    st = ex.stats()
+    assert st["drained_rows"] >= 1, st
+
+
+# ------------------------------------------------------- tracer shim
+def test_is_tracer_version_tolerant():
+    assert not is_tracer(jnp.ones((2,)))
+    assert not is_tracer(3.0)
+    seen = {}
+
+    def probe(x):
+        seen["traced"] = is_tracer(x)
+        return x * 2
+
+    jax.jit(probe)(jnp.ones((2,)))
+    assert seen["traced"] is True
+
+
+def test_engine_sample_uses_shim(model, tmp_path):
+    """Engine._sample falls back to jax sampling under trace and routes
+    concrete logits through the runtime — via is_tracer, not a direct
+    jax.core.Tracer reference."""
+    import repro.serving.engine as engine_mod
+
+    assert "jax.core.Tracer" not in open(engine_mod.__file__).read()
+    cfg, params = model
+    rt = rtm.ServingRuntime(
+        backend="pallas", window=0.05, max_batch=4,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("shim_manifest", root=tmp_path)))
+    try:
+        eng = Engine(cfg, params, max_len=32, runtime=rt)
+        res = eng.generate(_prompt(cfg, 4)[None], 3, temperature=0.8)
+        assert res.tokens.shape == (1, 3)
+    finally:
+        rt.close()

@@ -1,0 +1,266 @@
+"""Ragged coalescing tests (PR 9) — per-row runtime lengths through the
+kernel layer, the runtime's ragged families, and the executor's
+mixed-length flush.
+
+The acceptance sweep: mixed row lengths straddling a column-bucket edge
+(N in {1023, 1024, 1025}) execute as ONE 2-launch flush on BOTH
+backends, match per-row unfused references exactly where each row is
+real, and changing only the length mix inside a bucket rebuilds
+nothing.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import runtime as rtm
+from repro.core import backends, dispatch
+from repro.core.cache import DiskCache
+from repro.core.elementwise import ElementwiseKernel
+from repro.core.platform import BroadcastArg, VectorArg
+from repro.core.reduction import ReductionKernel
+
+rng = np.random.default_rng(17)
+
+BOUNDARY_LENS = [1023, 1024, 1025]  # straddles the 1024-col bucket edge
+
+
+def _softmax_wave(be=None):
+    return ReductionKernel(
+        [jnp.float32, jnp.float32], ["-3.4e38", "0"],
+        ["fmaxf(a, b)", "a + b"], ["x[i]", "expf(x[i] - _acc0)"],
+        "float *x", axis=-1, backend=be)
+
+
+def _pad_stack(rows):
+    width = max(r.shape[0] for r in rows)
+    X = np.zeros((len(rows), width), np.float32)
+    for i, r in enumerate(rows):
+        X[i, :r.shape[0]] = r
+    return jnp.asarray(X), np.asarray([r.shape[0] for r in rows], np.int32)
+
+
+# ------------------------------------------------- kernel-layer ragged
+@pytest.mark.parametrize("be", ("pallas", "xla"))
+def test_ragged_reduction_boundary_sweep(be):
+    """Mixed lengths straddling the bucket edge: ONE padded operand, one
+    ragged wave, every row reduced over exactly its own length."""
+    rows = [rng.standard_normal(L).astype(np.float32) for L in BOUNDARY_LENS]
+    X, lens = _pad_stack(rows)
+    r0, r1 = _softmax_wave(be)(X, row_lens=lens)
+    for i, r in enumerate(rows):
+        assert np.asarray(r0)[i] == pytest.approx(r.max(), abs=1e-5)
+        assert np.asarray(r1)[i] == pytest.approx(
+            np.exp(r - r.max()).sum(), rel=1e-4)
+
+
+@pytest.mark.parametrize("be", ("pallas", "xla"))
+def test_ragged_two_launches_and_parity(be):
+    """The full ragged pair (wave + masked epilogue) is exactly 2
+    launches and matches the per-row unfused softmax on each row's
+    true-length prefix."""
+    rows = [rng.standard_normal(L).astype(np.float32) for L in BOUNDARY_LENS]
+    X, lens = _pad_stack(rows)
+    wave = _softmax_wave(be)
+    epi = ElementwiseKernel(
+        [BroadcastArg(jnp.float32, "r0", "row"),
+         BroadcastArg(jnp.float32, "r1", "row"),
+         VectorArg(jnp.float32, "x"), VectorArg(jnp.float32, "out")],
+        "out[i] = expf(x[i] - r0) / r1", layout="rows", backend=be)
+    # build once outside the counted window
+    r0, r1 = wave(X, row_lens=lens)
+    epi(r0, r1, X, X, row_lens=lens)
+    with dispatch.count_launches() as c:
+        r0, r1 = wave(X, row_lens=lens)
+        out = np.asarray(epi(r0, r1, X, X, row_lens=lens))
+    assert c.delta == 2, c.by_backend
+    for i, r in enumerate(rows):
+        ref = np.asarray(jax.nn.softmax(jnp.asarray(r)))
+        np.testing.assert_allclose(out[i, :r.shape[0]], ref, atol=1e-5)
+        # masked columns come back zeroed, not as softmax of garbage
+        np.testing.assert_allclose(out[i, r.shape[0]:], 0.0, atol=0.0)
+
+
+@pytest.mark.parametrize("be", ("pallas", "xla"))
+def test_length_mix_change_rebuilds_nothing(be):
+    """Lengths are a runtime operand: any mix inside the same (rows,
+    cols) bucket reuses the SAME compiled ragged drivers."""
+    wave = _softmax_wave(be)
+    X = jnp.asarray(rng.standard_normal((4, 1024)).astype(np.float32))
+    wave(X, row_lens=np.asarray([1024, 512, 7, 1], np.int32))
+    with dispatch.count_compiles() as cc:
+        for mix in ([1, 2, 3, 4], [1000, 1024, 3, 900], [512] * 4):
+            wave(X, row_lens=np.asarray(mix, np.int32))
+    assert cc.delta == 0, cc.by_backend
+
+
+def test_ragged_and_dense_keys_do_not_collide():
+    """A ragged call and a dense call of the same geometry build two
+    distinct drivers (the ragged one takes the lengths operand), and
+    the bucket signature carries the ragged marker."""
+    assert dispatch.rc_bucket(4, 1024) + ("R",) == \
+        dispatch.rc_bucket(4, 1024, ragged=True)
+    wave = _softmax_wave("pallas")
+    X = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+    wave(X)  # dense build
+    with dispatch.count_compiles() as cc:
+        wave(X, row_lens=np.asarray([256, 100, 5, 1], np.int32))
+    assert cc.delta >= 1  # ragged variant is its own driver
+    with dispatch.count_compiles() as cc2:
+        wave(X)  # dense driver still cached
+    assert cc2.delta == 0
+
+
+def test_ragged_requires_row_axis():
+    full = ReductionKernel(jnp.float32, "0", "a + b", "x[i]",
+                           "float *x", backend="pallas")  # axis=None
+    with pytest.raises(ValueError):
+        full(jnp.ones((4,), jnp.float32), row_lens=np.asarray([4], np.int32))
+    col_wave = ReductionKernel(jnp.float32, "0", "a + b", "x[i]",
+                               "float *x", axis=0, backend="pallas")
+    with pytest.raises(ValueError):
+        col_wave(jnp.ones((4, 8), jnp.float32),
+                 row_lens=np.asarray([8] * 4, np.int32))
+    flat = ElementwiseKernel("float *x, float *z", "z[i] = x[i]",
+                             backend="pallas")
+    with pytest.raises(ValueError):
+        flat(jnp.ones((8,), jnp.float32), jnp.ones((8,), jnp.float32),
+             row_lens=np.asarray([8], np.int32))
+
+
+def test_dense_ir_meta_unchanged():
+    """Adding the ragged lowering must not perturb dense IR tokens (the
+    schema version did not bump; cached dense sequences stay valid)."""
+    from repro.core import ir
+    from repro.core.backends.base import ElementwiseSpec
+
+    spec = ElementwiseSpec(
+        name="t", arg_meta=(("x", "float32", "vector"),
+                            ("z", "float32", "vector")),
+        scalar_names=(), loaded_vectors=("x",), body_lines=("z = x",),
+        out_names=("z",), out_dtypes=("float32",), needs_i=False,
+        preamble="", interpret=True)
+    dense = ir.lower_elementwise(spec, rows=4, lanes=128, layout="rows")
+    ragged = ir.lower_elementwise(spec, rows=4, lanes=128, layout="rows",
+                                  ragged=True)
+    assert "ragged" not in dict(dense.meta)
+    assert dict(ragged.meta)["ragged"] is True
+    assert dense.cache_key() != ragged.cache_key()
+
+
+# ------------------------------------------------- runtime ragged path
+@pytest.fixture
+def rt(tmp_path):
+    r = rtm.ServingRuntime(
+        backend="auto", window=0.25, max_batch=8,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("ragged_manifest", root=tmp_path)))
+    yield r
+    r.close()
+
+
+def _submit_wave(rows, submit):
+    futs = [None] * len(rows)
+
+    def one(i):
+        futs[i] = submit(rows[i])
+
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(len(rows))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return [f.result(timeout=120) for f in futs]
+
+
+def test_mixed_lengths_one_flush_two_launches(rt):
+    """The tentpole claim at the runtime layer: softmax rows of three
+    different lengths straddling a bucket edge flush ONCE (2 launches),
+    where length-keyed coalescing would need three flushes (6)."""
+    rows = [rng.standard_normal(L).astype(np.float32) for L in BOUNDARY_LENS]
+    with dispatch.count_launches() as c:
+        outs = _submit_wave(rows, lambda r: rt.submit_softmax(r, ragged=True))
+    assert c.delta == 2, c.by_backend
+    ex = rt.executor.stats()
+    assert ex["flushes"] == 1 and ex["requests"] == len(rows)
+    for out, r in zip(outs, rows):
+        out = np.asarray(out)
+        assert out.shape == r.shape  # true-length prefix, padding stripped
+        np.testing.assert_allclose(
+            out, np.asarray(jax.nn.softmax(jnp.asarray(r))), atol=1e-5)
+
+
+def test_ragged_sampler_cdf_fused(rt):
+    """submit_sample coalesces mixed-length logits rows into one ragged
+    softmax.cdf flush: 2 launches for K rows, the device epilogue
+    returning each row's inclusive CDF (monotone, ending at ~1)."""
+    lens = [700, 1024, 33]
+    rows = [rng.standard_normal(L).astype(np.float32) for L in lens]
+    keys = [jax.random.PRNGKey(i) for i in range(len(rows))]
+    with dispatch.count_launches() as c:
+        futs = [rt.submit_sample(r, k) for r, k in zip(rows, keys)]
+        rt.flush()
+        toks = [f.result(timeout=120) for f in futs]
+    assert c.delta == 2, c.by_backend
+    for t, L in zip(toks, lens):
+        assert 0 <= t < L
+    # CDF correctness through the direct ragged batch path
+    X, lv = _pad_stack(rows)
+    cdf = np.asarray(rt._run_batch("softmax.cdf", X, {}, row_lens=lv))
+    for i, r in enumerate(rows):
+        p = np.asarray(jax.nn.softmax(jnp.asarray(r)))
+        np.testing.assert_allclose(cdf[i, :r.shape[0]], np.cumsum(p),
+                                   atol=1e-4)
+
+
+def test_ragged_rmsnorm_true_length_mean(rt):
+    """Ragged rmsnorm normalizes by each row's true length, not the
+    padded bucket width."""
+    lens = [300, 512]
+    rows = [rng.standard_normal(L).astype(np.float32) for L in lens]
+    w = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    outs = _submit_wave(rows, lambda r: rt.submit_rmsnorm(r, w, ragged=True))
+    for out, r in zip(outs, rows):
+        L = r.shape[0]
+        ref = r / np.sqrt((r * r).mean() + 1e-6) * np.asarray(w)[:L]
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_ragged_warm_restart_compiles_nothing(rt, tmp_path):
+    """Manifest entries recorded with ragged params replay the ragged
+    drivers: a restarted process serves the same mixed-length traffic
+    with zero driver compiles."""
+    rows = [rng.standard_normal(L).astype(np.float32) for L in BOUNDARY_LENS]
+    _submit_wave(rows, lambda r: rt.submit_softmax(r, ragged=True))
+    dispatch.clear()
+    rt2 = rtm.ServingRuntime(
+        backend="auto", window=0.25, max_batch=8,
+        router=rtm.BackendRouter(),
+        manifest=rtm.WarmStartManifest(
+            cache=DiskCache("ragged_manifest", root=tmp_path)))
+    try:
+        rt2.warmup()
+        with dispatch.count_compiles() as cc:
+            _submit_wave(rows, lambda r: rt2.submit_softmax(r, ragged=True))
+        assert cc.delta == 0, cc.by_backend
+    finally:
+        rt2.close()
+
+
+def test_ragged_router_bucket_is_distinct(rt):
+    """Ragged flushes observe router EMA cells suffixed with the ragged
+    marker — they never pollute the dense cells of the same bucket."""
+    rows = [rng.standard_normal(512).astype(np.float32) for _ in range(2)]
+    for _ in range(2):   # first wave may compile (compiling calls skip EMA)
+        _submit_wave(rows, lambda r: rt.submit_softmax(r, ragged=True))
+        _submit_wave(rows, rt.submit_softmax)  # dense
+    cells = {bucket for (fam, bucket) in rt.router.route_table()
+             if fam == "softmax"}
+    ragged_cells = {b for b in cells if b and b[-1] == "R"}
+    dense_cells = cells - ragged_cells
+    assert ragged_cells and dense_cells
