@@ -1,0 +1,130 @@
+"""Observability-overhead benchmarks (PR 10) -> BENCH_obs.json.
+
+The flight recorder's contract (DESIGN.md §14) is that telemetry is
+cheap enough to leave on: ``REPRO_TRACE=counters`` must cost <= 2% and
+``=spans`` <= 8% vs ``off`` on the serving coalesce suite.  Both bounds
+are **hard-asserted here** (the suite fails, not just regresses) and the
+gate rows additionally ride ``run.py --compare``.
+
+Methodology: the three modes are timed *interleaved* round-robin (off,
+counters, spans, repeat) so drift hits all modes equally, and the
+overhead is the **min over rounds** of the mode/off ratio — the
+steady-state cost with scheduler noise filtered out, matching how the
+autotuner treats wall clock.  Every timed wave is steady-state: the
+warmup wave per mode pays the compiles, and a zero-compile check with
+spans armed guards the acceptance criterion that instrumentation never
+perturbs the launch/compile schedule.
+
+A final spans-mode wave exports the recorder to a Chrome trace file and
+schema-checks it (traceEvents present, every event carries
+ph/name/cat/ts/dur/pid/tid, request roots with admit/queue/reply
+children exist) — the same shape `tests/test_observe.py` asserts.
+"""
+
+from __future__ import annotations
+
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks import bench_serving
+from repro.core import dispatch
+from repro.runtime import observe
+
+DEFAULT_SHAPES = ((16, 2048),)
+MODES = ("off", "counters", "spans")
+OVERHEAD_BOUNDS = {"counters": 0.02, "spans": 0.08}
+WAVES_PER_SAMPLE = 2
+
+
+def _time_wave(rt, rows) -> float:
+    t0 = time.perf_counter()
+    for _ in range(WAVES_PER_SAMPLE):
+        bench_serving._coalesced_wave(rt, rows)
+    return (time.perf_counter() - t0) / WAVES_PER_SAMPLE
+
+
+def _obs_shape(K: int, N: int, repeats: int, rng) -> None:
+    rows = [rng.standard_normal(N).astype(np.float32) for _ in range(K)]
+    rt = bench_serving._fresh_runtime(K, f"bench_obs_{K}x{N}")
+    try:
+        # warm every mode's code path once; the off-mode warmup also
+        # pays the softmax compiles so every timed wave is steady-state
+        for m in MODES:
+            observe.set_mode(m)
+            bench_serving._coalesced_wave(rt, rows)
+
+        # acceptance: with spans armed, a steady wave compiles NOTHING
+        # and keeps the 2-launch coalesced schedule
+        observe.set_mode("spans")
+        with dispatch.count_compiles() as cc, dispatch.count_launches() as cl:
+            bench_serving._coalesced_wave(rt, rows)
+        assert cc.delta == 0, \
+            f"spans-armed steady wave compiled {cc.delta} kernels (want 0)"
+        launches_armed = cl.delta
+
+        rounds = max(3, repeats)
+        samples: dict = {m: [] for m in MODES}
+        for _ in range(rounds):
+            for m in MODES:
+                observe.set_mode(m)
+                samples[m].append(_time_wave(rt, rows))
+        observe.set_mode("off")
+
+        t_off = min(samples["off"])
+        emit(f"obs.k{K}x{N}.off", t_off,
+             f"recorder off; {rounds} interleaved rounds",
+             requests=K, rounds=rounds)
+        for m in ("counters", "spans"):
+            ratios = [samples[m][i] / samples["off"][i]
+                      for i in range(rounds)]
+            overhead = max(0.0, min(ratios) - 1.0)
+            bound = OVERHEAD_BOUNDS[m]
+            assert overhead <= bound, \
+                (f"REPRO_TRACE={m} overhead {overhead:.1%} exceeds the "
+                 f"{bound:.0%} bound (off {t_off * 1e6:.0f}us, "
+                 f"{m} {min(samples[m]) * 1e6:.0f}us)")
+            emit(f"obs.k{K}x{N}.{m}", min(samples[m]),
+                 f"overhead {overhead:.2%} vs off (bound {bound:.0%})",
+                 requests=K, gate=True, overhead=overhead,
+                 speedup=1.0 / (1.0 + overhead),
+                 kernels_launched=launches_armed)
+
+        # ---- trace export + schema check (spans mode) ----
+        observe.set_mode("spans")
+        observe.RECORDER.clear()
+        bench_serving._coalesced_wave(rt, rows)
+        path = Path(tempfile.mkdtemp(prefix="bench-obs-")) / "trace.json"
+        n_ev = observe.export_trace(path)
+        doc = json.loads(path.read_text())
+        evs = doc["traceEvents"]
+        assert len(evs) == n_ev and n_ev > 0
+        required = {"ph", "name", "cat", "ts", "dur", "pid", "tid"}
+        assert all(required <= set(e) for e in evs), "trace schema violated"
+        roots = [e for e in evs if e["name"] == "request"]
+        kids = {e["name"] for e in evs
+                if e.get("args", {}).get("parent") in
+                {r["args"]["sid"] for r in roots}}
+        assert len(roots) == K and {"admit", "queue", "reply"} <= kids, \
+            f"expected {K} request roots with admit/queue/reply children"
+        emit(f"obs.k{K}x{N}.trace_export", 0.0,
+             f"{n_ev} events; {len(roots)} request roots; schema ok",
+             events=n_ev, request_roots=len(roots), schema_ok=True)
+    finally:
+        observe.set_mode("off")
+        observe.install_from_env()   # restore whatever the process armed
+        rt.close()
+
+
+def run(repeats: int = 3, shapes=DEFAULT_SHAPES) -> None:
+    rng = np.random.default_rng(7)
+    for K, N in shapes:
+        _obs_shape(K, N, repeats, rng)
+
+
+if __name__ == "__main__":
+    run()

@@ -23,6 +23,9 @@
 #   decode  — bench_decode:      PR 9 continuous batching — ragged vs
 #             per-length-bucket sampler flush, Poisson decode tokens/s
 #             at capacity 1/4/16, 2-launch step budget, warm restart
+#   obs     — bench_obs:         PR 10 flight recorder — REPRO_TRACE
+#             overhead vs off (counters <=2%, spans <=8%, hard-asserted)
+#             plus trace-export schema check
 #   §6.1    — bench_dgfem:       per-order tuned element-local linalg
 #   model   — bench_model:       train-step throughput + attention sweep
 #
@@ -92,6 +95,34 @@ def compare_rows(fresh: dict, committed: dict, tol: float = 0.20) -> list[str]:
     return problems
 
 
+def roofline_observed(k: int = 16, n: int = 2048) -> None:
+    """Drive one warm + one steady coalesced softmax wave with the
+    recorder in counters mode, then render the observed launch-profile
+    roofline table.  The warm wave pays the compiles; only the steady
+    (zero-compile, degradation-free) wave lands in the profile —
+    exactly the record_wave contract in `repro.runtime.observe`."""
+    import numpy as np
+
+    from benchmarks import bench_serving, roofline_report
+    from repro.runtime import observe
+
+    prev = observe.set_mode("counters")
+    try:
+        rng = np.random.default_rng(0)
+        rows = [rng.standard_normal(n).astype(np.float32) for _ in range(k)]
+        rt = bench_serving._fresh_runtime(k, f"roofline_obs_{k}x{n}")
+        try:
+            bench_serving._coalesced_wave(rt, rows)   # warm: compiles
+            bench_serving._coalesced_wave(rt, rows)   # steady: profiled
+        finally:
+            rt.close()
+        print(f"# observed launch profile ({k} requests x ({n},) rows, "
+              "steady wave):")
+        print(roofline_report.render_observed())
+    finally:
+        observe.set_mode(prev)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list: table1,table2,...")
@@ -111,7 +142,15 @@ def main() -> None:
     ap.add_argument("--chaos", default="",
                     help="arm a process-lifetime transient fault plan, e.g. "
                          "compile:0.05,launch:0.05 (same spec as REPRO_CHAOS)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="drive a short REPRO_TRACE=counters serving wave "
+                         "and print the observed launch-profile roofline "
+                         "table (benchmarks.roofline_report --observed)")
     args = ap.parse_args()
+
+    if args.roofline:
+        roofline_observed()
+        return
 
     if args.chaos:
         from repro.runtime import faults
@@ -119,8 +158,8 @@ def main() -> None:
 
     from benchmarks import (bench_chaos, bench_copperhead, bench_decode,
                             bench_dgfem, bench_elementwise, bench_filterbank,
-                            bench_fleet, bench_model, bench_nn, bench_rmsnorm,
-                            bench_serving, bench_softmax)
+                            bench_fleet, bench_model, bench_nn, bench_obs,
+                            bench_rmsnorm, bench_serving, bench_softmax)
     from benchmarks import common
     from benchmarks.common import header
     from repro.core import dispatch
@@ -152,6 +191,7 @@ def main() -> None:
         "chaos": lambda repeats: bench_chaos.run(repeats=repeats, **serving_kwargs),
         "fleet": lambda repeats: bench_fleet.run(repeats=repeats, **serving_kwargs),
         "decode": bench_decode.run,
+        "obs": bench_obs.run,
         "dgfem": bench_dgfem.run,
         "model": bench_model.run,
     }

@@ -221,3 +221,42 @@ if __name__ == "__main__":
           f"{st['kv']['capacity']} KV slots "
           f"in {st['steps']} steps; {c.delta} launches/steady-step")
     rt.close()
+
+    # 8. Flight recorder + metrics plane (PR 10, DESIGN.md §14): arm
+    #    REPRO_TRACE=spans and a coalesced burst produces an end-to-end
+    #    trace — per-request `request` roots with admit/queue/reply
+    #    children pointing at the ONE `flush` that served them all —
+    #    exportable as Chrome trace JSON (load in Perfetto), plus
+    #    mergeable fixed-edge histograms behind a Prometheus /metrics
+    #    endpoint (`repro.launch.serve --stats-port`).
+    import threading
+    from pathlib import Path
+    from repro.runtime import observe
+
+    observe.set_mode("spans")
+    obs_rt = runtime.ServingRuntime(backend="xla", window=0.25, max_batch=8)
+    burst = [rng.standard_normal(512).astype(np.float32) for _ in range(8)]
+    futs = [None] * len(burst)
+
+    def _sub(i):
+        futs[i] = obs_rt.submit_softmax(burst[i])
+
+    ts = [threading.Thread(target=_sub, args=(i,)) for i in range(len(burst))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    for f in futs:
+        f.result(timeout=120)
+    trace_path = Path(tempfile.mkdtemp(prefix="quickstart-obs-")) / \
+        "trace.json"
+    n_ev = runtime.export_trace(trace_path)
+    lat = observe.latency_summary(observe.METRICS.snapshot())
+    obs_rt.close()
+    observe.set_mode("off")
+    print(f"flight recorder: {len(burst)} requests -> {n_ev} spans "
+          f"-> {trace_path}")
+    print("cross-request latency:",
+          {k: f"p50={v['p50_ms']:.2f}ms p95={v['p95_ms']:.2f}ms"
+           for k, v in lat.items()})
+    print("prometheus sample:", observe.metrics_text().splitlines()[0])

@@ -1090,7 +1090,19 @@ def _evaluate_resilient(expr: _Expr, backend=None, family=None) -> jax.Array:
     process-wide circuit breaker.  ``family`` overrides the breaker/
     telemetry family (the serving runtime passes ``"softmax"`` etc. so
     its cells coincide with the router's); default is the structural
-    `_family_of` hash."""
+    `_family_of` hash.
+
+    The whole ladder walk runs inside a ``plan`` observe-block (PR 10)
+    so the flight recorder parents every compile/launch span — including
+    degraded-rung retries — under one plan span per evaluation; with no
+    observer armed the block is a shared null context manager."""
+    from repro.core import dispatch as _dispatch
+
+    with _dispatch.observe_block("plan", family=family):
+        return _evaluate_ladder(expr, backend, family)
+
+
+def _evaluate_ladder(expr: _Expr, backend=None, family=None) -> jax.Array:
     from repro.core import backends as _backends
     from repro.core import dispatch as _dispatch
 

@@ -74,6 +74,22 @@ _degradation_counts: dict[str, int] = {}
 # index)`` and it *raises* (an ``InjectedFault``) to inject.
 _fault_hook: "Callable | None" = None
 
+# Observability probe (PR 10, DESIGN.md §14).  ``repro.runtime.observe``
+# installs its event callback here when ``REPRO_TRACE`` is armed — the
+# same core-never-imports-runtime seam as the fault hook.  Events:
+# ``("site", site=, backend=, family=, bucket=, t0=, t1=)`` for a timed
+# compile/launch attempt (monotonic seconds), ``("degradation", rung=,
+# family=)`` per ladder step, and ``("begin",)``/``("end", token=,
+# name=, family=)`` bracketing an `observe_block`.  With no observer the
+# launch path pays one ``is None`` check and zero allocations.
+_observer: "Callable | None" = None
+
+# Last degradation rung taken on *this thread* — the serving layer reads
+# (and clears) it per request to label latency histograms with the rung
+# that actually served the request.  Thread-local because requests on
+# different executor/fleet threads degrade independently.
+_tl_obs = threading.local()
+
 # Bounded-retry knobs for *transient* failures (an exception whose
 # ``transient`` attribute is truthy — injected flakes, and any real
 # error a backend marks recoverable).  Read per call so tests can
@@ -87,6 +103,84 @@ def set_fault_hook(fn: "Callable | None") -> None:
     `repro.runtime.faults`; core never imports the runtime layer."""
     global _fault_hook
     _fault_hook = fn
+
+
+def set_observer(fn: "Callable | None") -> None:
+    """Install (or clear) the observability probe — see
+    `repro.runtime.observe`; core never imports the runtime layer.
+    Observer exceptions are swallowed at every notification site:
+    telemetry must never change execution."""
+    global _observer
+    _observer = fn
+
+
+def _notify_site(site: str, backend: "str | None", family: "str | None",
+                 bucket: "tuple | None", t0: float, t1: float) -> None:
+    obs = _observer
+    if obs is not None:
+        try:
+            obs("site", site=site, backend=backend, family=family,
+                bucket=bucket, t0=t0, t1=t1)
+        except Exception:  # pragma: no cover - telemetry never breaks launches
+            pass
+
+
+def take_last_rung() -> "str | None":
+    """Read-and-clear the last degradation rung recorded on this thread
+    (None when the preceding call served clean) — the latency-histogram
+    ``rung`` label."""
+    rung = getattr(_tl_obs, "rung", None)
+    _tl_obs.rung = None
+    return rung
+
+
+class _NullBlock:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_BLOCK = _NullBlock()
+
+
+class _ObserveBlock:
+    __slots__ = ("name", "family", "token")
+
+    def __init__(self, name: str, family: "str | None"):
+        self.name, self.family, self.token = name, family, None
+
+    def __enter__(self):
+        obs = _observer
+        if obs is not None:
+            try:
+                self.token = obs("begin")
+            except Exception:  # pragma: no cover
+                self.token = None
+        return self
+
+    def __exit__(self, *exc):
+        obs = _observer
+        if obs is not None and self.token is not None:
+            try:
+                obs("end", token=self.token, name=self.name,
+                    family=self.family)
+            except Exception:  # pragma: no cover
+                pass
+        return False
+
+
+def observe_block(name: str, family: "str | None" = None):
+    """Span a core-side block (e.g. the planner's resilient evaluation)
+    in the flight recorder, parenting any launches inside it.  With no
+    observer installed this returns a shared null context manager —
+    no allocation on the unobserved path."""
+    if _observer is None:
+        return _NULL_BLOCK
+    return _ObserveBlock(name, family)
 
 
 def retry_max() -> int:
@@ -104,14 +198,28 @@ def run_with_retries(fn: Callable[[], Any], *, site: str,
     """Run ``fn`` behind the fault probe with bounded exponential-backoff
     retries for transient failures.  Non-transient exceptions propagate
     immediately (the degradation ladder and circuit breaker own those);
-    with no hook installed this is a plain call."""
-    if _fault_hook is None:
+    with no hook and no observer installed this is a plain call.
+
+    When the observer is armed, each *successful* attempt is timed with
+    ``time.monotonic()`` (system-wide on Linux, so fleet-worker spans
+    land on one timeline) and reported as a ``site`` event."""
+    if _fault_hook is None and _observer is None:
         return fn()
+    if _fault_hook is None:
+        t0 = time.monotonic()
+        out = fn()
+        _notify_site(site, backend, family, bucket, t0, time.monotonic())
+        return out
     attempts = retry_max() + 1
     for k in range(attempts):
         try:
             _fault_hook(site, backend, family, bucket, None)
-            return fn()
+            if _observer is None:
+                return fn()
+            t0 = time.monotonic()
+            out = fn()
+            _notify_site(site, backend, family, bucket, t0, time.monotonic())
+            return out
         except Exception as e:  # noqa: BLE001 - classified below
             if not getattr(e, "transient", False) or k >= attempts - 1:
                 raise
@@ -350,6 +458,13 @@ def record_degradation(rung: str, family: str | None = None) -> None:
         if family:
             k = f"{rung}:{family}"
             _degradation_counts[k] = _degradation_counts.get(k, 0) + 1
+    _tl_obs.rung = rung
+    obs = _observer
+    if obs is not None:
+        try:
+            obs("degradation", rung=rung, family=family)
+        except Exception:  # pragma: no cover - telemetry never breaks serving
+            pass
 
 
 def degradation_counts() -> dict[str, int]:

@@ -14,6 +14,17 @@ PR 5 adds the serving-runtime path (DESIGN.md §9):
     submit one softmax row and the executor flushes them as a single
     ``(K, N)`` schedule — 2 launches total instead of ``2·K``.
 
+PR 10 adds the telemetry plane (DESIGN.md §14):
+
+  * ``--stats-port P`` serves live telemetry over stdlib HTTP while the
+    demo runs: ``/metrics`` (Prometheus text exposition of the latency/
+    size histograms and event counters), ``/stats`` (the runtime's JSON
+    stats snapshot), ``/trace`` (the flight recorder as Chrome trace
+    JSON).  Arm ``REPRO_TRACE=counters|spans`` to populate them; the
+    one-shot viewer is ``python -m repro.runtime.observe --url ...``;
+  * ``--trace-out PATH`` exports the recorder to a Perfetto-loadable
+    Chrome trace file at exit (requires ``REPRO_TRACE=spans``).
+
 PR 8 adds the supervised-fleet path (DESIGN.md §12):
 
   * ``--fleet N`` serves the sampling-softmax traffic through a
@@ -127,7 +138,26 @@ def main(argv=None):
     ap.add_argument("--fleet-kill", action="store_true",
                     help="with --fleet: kill one worker mid-traffic and "
                          "show availability staying 1.0")
+    ap.add_argument("--stats-port", type=int, default=None, metavar="P",
+                    help="serve live telemetry on 127.0.0.1:P while the "
+                         "demo runs (/metrics, /stats, /trace); port 0 "
+                         "picks a free one")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="export the flight recorder as Chrome trace "
+                         "JSON at exit (arm REPRO_TRACE=spans)")
     args = ap.parse_args(argv)
+
+    stats_server = None
+    if args.stats_port is not None:
+        from repro.runtime import observe
+
+        stats_server = observe.StatsServer(
+            port=args.stats_port,
+            stats_fn=lambda: (runtime.stats_snapshot()
+                              if runtime is not None
+                              else observe._default_stats()))
+        print(f"stats server: {stats_server.url()} "
+              f"(/metrics /stats /trace; REPRO_TRACE={observe.mode()})")
 
     runtime = None
     if args.use_runtime or args.coalesce:
@@ -179,6 +209,14 @@ def main(argv=None):
                               ("requests", "flushes", "coalesce_factor")},
               "| manifest entries:", st["manifest"]["entries"])
         runtime.close()
+    if args.trace_out:
+        from repro import runtime as rtm
+
+        n_ev = rtm.export_trace(args.trace_out)
+        print(f"trace: {n_ev} events -> {args.trace_out} "
+              "(load in Perfetto / chrome://tracing)")
+    if stats_server is not None:
+        stats_server.close()
     return len(done)
 
 

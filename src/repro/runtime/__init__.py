@@ -46,7 +46,7 @@ import numpy as np
 from repro.core import backends as _backends
 from repro.core import dispatch
 from repro.core.backends import is_auto as _is_auto
-from repro.runtime import faults
+from repro.runtime import faults, observe
 from repro.runtime.executor import CoalescingExecutor, RuntimeFuture
 from repro.runtime.manifest import WarmStartManifest
 from repro.runtime.router import (BackendRouter, CircuitBreaker, bucket_for,
@@ -56,6 +56,9 @@ from repro.runtime.router import (BackendRouter, CircuitBreaker, bucket_for,
 # arm the process-lifetime chaos plan, if REPRO_CHAOS asks for one (the
 # CI chaos leg; a no-op otherwise)
 faults.install_env_plan()
+# arm the observability knob, if REPRO_TRACE asks for one (PR 10,
+# DESIGN.md §14; off by default — no observer installed, zero overhead)
+observe.install_from_env()
 
 _DEFAULT: "ServingRuntime | None" = None
 _DEFAULT_LOCK = threading.Lock()
@@ -98,12 +101,47 @@ class ServingRuntime:
             # EMA cells with the dense drivers of the same geometry
             bucket = bucket + ("R",)
         be = self._resolve(family, bucket, backend)
+        # telemetry (PR 10): a "serve" span parenting the plan/launch
+        # spans below it, a latency observation labeled (family, backend,
+        # bucket, rung), and a launch-profile row.  Every hook here is
+        # behind the REPRO_TRACE knob — off-mode adds one int check.
+        tok = observe.span_begin()
+        if observe._MODE:
+            dispatch.take_last_rung()   # clear a stale rung on this thread
+            lcm = dispatch.count_launches()
+        else:
+            lcm = dispatch._NULL_BLOCK
         d0 = dispatch.degradation_total()
         t0 = time.perf_counter()
-        with dispatch.count_compiles() as cc:
-            out = run(be)
-            jax.block_until_ready(out)
+        try:
+            with dispatch.count_compiles() as cc, lcm:
+                out = run(be)
+                jax.block_until_ready(out)
+        finally:
+            if tok is not None:
+                observe.span_end(tok, "serve", "runtime",
+                                 {"family": family, "backend": be,
+                                  "bucket": str(bucket)})
         dt = time.perf_counter() - t0
+        if observe._MODE:
+            clean0 = dispatch.degradation_total() == d0
+            rung = dispatch.take_last_rung() or (
+                "none" if clean0 else "degraded")
+            bstr = "x".join(str(d) for d in bucket)
+            observe.observe_hist("request_latency_seconds",
+                                 (family, be, bstr, rung), dt)
+            observe.count("requests_total", family, be)
+            if cc.delta == 0 and clean0:
+                # steady-state wave (no one-off builds, no ladder): fold
+                # into the roofline launch profile.  Bytes moved is the
+                # read-input + write-output estimate for the 2-launch
+                # row schedule; intermediates are O(rows), negligible.
+                elems = 1
+                for d in geometry:
+                    elems *= int(d)
+                observe.record_wave(family, be, bstr, dt,
+                                    2 * elems * np.dtype(dtype).itemsize,
+                                    getattr(lcm, "delta", 0))
         if record:
             # cold calls pay one-off driver builds; folding that wall-clock
             # into the EMA would poison the route (compile cost is
@@ -392,7 +430,16 @@ class ServingRuntime:
         return {"adopted": adopted}
 
     def stats(self) -> dict:
-        """One JSON-able snapshot across all three pieces + dispatch."""
+        """One JSON-able snapshot across all three pieces + dispatch.
+
+        PR 10 adds three keys: ``metrics`` (the process's labeled
+        histogram/counter document — merged associatively by
+        `merge_stats` so fleet percentiles are exact), ``kvcache`` (the
+        aggregate over every live `RequestsCache` in this process, so
+        fleet merges stop dropping slot/eviction/shed counts), and
+        ``trace`` (recorder occupancy + the REPRO_TRACE mode)."""
+        from repro.runtime import kvcache as _kvcache
+
         return {
             "backend": self.backend,
             "executor": self.executor.stats(),
@@ -403,6 +450,9 @@ class ServingRuntime:
             "degradations": dispatch.degradation_counts(),
             "breaker": self.router.breaker.stats(),
             "faults": faults.stats(),
+            "metrics": observe.METRICS.snapshot(),
+            "kvcache": _kvcache.aggregate_stats(),
+            "trace": {"mode": observe.mode(), **observe.RECORDER.stats()},
         }
 
     def stats_snapshot(self) -> dict:
@@ -543,7 +593,7 @@ def stats_snapshot(rt: "ServingRuntime | None" = None) -> dict:
 _MERGE_MAX_KEYS = frozenset({
     "max_coalesce", "maxsize", "entries", "sequences", "window_s",
     "max_batch", "threshold", "cooldown_s", "active_plans", "seed",
-    "tracked_cells", "pending",
+    "tracked_cells", "pending", "capacity",
 })
 #: router latency tables: merge by min (the best estimate any worker
 #: measured), never by sum
@@ -552,6 +602,14 @@ _MERGE_MIN_TABLES = frozenset({"ema_ms", "priors_ms"})
 
 def _fold_stats(dst: dict, src: dict) -> None:
     for k, v in src.items():
+        if k == "metrics" and isinstance(v, dict):
+            # the labeled histogram/counter document merges through its
+            # own (associative, exact) fold — generic numeric folding
+            # would sum histogram bucket *indices* into nonsense
+            cur = dst.get(k)
+            dst[k] = observe.merge_metrics(cur, v) if cur else \
+                observe.merge_metrics(v)
+            continue
         if isinstance(v, dict):
             sub = dst.setdefault(k, {})
             if not isinstance(sub, dict):
@@ -596,7 +654,24 @@ def merge_stats(snapshots: "list[dict]") -> dict:
         ex["launches_per_request"] = \
             (ex.get("launches", 0) / req) if req else 0.0
     merged["workers_merged"] = folded
+    if "metrics" in merged:
+        # cross-worker percentile view straight off the merged
+        # histograms: exact counts, percentiles within one bucket width
+        merged["latency"] = observe.latency_summary(merged["metrics"])
     return merged
+
+
+def export_trace(path, extra_events: "list[dict] | None" = None) -> int:
+    """Export this process's flight recorder as Chrome trace-event JSON
+    (Perfetto/chrome://tracing-loadable); returns the event count.
+    `ServingFleet.export_trace` is the merged cross-worker form."""
+    return observe.export_trace(path, extra_events)
+
+
+def metrics_text(metrics_doc: "dict | None" = None) -> str:
+    """Prometheus text exposition of the live metrics registry (or an
+    explicit merged document) — what ``--stats-port`` serves."""
+    return observe.metrics_text(metrics_doc)
 
 
 from repro.runtime.fleet import FleetOverloadError, ServingFleet  # noqa: E402
@@ -612,4 +687,5 @@ __all__ = [
     "faults", "warmup", "stats", "stats_snapshot", "merge_stats",
     "ServingFleet", "FleetOverloadError", "RequestsCache", "BackoffPolicy",
     "CrashLoopBreaker", "Supervisor",
+    "observe", "export_trace", "metrics_text",
 ]

@@ -36,6 +36,7 @@ from typing import Any, Callable
 import jax.numpy as jnp
 
 from repro.core import dispatch
+from repro.runtime import observe
 
 
 class RuntimeFuture:
@@ -255,6 +256,13 @@ class CoalescingExecutor:
                 del self._batches[key]
 
     def _flush_batch(self, batch: _Batch) -> None:
+        # telemetry (PR 10): the flush span is opened on this worker
+        # thread BEFORE _run_batch so the runtime's "serve" span — and
+        # the plan/launch spans below it — parent under this flush;
+        # per-request spans are reconstructed post-hoc from the batch's
+        # recorded submit timestamps (zero bookkeeping on submit).
+        ftok = observe.span_begin()
+        t_flush = time.monotonic()
         try:
             self._probe_rows(batch)  # injected poison fails the flush here
             lens = None
@@ -281,9 +289,15 @@ class CoalescingExecutor:
         except BaseException as e:  # noqa: BLE001 - batch failed: isolate
             # Poison-request isolation (DESIGN.md §10): one bad request
             # must not take down its K-1 co-travellers, so the batch
-            # falls back to bounded per-row retries.
+            # falls back to bounded per-row retries (whose serve spans
+            # still parent under this flush span — it closes after).
             self._retry_rows(batch, e)
+            observe.span_end(ftok, "flush", "executor",
+                             {"family": batch.family,
+                              "rows": len(batch.rows), "isolated": True})
+            self._note_flush(batch, t_flush)
             return
+        t_out = time.monotonic()
         # scatter results; a failing per-request post step (e.g. a bad
         # sampler key) fails ONLY its own future, never co-batched ones.
         # Ragged rows resolve with their true-length prefix (the padding
@@ -294,6 +308,41 @@ class CoalescingExecutor:
                 fut._set(post(row_out) if post is not None else row_out)
             except BaseException as e:  # noqa: BLE001
                 fut._set_error(e)
+        flush_sid = observe.span_end(
+            ftok, "flush", "executor",
+            {"family": batch.family, "rows": len(batch.rows)})
+        self._note_flush(batch, t_flush)
+        if flush_sid is not None:
+            self._record_request_spans(batch, t_flush, t_out, flush_sid)
+
+    def _note_flush(self, batch: _Batch, t_flush: float) -> None:
+        """Counters-mode flush telemetry: each request's queue wait
+        (submit -> flush start) and the realized batch occupancy."""
+        if not observe._MODE:
+            return
+        for t_sub in batch.submits:
+            observe.observe_hist("queue_wait_seconds", (batch.family,),
+                                 max(0.0, t_flush - t_sub))
+        observe.observe_hist("flush_rows", (batch.family,),
+                             float(len(batch.rows)))
+
+    def _record_request_spans(self, batch: _Batch, t_flush: float,
+                              t_out: float, flush_sid: int) -> None:
+        """Spans-mode per-request reconstruction: one ``request`` root
+        per row spanning submit -> reply, with ``admit``/``queue``/
+        ``reply`` children; the root's ``flush`` arg names the shared
+        flush span (which parents the serve/plan/launch spans), joining
+        each request's timeline to the coalesced work that served it."""
+        t_end = time.monotonic()
+        rec = observe.RECORDER
+        for i in range(len(batch.futures)):
+            t_sub = batch.submits[i]
+            rid = rec.add("request", "request", t_sub, t_end,
+                          args={"family": batch.family,
+                                "seq": batch.seqs[i], "flush": flush_sid})
+            rec.add("admit", "request", t_sub, t_sub, parent=rid)
+            rec.add("queue", "request", t_sub, t_flush, parent=rid)
+            rec.add("reply", "request", t_out, t_end, parent=rid)
 
     def _probe_rows(self, batch: _Batch) -> None:
         """Fault-injection probe at the ``executor.row`` site, once per

@@ -65,6 +65,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.runtime import observe
 from repro.runtime.executor import RuntimeFuture
 from repro.runtime.supervisor import (BackoffPolicy, CrashLoopBreaker,
                                       Supervisor)
@@ -144,6 +145,11 @@ def _worker_main(conn, config: dict) -> None:
         if kind == "grp":
             _, gid, family, rows, shared, metas = msg
             groups += 1
+            # spans-mode: serve_group is the worker-side anchor a
+            # dispatcher-side "dispatch" span joins on via the shared
+            # gid (monotonic timestamps are system-wide, so the merged
+            # trace lines up across pids without clock translation)
+            stok = observe.span_begin()
             try:
                 faults.worker_fault(family=family, index=groups)
                 out = np.asarray(
@@ -156,6 +162,12 @@ def _worker_main(conn, config: dict) -> None:
                 reply = ("res", gid, True, payload)
             except BaseException as e:  # noqa: BLE001 - reply, don't die
                 reply = ("res", gid, False, f"{type(e).__name__}: {e}")
+            finally:
+                if stok is not None:
+                    observe.span_end(stok, "serve_group", "fleet",
+                                     {"gid": gid, "family": family,
+                                      "rows": len(rows),
+                                      "ok": reply[2]})
             try:
                 conn.send(reply)
             except (OSError, EOFError, BrokenPipeError):
@@ -178,6 +190,12 @@ def _worker_main(conn, config: dict) -> None:
                 elif op == "drain":
                     rt.flush()
                     payload = rt.sync_router()
+                elif op == "trace":
+                    # drain (don't just copy) so a long-lived worker's
+                    # ring buffer never re-ships events across exports
+                    payload = {"events": observe.RECORDER.drain(),
+                               "pid": os.getpid(),
+                               "mode": observe.mode()}
                 elif op == "stop":
                     payload = {"groups": groups}
                     stopping = True
@@ -459,13 +477,17 @@ class ServingFleet:
                     continue
                 if ok:
                     done = 0
+                    fresh = []
                     for req, val in zip(group.reqs, payload):
                         if not req.fut.done():
                             req.fut._set(val)
                             done += 1
+                            fresh.append(req)
                     with self._cv:
                         self._completed += done
                         self._cv.notify_all()
+                    if fresh and observe._MODE:
+                        self._note_replies(group, fresh)
                 else:
                     self._requeue_group(
                         group, RuntimeError(
@@ -479,6 +501,35 @@ class ServingFleet:
                     fut._set(payload)
             elif kind == "bye":
                 return
+
+    def _note_replies(self, group: "_Group", reqs) -> None:
+        """Telemetry for requests whose futures this reply just resolved
+        (PR 10): an end-to-end latency observation per request labeled
+        with the pseudo-backend ``fleet`` (distinct from the worker-side
+        per-flush histograms, which carry the real backend tag), and —
+        in spans mode — the dispatcher half of each request's timeline:
+        admit -> queue -> dispatch(gid) -> reply, where the ``gid`` arg
+        joins the worker's ``serve_group`` span across process lines."""
+        now = time.monotonic()
+        rec = observe.RECORDER
+        spans = observe._MODE >= observe.MODE_SPANS
+        for req in reqs:
+            observe.observe_hist(
+                "request_latency_seconds",
+                (req.family, "fleet", "-", "none"), now - req.submitted)
+            if not spans:
+                continue
+            rid = rec.add("request", "request", req.submitted, now,
+                          args={"family": req.family, "gid": group.gid,
+                                "worker": group.worker})
+            rec.add("admit", "request", req.submitted, req.submitted,
+                    parent=rid)
+            rec.add("queue", "request", req.submitted, group.sent_at,
+                    parent=rid)
+            rec.add("dispatch", "request", group.sent_at, now, parent=rid,
+                    args={"gid": group.gid, "worker": group.worker,
+                          "hedge": group.is_hedge})
+            rec.add("reply", "request", now, now, parent=rid)
 
     # -- death / redispatch ----------------------------------------------
     def _handle_death(self, slot: _WorkerSlot, cause: str,
@@ -522,6 +573,7 @@ class ServingFleet:
                 if opened:
                     self._deaths_by_cause["breaker_opened"] = \
                         self._deaths_by_cause.get("breaker_opened", 0) + 1
+            observe.count("fleet_events_total", f"death:{cause}")
         err = RuntimeError(f"fleet worker {slot.idx} died ({cause})")
         for group in inflight:
             self._requeue_group(group, err)
@@ -562,6 +614,7 @@ class ServingFleet:
                 req.in_queue = True
                 self._queue.appendleft(req)
                 self._redispatched += 1
+                observe.count("fleet_events_total", "redispatch")
             self._cv.notify_all()
 
     # -- dispatch path ----------------------------------------------------
@@ -650,6 +703,7 @@ class ServingFleet:
             # worker drains it, and the receiver thread needs the lock
             # to keep heartbeat timestamps fresh meanwhile
             conn.send(("grp", gid, family, rows, shared, metas))
+            observe.count("fleet_events_total", "dispatch")
             return True
         except (OSError, ValueError, BrokenPipeError):
             with slot.lock:
@@ -688,6 +742,7 @@ class ServingFleet:
             if self._send_group(target, group.reqs, is_hedge=True):
                 with self._cv:
                     self._hedges += 1
+                observe.count("fleet_events_total", "hedge")
 
     def _any_inflight(self) -> bool:
         for slot in self._slots:
@@ -714,6 +769,7 @@ class ServingFleet:
                 raise RuntimeError("fleet is closed")
             if len(self._queue) >= self.queue_depth:
                 self._shed += 1
+                observe.count("fleet_events_total", "shed")
                 raise FleetOverloadError(
                     f"admission queue full ({self.queue_depth} queued); "
                     f"request shed (overload: reject beats unbounded "
@@ -824,13 +880,44 @@ class ServingFleet:
     def stats(self, timeout: float = 15.0) -> dict:
         """The fleet-level view: dispatcher counters + every responsive
         worker's snapshot merged through `runtime.merge_stats` (satellite
-        3: counters sum, latency tables min, shared sizes max)."""
+        3: counters sum, latency tables min, shared sizes max).
+
+        PR 10: the dispatcher's own metrics (fleet-labeled end-to-end
+        latency, fleet event counters) fold into ``merged["metrics"]``
+        via the associative histogram merge, and ``latency`` is the
+        cross-worker p50/p95/p99 view per (family, backend) — percentile
+        reads off exactly-summed bucket counts, accurate to one bucket
+        width."""
         from repro import runtime as _runtime
 
         snaps = self.worker_stats(timeout=timeout)
+        merged = _runtime.merge_stats(snaps)
+        merged["metrics"] = observe.merge_metrics(
+            merged.get("metrics"), observe.METRICS.snapshot())
+        merged["latency"] = observe.latency_summary(merged["metrics"])
         return {"fleet": self.fleet_stats(),
-                "merged": _runtime.merge_stats(snaps),
+                "merged": merged,
+                "latency": merged["latency"],
                 "workers": [s.get("worker", {}) for s in snaps]}
+
+    def export_trace(self, path, timeout: float = 15.0) -> int:
+        """ONE merged Chrome trace across process lines: every
+        responsive worker's recorder is drained over its pipe (the
+        ``trace`` control op) and written together with the
+        dispatcher's own spans; returns the total event count.
+        Monotonic timestamps are system-wide, so worker ``serve_group``
+        spans line up against dispatcher ``dispatch`` spans on a shared
+        timeline, joined by their ``gid`` args.  Spans of a killed
+        worker die with its process — the surviving timeline shows the
+        re-dispatch instead, which is the truthful picture."""
+        events: list = []
+        for slot in self._slots:
+            try:
+                payload = self._ctl(slot, "trace", timeout=timeout)
+                events.extend((payload or {}).get("events") or [])
+            except (RuntimeError, TimeoutError):
+                continue
+        return observe.export_trace(path, events)
 
     # -- drain / restart / shutdown ---------------------------------------
     def drain(self, timeout: float = 60.0) -> None:

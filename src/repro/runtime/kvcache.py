@@ -27,9 +27,35 @@ from __future__ import annotations
 
 import threading
 import time
+import weakref
 from dataclasses import dataclass
 
+from repro.runtime import observe
 from repro.runtime.fleet import FleetOverloadError
+
+# Every live pool registers here (weakly — a dropped pool unregisters
+# itself) so `aggregate_stats` can fold ALL of a process's pools into
+# `runtime.stats()["kvcache"]`.  Before PR 10 these counters only
+# surfaced through `ContinuousEngine.stats()`, which fleet merging never
+# saw — slots/evictions/sheds silently dropped out of
+# `fleet.stats()["merged"]`.
+_registry_lock = threading.Lock()
+_registry: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def aggregate_stats() -> dict:
+    """Fold the stats of every live `RequestsCache` in this process:
+    counters sum, ``capacity``/``live`` sum too (total slots across
+    pools), plus a ``pools`` count — the JSON-able unit that rides
+    ``runtime.stats()["kvcache"]`` into `merge_stats`."""
+    with _registry_lock:
+        pools = list(_registry)
+    out = {"pools": len(pools), "capacity": 0, "live": 0, "admitted": 0,
+           "released": 0, "evicted": 0, "expired": 0, "shed": 0}
+    for pool in pools:
+        for k, v in pool.stats().items():
+            out[k] = out.get(k, 0) + v
+    return out
 
 
 @dataclass
@@ -61,6 +87,8 @@ class RequestsCache:
         self._evicted = 0
         self._expired = 0
         self._shed = 0
+        with _registry_lock:
+            _registry.add(self)
 
     # -- admission --------------------------------------------------------
     def admit(self, request_id, prompt_len: int,
@@ -76,6 +104,7 @@ class RequestsCache:
                 raise ValueError(f"request {request_id!r} already admitted")
             if not self._free:
                 self._shed += 1
+                observe.count("kvcache_events_total", "shed")
                 raise FleetOverloadError(
                     f"KV cache full: {self.capacity} slots live, "
                     f"request {request_id!r} shed")
@@ -85,6 +114,7 @@ class RequestsCache:
                 slot, int(prompt_len), now,
                 None if deadline is None else now + float(deadline))
             self._admitted += 1
+            observe.count("kvcache_events_total", "admit")
             return slot
 
     def has_free_slot(self) -> bool:
@@ -104,7 +134,8 @@ class RequestsCache:
         with self._lock:
             slot = self._reclaim(request_id)
             self._released += 1
-            return slot
+        observe.count("kvcache_events_total", "release")
+        return slot
 
     def evict(self, request_id, expired: bool = False) -> int:
         """Reclaim the slot early (deadline/cancel); -> the freed slot."""
@@ -113,7 +144,9 @@ class RequestsCache:
             self._evicted += 1
             if expired:
                 self._expired += 1
-            return slot
+        observe.count("kvcache_events_total",
+                      "expire" if expired else "evict")
+        return slot
 
     def expired(self, now: "float | None" = None) -> list:
         """Request ids whose absolute deadline has passed (unreclaimed)."""

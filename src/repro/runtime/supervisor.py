@@ -36,6 +36,8 @@ from __future__ import annotations
 import threading
 import time
 
+from repro.runtime import observe
+
 
 class BackoffPolicy:
     """Exponential restart backoff: ``delay(n) = min(cap, base*2**(n-1))``
@@ -212,6 +214,7 @@ class Supervisor:
                         now >= slot.restart_at and \
                         slot.breaker.allow_restart(now):
                     self.fleet._start_worker(slot)
+                    observe.count("fleet_events_total", "restart")
                 continue
             if not alive:
                 self.fleet._handle_death(

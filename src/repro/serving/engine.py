@@ -15,6 +15,7 @@ and the call recorded into the warm-start manifest.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -26,6 +27,7 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.models import transformer
 from repro.models.layers import is_tracer
+from repro.runtime import observe
 from repro.sharding.partition import MeshContext, NULL_CTX
 
 
@@ -341,7 +343,25 @@ class ContinuousEngine:
         """One uniform decode step: evict expired leases, advance every
         live slot by one token, admit queued requests into freed slots,
         sample all fresh logits rows in one flush.  Returns the number
-        of live requests after the step."""
+        of live requests after the step.
+
+        Each step is a ``decode_step`` span + latency observation
+        (PR 10) — the continuous-batching analogue of the executor's
+        flush span; the sampler's ragged flush parents under it."""
+        tok = observe.span_begin()
+        t0 = time.perf_counter()
+        try:
+            return self._step(temperature)
+        finally:
+            if observe._MODE:
+                observe.observe_hist("decode_step_seconds", (),
+                                     time.perf_counter() - t0)
+            if tok is not None:
+                observe.span_end(tok, "decode_step", "engine",
+                                 {"live": len(self._live_slots()),
+                                  "step": self._steps})
+
+    def _step(self, temperature: float = 0.0) -> int:
         for rid in self.kv.expired():
             slot = self.kv.slot_of(rid)
             if slot is not None:
